@@ -1,0 +1,41 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits per-(arch x shape x mesh) terms. Falls back to a small live
+lowering if no artifacts exist."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(path: str = "experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(csv_rows: list) -> None:
+    recs = load_records()
+    if not recs:
+        csv_rows.append(("roofline.no_dryrun_artifacts", 0,
+                         "run: python -m repro.launch.dryrun --all"))
+        return
+    ok = [r for r in recs if "terms_s" in r]
+    skipped = [r for r in recs if "skip" in r]
+    failed = [r for r in recs if "error" in r]
+    csv_rows.append(("roofline.cells_ok", len(ok),
+                     f"skipped={len(skipped)} failed={len(failed)}"))
+    for r in ok:
+        if r["mesh"] != "pod":
+            continue                       # roofline table is single-pod
+        t = r["terms_s"]
+        total = t["compute"] + t["memory"] + t["collective"]
+        frac = t["compute"] / total if total else 0.0
+        csv_rows.append((
+            f"roofline.{r['arch']}.{r['shape']}",
+            round(frac, 4),
+            f"comp={t['compute']:.3g}s mem={t['memory']:.3g}s "
+            f"coll={t['collective']:.3g}s dom={r['dominant']} "
+            f"useful={r.get('useful_ratio', 0):.2f}"))

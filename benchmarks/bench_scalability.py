@@ -1,0 +1,62 @@
+"""Figs 9-11 reproduction: speedup vs worker threads for Matmul, Sparse LU
+and N-Body, coarse + fine grain, under sync (Nanos++ analogue), dast
+(centralized manager [7]) and ddast (this paper) — in the deterministic
+virtual-time simulator (this container has ONE physical core).
+
+Task durations are the paper's workloads scaled so that the ratio
+(task duration / runtime-op cost) matches the paper's regimes:
+coarse grain ~ no contention; fine grain ~ the contention regime.
+"""
+from __future__ import annotations
+
+from repro.core import DDASTParams, RuntimeSimulator
+from repro.core.taskgraph_apps import (sim_matmul_specs, sim_nbody_specs,
+                                       sim_sparselu_specs)
+
+THREADS = (1, 2, 4, 8, 16, 32, 64)
+MODES = ("sync", "dast", "ddast")
+
+
+def _workloads():
+    return {
+        # (name, spec factory): CG = long tasks, FG = 8x shorter & 8x more
+        "matmul_cg": lambda: sim_matmul_specs(8, dur_us=800.0),
+        "matmul_fg": lambda: sim_matmul_specs(16, dur_us=100.0),
+        "sparselu_cg": lambda: sim_sparselu_specs(
+            12, dur_lu0=900, dur_fwd=750, dur_bdiv=750, dur_bmod=800),
+        "sparselu_fg": lambda: sim_sparselu_specs(
+            20, dur_lu0=120, dur_fwd=95, dur_bdiv=95, dur_bmod=105),
+        "nbody_cg": lambda: sim_nbody_specs(8, 4, dur_force=700,
+                                            dur_update=120),
+        "nbody_fg": lambda: sim_nbody_specs(16, 4, dur_force=90,
+                                            dur_update=20),
+    }
+
+
+def speedup_table() -> dict:
+    out = {}
+    for name, factory in _workloads().items():
+        for mode in MODES:
+            for p in THREADS:
+                r = RuntimeSimulator(num_cores=p, mode=mode).run(factory())
+                out[(name, mode, p)] = r
+    return out
+
+
+def run(csv_rows: list) -> None:
+    table = speedup_table()
+    for name in _workloads():
+        for mode in MODES:
+            curve = [f"{table[(name, mode, p)].speedup:.2f}"
+                     for p in THREADS]
+            best = table[(name, mode, THREADS[-1])]
+            csv_rows.append((
+                f"scalability.{name}.{mode}",
+                best.speedup,
+                "speedup@threads " + "/".join(curve)
+                + f" lockwait64={best.lock_wait_us:.0f}us"))
+        # the paper's headline: DDAST >= Nanos++ at max threads
+        s = table[(name, "sync", 64)].speedup
+        d = table[(name, "ddast", 64)].speedup
+        csv_rows.append((f"scalability.{name}.ddast_vs_sync_64t",
+                         d / s, "paper: >=1 at high thread counts"))

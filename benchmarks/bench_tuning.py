@@ -1,0 +1,49 @@
+"""Figs 5-8 / Table 5 reproduction: sweep each DDAST parameter (doubling
+1..128, as in the paper) with the others at their tuned defaults, on
+Matmul + Sparse LU at the two largest thread counts (the paper's most
+interesting configurations)."""
+from __future__ import annotations
+
+from repro.core import DDASTParams, RuntimeSimulator
+from repro.core.taskgraph_apps import sim_matmul_specs, sim_sparselu_specs
+
+SWEEP = (1, 2, 4, 8, 16, 32, 64, 128)
+THREADS = (32, 64)
+
+
+def _apps():
+    return {"matmul_fg": lambda: sim_matmul_specs(16, dur_us=100.0),
+            "sparselu_fg": lambda: sim_sparselu_specs(
+                20, dur_lu0=120, dur_fwd=95, dur_bdiv=95, dur_bmod=105)}
+
+
+def sweep_param(param: str) -> dict:
+    out = {}
+    for app, factory in _apps().items():
+        for p in THREADS:
+            base = RuntimeSimulator(
+                num_cores=p, mode="ddast", params=DDASTParams()).run(
+                factory())
+            for val in SWEEP:
+                params = DDASTParams(**{param: val})
+                r = RuntimeSimulator(num_cores=p, mode="ddast",
+                                     params=params).run(factory())
+                # speedup over the tuned default (y-axis of figs 5-8)
+                out[(app, p, val)] = base.makespan_us / r.makespan_us
+    return out
+
+
+def run(csv_rows: list) -> None:
+    for param, tuned in (("max_ddast_threads", "num_threads/8"),
+                         ("max_spins", 1),
+                         ("max_ops_thread", 8),
+                         ("min_ready_tasks", 4)):
+        table = sweep_param(param)
+        for app in _apps():
+            for p in THREADS:
+                curve = [f"{table[(app, p, v)]:.3f}" for v in SWEEP]
+                best_val = max(SWEEP, key=lambda v: table[(app, p, v)])
+                csv_rows.append((
+                    f"tuning.{param}.{app}.{p}t", best_val,
+                    f"tuned_default={tuned} rel_speedup@1..128 "
+                    + "/".join(curve)))

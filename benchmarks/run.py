@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure + the roofline
+table from the dry-run artifacts. Prints ``name,value,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only contention,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks import (bench_contention, bench_roofline,  # noqa: E402
+                        bench_scalability, bench_traces, bench_tuning)
+
+SUITES = {
+    "contention": bench_contention.run,     # §1 motivation + calibration
+    "tuning": bench_tuning.run,             # Figs 5-8 / Table 5
+    "scalability": bench_scalability.run,   # Figs 9-11
+    "traces": bench_traces.run,             # Figs 12-14
+    "roofline": bench_roofline.run,         # §Roofline table
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    rows: list = []
+    print("name,value,derived")
+    for name in names:
+        t0 = time.time()
+        SUITES[name](rows)
+        rows.append((f"{name}.bench_wall_s", round(time.time() - t0, 1), ""))
+        while rows:
+            n, v, d = rows.pop(0)
+            print(f"{n},{v},{d}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

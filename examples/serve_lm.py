@@ -1,0 +1,16 @@
+"""Serve a small model with batched requests: the continuous-batching
+engine whose request scheduler IS the paper's DDAST callback (per-client
+SPSC queues drained round-robin with MAX_OPS_THREAD / MIN_READY rules).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch.serve import serve
+
+out = serve("qwen2-0.5b", num_requests=24, clients=4, slots=6, max_new=12)
+print(f"{out['requests']} requests -> {out['tokens']} tokens in "
+      f"{out['wall_s']:.1f}s ({out['tok_per_s']:.0f} tok/s, "
+      f"{out['engine_steps']} engine steps)")
+print("scheduler:", out["stats"])

@@ -1,0 +1,28 @@
+"""The paper's hardest benchmark (Sparse LU, irregular dependence graph)
+on the DDAST runtime, validated against a sequential oracle, plus the
+same workload in the virtual-time simulator at 64 cores.
+
+    PYTHONPATH=src python examples/sparselu_taskgraph.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+from repro.core import RuntimeSimulator, TaskRuntime
+from repro.core.taskgraph_apps import (run_sparselu, sim_sparselu_specs,
+                                       sparselu_oracle)
+
+n, bs = 128, 32
+m = np.random.rand(n, n).astype(np.float32) + np.eye(n, dtype=np.float32) * n
+
+with TaskRuntime(num_workers=2, mode="ddast", trace=True) as rt:
+    lu = run_sparselu(rt, m, bs)
+ref = sparselu_oracle(m, bs)
+print(f"real run: {rt.stats.tasks_executed} tasks, "
+      f"max err {np.abs(lu - ref).max():.2e}, "
+      f"peak in-graph {rt.stats.max_in_graph}")
+
+for mode in ("sync", "ddast"):
+    r = RuntimeSimulator(num_cores=64, mode=mode).run(sim_sparselu_specs(16))
+    print(f"sim 64-core {mode:6s}: speedup {r.speedup:.1f} "
+          f"(lock wait {r.lock_wait_us:.0f} us, peak graph {r.max_in_graph})")

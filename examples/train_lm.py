@@ -1,0 +1,20 @@
+"""End-to-end driver: train a reduced qwen2-0.5b for a few hundred steps
+on CPU with the DDAST host runtime (idle threads prefetch data and flush
+checkpoints), then resume from the checkpoint to prove exact restart.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch.train import train
+
+out = train("qwen2-0.5b", tiny=True, steps=200, batch=8, seq=128,
+            ckpt_dir="/tmp/repro_example_ckpt", schedule_steps=200)
+print(f"loss {out['losses'][0]:.3f} -> {out['final_loss']:.3f} "
+      f"({out['prefetch_async']} async prefetches, "
+      f"{out['ckpt_writes']} async checkpoint writes)")
+out2 = train("qwen2-0.5b", tiny=True, steps=220, batch=8, seq=128,
+             ckpt_dir="/tmp/repro_example_ckpt", schedule_steps=200)
+print(f"resumed and continued to {len(out2['losses'])} more steps, "
+      f"final loss {out2['final_loss']:.3f}")

@@ -1,0 +1,23 @@
+"""Core of the reproduction: the paper's asynchronous runtime organization
+with a distributed manager (DDAST), plus its simulator and the static
+scheduling adaptation for device DAGs."""
+from .autotune import DynamicTuner, TunerConfig
+from .ddast import DDASTManager, DDASTParams
+from .depgraph import DependenceGraph
+from .dispatcher import FunctionalityDispatcher
+from .messages import DoneTaskMessage, SubmitTaskMessage
+from .queues import SPSCQueue, WorkerQueues
+from .runtime import RuntimeStats, TaskRuntime
+from .simulator import RuntimeSimulator, SimCosts, SimResult, SimTaskSpec
+from .static_sched import DagNode, ddast_schedule, overlap_collectives
+from .wd import DepMode, TaskState, WorkDescriptor
+
+__all__ = [
+    "DynamicTuner", "TunerConfig",
+    "DDASTManager", "DDASTParams", "DependenceGraph",
+    "FunctionalityDispatcher", "DoneTaskMessage", "SubmitTaskMessage",
+    "SPSCQueue", "WorkerQueues", "RuntimeStats", "TaskRuntime",
+    "RuntimeSimulator", "SimCosts", "SimResult", "SimTaskSpec",
+    "DagNode", "ddast_schedule", "overlap_collectives",
+    "DepMode", "TaskState", "WorkDescriptor",
+]

@@ -1,0 +1,83 @@
+"""Dynamic DDAST parameter tuning — the paper's stated future work (§8:
+"the runtime manager will dynamically tune its parameters to fit the
+application requirements").
+
+A feedback controller registered as a (low-priority) Functionality
+Dispatcher callback: idle threads occasionally sample runtime pressure
+and adjust the DDASTParams in place:
+
+  * queue backlog grows & ready pool starving -> more manager threads
+    (up to num_threads/2) and bigger MAX_OPS_THREAD drains;
+  * queues near-empty -> decay managers toward the tuned static default
+    (num_threads/8) to recover locality (paper §5.1's finding).
+
+All adjustments are bounded and hysteretic so the controller cannot
+oscillate; the tuned static defaults remain the fixed point under calm
+load.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, List, Tuple
+
+from .ddast import DDASTParams
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .runtime import TaskRuntime
+
+
+@dataclass
+class TunerConfig:
+    interval_s: float = 0.002       # min time between adjustments
+    backlog_high: int = 32          # pending msgs per worker: pressure
+    backlog_low: int = 2
+    ops_step: int = 4
+    max_ops: int = 64
+
+
+class DynamicTuner:
+    def __init__(self, runtime: "TaskRuntime",
+                 cfg: TunerConfig = TunerConfig()) -> None:
+        self.rt = runtime
+        self.cfg = cfg
+        self._last = 0.0
+        self._lock = threading.Lock()
+        self.adjustments: List[Tuple[float, int, int]] = []
+        p = runtime.params
+        self._static_mgr = p.resolved_max_threads(runtime.num_workers)
+        # ensure an explicit, mutable starting point
+        if p.max_ddast_threads is None:
+            p.max_ddast_threads = self._static_mgr
+        runtime.dispatcher.register("ddast-autotune", self.callback,
+                                    priority=0)
+
+    # -- dispatcher callback --------------------------------------------
+    def callback(self, worker_id: int) -> None:
+        del worker_id
+        now = time.perf_counter()
+        with self._lock:
+            if now - self._last < self.cfg.interval_s:
+                return
+            self._last = now
+        rt, p, c = self.rt, self.rt.params, self.cfg
+        n = rt.num_workers
+        backlog = rt._pending_msgs() / max(n, 1)
+        ready = rt.ready_count()
+        mgr_cap = max(1, n // 2)
+        if backlog > c.backlog_high and ready < p.min_ready_tasks:
+            # pressure: the managers cannot keep up — widen the manager
+            # pool and deepen per-queue drains
+            p.max_ddast_threads = min(mgr_cap, p.max_ddast_threads + 1)
+            p.max_ops_thread = min(c.max_ops, p.max_ops_thread + c.ops_step)
+            self.adjustments.append((now, p.max_ddast_threads,
+                                     p.max_ops_thread))
+        elif backlog < c.backlog_low and \
+                p.max_ddast_threads > self._static_mgr:
+            # calm: shrink back toward the locality-friendly default
+            p.max_ddast_threads -= 1
+            p.max_ops_thread = max(8, p.max_ops_thread - c.ops_step)
+            self.adjustments.append((now, p.max_ddast_threads,
+                                     p.max_ops_thread))

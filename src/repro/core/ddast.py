@@ -1,0 +1,128 @@
+"""DDAST — the Distributed DAS Thread manager callback (paper §3.3, Listing 2).
+
+Any idle worker thread that enters the callback becomes a *manager thread*
+and drains the per-worker message queues, updating the dependence graph.
+Faithful port of Listing 2 with the four tunables and the tuned defaults
+from Table 5:
+
+    MAX_DDAST_THREADS  = ceil(num_threads / 8)      (initial: inf)
+    MAX_SPINS          = 1                           (initial: 20)
+    MAX_OPS_THREAD     = 8                           (initial: 6)
+    MIN_READY_TASKS    = 4                           (initial: 4)
+"""
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .runtime import TaskRuntime
+
+
+@dataclass
+class DDASTParams:
+    max_ddast_threads: Optional[int] = None  # None -> ceil(num_threads/8)
+    max_spins: int = 1
+    max_ops_thread: int = 8
+    min_ready_tasks: int = 4
+
+    def resolved_max_threads(self, num_threads: int) -> int:
+        if self.max_ddast_threads is None:
+            return max(1, math.ceil(num_threads / 8))
+        return self.max_ddast_threads
+
+    @staticmethod
+    def initial() -> "DDASTParams":
+        """Pre-tuning values (Table 5, 'Initial Value' column)."""
+        return DDASTParams(max_ddast_threads=1 << 30, max_spins=20,
+                           max_ops_thread=6, min_ready_tasks=4)
+
+
+class DDASTManager:
+    """Holds manager-side state; `callback` is what gets registered in the
+    Functionality Dispatcher."""
+
+    def __init__(self, runtime: "TaskRuntime", params: DDASTParams) -> None:
+        self.rt = runtime
+        self.params = params
+        self._active = 0
+        self._active_lock = threading.Lock()
+        self.messages_processed = 0
+        self.callback_entries = 0
+
+    # -- Listing 2 ------------------------------------------------------
+    def callback(self, worker_id: int) -> None:
+        rt, p = self.rt, self.params
+        eligible = getattr(rt, "manager_eligible", None)
+        if eligible is not None and worker_id != rt.num_workers \
+                and worker_id not in eligible:
+            return                      # big.LITTLE: not a manager core
+        max_threads = p.resolved_max_threads(rt.num_workers)
+        with self._active_lock:
+            if self._active >= max_threads:
+                return
+            self._active += 1
+        self.callback_entries += 1
+        try:
+            spins = p.max_spins
+            while True:
+                total_cnt = 0
+                for wq in rt.worker_queues:
+                    if rt.ready_count() >= p.min_ready_tasks:
+                        break
+                    cnt = 0
+                    if wq.acquire_submit():
+                        try:
+                            while cnt < p.max_ops_thread:
+                                msg = wq.submit.pop()
+                                if msg is None:
+                                    break
+                                rt.satisfy_submit(msg.wd)
+                                cnt += 1
+                        finally:
+                            wq.release_submit()
+                    while cnt < p.max_ops_thread:
+                        msg = wq.done.pop()
+                        if msg is None:
+                            break
+                        rt.satisfy_done(msg.wd)
+                        cnt += 1
+                    total_cnt += cnt
+                self.messages_processed += total_cnt
+                spins = (spins - 1) if total_cnt == 0 else p.max_spins
+                if spins == 0 or rt.ready_count() >= p.min_ready_tasks:
+                    break
+        finally:
+            with self._active_lock:
+                self._active -= 1
+
+    def drain_all(self) -> int:
+        """Drain every queue to empty (used at taskwait/shutdown edges)."""
+        rt = self.rt
+        n = 0
+        progress = True
+        while progress:
+            progress = False
+            for wq in rt.worker_queues:
+                if wq.acquire_submit():
+                    try:
+                        while True:
+                            msg = wq.submit.pop()
+                            if msg is None:
+                                break
+                            rt.satisfy_submit(msg.wd)
+                            n += 1
+                            progress = True
+                    finally:
+                        wq.release_submit()
+                while True:
+                    msg = wq.done.pop()
+                    if msg is None:
+                        break
+                    rt.satisfy_done(msg.wd)
+                    n += 1
+                    progress = True
+        self.messages_processed += n
+        return n

@@ -1,0 +1,26 @@
+"""Runtime request messages (paper §3.1).
+
+Two message types only; task deletion is covered by the extra FINISHED ->
+COMPLETED state transition instead of a third message.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .wd import WorkDescriptor
+
+
+@dataclass
+class SubmitTaskMessage:
+    """Worker wants the task inserted in the dependence graph to discover
+    its predecessors. MUST be processed in per-worker insertion order and
+    by at most one manager per worker queue at a time."""
+    wd: WorkDescriptor
+
+
+@dataclass
+class DoneTaskMessage:
+    """Worker finished executing the task; successors must be notified and
+    newly-ready ones scheduled. May be processed concurrently by any
+    manager — execution finish order carries no semantics."""
+    wd: WorkDescriptor

@@ -1,0 +1,63 @@
+"""Per-worker message queues (paper §3.1, Fig. 3).
+
+Each worker owns one Submit queue and one Done ("others") queue:
+  * only the owning worker pushes (single producer),
+  * only manager threads pop (possibly several for Done; exactly one at a
+    time for Submit — enforced with a try-acquire flag, Listing 2 line 8).
+
+CPython's ``collections.deque`` append/popleft are atomic, giving the
+lock-free SPSC/MPMC push/pop the paper's C++ queues provide; the Submit
+drain-exclusivity is the only extra synchronization, exactly as in the
+paper.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Generic, Optional, TypeVar
+
+T = TypeVar("T")
+
+
+class SPSCQueue(Generic[T]):
+    __slots__ = ("_q", "pushed", "popped")
+
+    def __init__(self) -> None:
+        self._q: deque = deque()
+        self.pushed = 0
+        self.popped = 0
+
+    def push(self, item: T) -> None:
+        self._q.append(item)
+        self.pushed += 1
+
+    def pop(self) -> Optional[T]:
+        try:
+            item = self._q.popleft()
+        except IndexError:
+            return None
+        self.popped += 1
+        return item
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class WorkerQueues:
+    """The queue pair owned by one worker thread."""
+
+    def __init__(self, worker_id: int) -> None:
+        self.worker_id = worker_id
+        self.submit: SPSCQueue = SPSCQueue()
+        self.done: SPSCQueue = SPSCQueue()
+        self._submit_drain_flag = threading.Lock()
+
+    # -- Submit-queue exclusivity (one manager at a time, in order) ----
+    def acquire_submit(self) -> bool:
+        return self._submit_drain_flag.acquire(blocking=False)
+
+    def release_submit(self) -> None:
+        self._submit_drain_flag.release()
+
+    def pending(self) -> int:
+        return len(self.submit) + len(self.done)

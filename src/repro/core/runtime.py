@@ -1,0 +1,292 @@
+"""Threaded task runtime with three dependence-management organizations.
+
+Modes (the paper's §6 comparison set):
+  * ``sync``  — Nanos++ baseline: every worker mutates the dependence graph
+                directly under a global graph lock at submit & finish.
+  * ``dast``  — the authors' earlier centralized design [7]: ONE dedicated
+                manager thread drains all queues.
+  * ``ddast`` — this paper: no dedicated resources; idle workers become
+                managers through the Functionality Dispatcher.
+
+Scheduling is Distributed Breadth-First (paper §4, point 4): one ready
+deque per worker with work stealing.
+
+The runtime is instrumented with exactly the quantities the paper plots:
+graph-lock wait time, in-graph/ready task counts over time (Figs 12-14),
+message counts, and task throughput.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from .ddast import DDASTManager, DDASTParams
+from .depgraph import DependenceGraph
+from .dispatcher import FunctionalityDispatcher
+from .messages import DoneTaskMessage, SubmitTaskMessage
+from .queues import WorkerQueues
+from .wd import DepMode, TaskState, WorkDescriptor
+
+_MODES = ("sync", "dast", "ddast")
+
+_tls = threading.local()
+
+
+def _parse_deps(deps: Sequence[Tuple[Any, Union[str, DepMode]]]):
+    out = []
+    for region, mode in deps:
+        if isinstance(mode, str):
+            mode = DepMode(mode)
+        out.append((region, mode))
+    return tuple(out)
+
+
+@dataclass
+class RuntimeStats:
+    tasks_executed: int = 0
+    lock_acquisitions: int = 0
+    lock_wait_s: float = 0.0
+    messages_processed: int = 0
+    ddast_callback_entries: int = 0
+    max_in_graph: int = 0
+    total_edges: int = 0
+    trace: List[Tuple[float, int, int]] = field(default_factory=list)  # (t, in_graph, ready)
+    wall_s: float = 0.0
+
+
+class _InstrumentedLock:
+    """Lock that records contention (acquisitions + wait time)."""
+
+    __slots__ = ("_lock", "acquisitions", "wait_s")
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.acquisitions = 0
+        self.wait_s = 0.0
+
+    def __enter__(self):
+        t0 = time.perf_counter()
+        self._lock.acquire()
+        self.wait_s += time.perf_counter() - t0
+        self.acquisitions += 1
+        return self
+
+    def __exit__(self, *exc):
+        self._lock.release()
+        return False
+
+
+class TaskRuntime:
+    """Host task runtime. Use as a context manager::
+
+        with TaskRuntime(num_workers=4, mode="ddast") as rt:
+            rt.task(f, a, b, deps=[(("A", 0), "inout")])
+            rt.taskwait()
+    """
+
+    def __init__(self, num_workers: int = 4, mode: str = "ddast",
+                 params: Optional[DDASTParams] = None,
+                 trace: bool = False,
+                 manager_eligible: Optional[set] = None) -> None:
+        if mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}")
+        self.num_workers = num_workers
+        self.mode = mode
+        self.params = params or DDASTParams()
+        self.trace_enabled = trace
+        # big.LITTLE support (paper §8): restrict which workers may become
+        # manager threads (None = any, the homogeneous default). The main
+        # thread (id num_workers) is always eligible so taskwait drains.
+        self.manager_eligible = manager_eligible
+
+        self.worker_queues: List[WorkerQueues] = [
+            WorkerQueues(i) for i in range(num_workers + 1)]  # +1: main thread
+        self._ready: List[List[WorkDescriptor]] = [[] for _ in range(num_workers + 1)]
+        self._ready_lock = threading.Lock()
+        self._graph_lock = _InstrumentedLock()
+        self._graphs: Dict[int, DependenceGraph] = {}
+        self.dispatcher = FunctionalityDispatcher()
+        self.ddast = DDASTManager(self, self.params)
+        if mode == "ddast":
+            self.dispatcher.register("ddast", self.ddast.callback, priority=10)
+
+        self._root = WorkDescriptor(func=None, label="main")
+        self._root.state = TaskState.RUNNING
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._dast_thread: Optional[threading.Thread] = None
+        self.stats = RuntimeStats()
+        self._trace_t0 = time.perf_counter()
+        self._rr = 0  # round-robin target for newly-ready tasks
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    def __enter__(self) -> "TaskRuntime":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.shutdown()
+        return False
+
+    def start(self) -> None:
+        self._trace_t0 = time.perf_counter()
+        _tls.current = self._root
+        _tls.worker_id = self.num_workers  # main thread owns the last queue pair
+        for i in range(self.num_workers):
+            t = threading.Thread(target=self._worker_loop, args=(i,),
+                                 name=f"worker-{i}", daemon=True)
+            self._threads.append(t)
+            t.start()
+        if self.mode == "dast":
+            self._dast_thread = threading.Thread(
+                target=self._dast_loop, name="dast", daemon=True)
+            self._dast_thread.start()
+
+    def shutdown(self) -> None:
+        self.taskwait()
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        if self._dast_thread is not None:
+            self._dast_thread.join(timeout=5.0)
+        self.stats.wall_s = time.perf_counter() - self._trace_t0
+        self.stats.messages_processed = self.ddast.messages_processed
+        self.stats.ddast_callback_entries = self.ddast.callback_entries
+        self.stats.lock_acquisitions = self._graph_lock.acquisitions
+        self.stats.lock_wait_s = self._graph_lock.wait_s
+        for g in self._graphs.values():
+            self.stats.max_in_graph = max(self.stats.max_in_graph, g.max_in_graph)
+            self.stats.total_edges += g.total_edges
+
+    # ------------------------------------------------------------------
+    # graph plumbing (called by whoever manages: worker in sync mode,
+    # manager threads in dast/ddast mode)
+    def _graph_for(self, parent: WorkDescriptor) -> DependenceGraph:
+        g = self._graphs.get(parent.wd_id)
+        if g is None:
+            g = self._graphs[parent.wd_id] = DependenceGraph()
+        return g
+
+    def satisfy_submit(self, wd: WorkDescriptor) -> None:
+        with self._graph_lock:
+            ready = self._graph_for(wd.parent).submit(wd)
+        if ready:
+            self._push_ready(wd)
+        self._sample_trace()
+
+    def satisfy_done(self, wd: WorkDescriptor) -> None:
+        with self._graph_lock:
+            newly = self._graph_for(wd.parent).complete(wd)
+        for s in newly:
+            self._push_ready(s)
+        self._sample_trace()
+
+    # ------------------------------------------------------------------
+    # ready pool (DBF: per-worker deques + stealing)
+    def _push_ready(self, wd: WorkDescriptor) -> None:
+        with self._ready_lock:
+            self._ready[self._rr].append(wd)
+            self._rr = (self._rr + 1) % len(self._ready)
+
+    def _pop_ready(self, worker_id: int) -> Optional[WorkDescriptor]:
+        with self._ready_lock:
+            q = self._ready[worker_id]
+            if q:
+                return q.pop()
+            for other in self._ready:           # steal (FIFO end)
+                if other:
+                    return other.pop(0)
+        return None
+
+    def ready_count(self) -> int:
+        return sum(len(q) for q in self._ready)
+
+    def in_graph_count(self) -> int:
+        return sum(g.in_graph for g in self._graphs.values())
+
+    def _sample_trace(self) -> None:
+        if self.trace_enabled:
+            self.stats.trace.append((time.perf_counter() - self._trace_t0,
+                                     self.in_graph_count(), self.ready_count()))
+
+    # ------------------------------------------------------------------
+    # public task API
+    def task(self, func: Callable[..., Any], *args,
+             deps: Sequence[Tuple[Any, Union[str, DepMode]]] = (),
+             label: str = "task") -> WorkDescriptor:
+        """Create + submit a task (life-cycle steps 1-2)."""
+        parent = getattr(_tls, "current", self._root)
+        wid = getattr(_tls, "worker_id", self.num_workers)
+        wd = WorkDescriptor(func=func, args=args, deps=_parse_deps(deps),
+                            label=label, parent=parent)
+        if self.mode == "sync":
+            self.satisfy_submit(wd)            # direct, under the graph lock
+        else:
+            self.worker_queues[wid].submit.push(SubmitTaskMessage(wd))
+        return wd
+
+    def taskwait(self) -> None:
+        """Block until all children of the current task completed. The
+        blocked thread keeps working: executes ready tasks and (ddast)
+        runs the manager callback — the paper's idle-thread philosophy."""
+        parent = getattr(_tls, "current", self._root)
+        wid = getattr(_tls, "worker_id", self.num_workers)
+        while True:
+            # account for children whose Submit message is still queued
+            if parent.num_children_alive == 0 and not self._pending_msgs():
+                return
+            wd = self._pop_ready(wid)
+            if wd is not None:
+                self._execute(wd, wid)
+                continue
+            if self.mode == "ddast":
+                self.dispatcher.notify_idle(wid)
+            elif self.mode == "sync":
+                time.sleep(0)                   # busy-wait yield
+            else:
+                time.sleep(1e-5)
+
+    def _pending_msgs(self) -> int:
+        return sum(wq.pending() for wq in self.worker_queues)
+
+    # ------------------------------------------------------------------
+    # execution
+    def _execute(self, wd: WorkDescriptor, worker_id: int) -> None:
+        prev_task = getattr(_tls, "current", self._root)
+        prev_wid = getattr(_tls, "worker_id", self.num_workers)
+        _tls.current, _tls.worker_id = wd, worker_id
+        wd.mark_running()
+        try:
+            if wd.func is not None:
+                wd.result = wd.func(*wd.args)
+        finally:
+            wd.mark_finished()
+            _tls.current, _tls.worker_id = prev_task, prev_wid
+        self.stats.tasks_executed += 1
+        if self.mode == "sync":
+            self.satisfy_done(wd)              # direct, under the graph lock
+        else:
+            self.worker_queues[worker_id].done.push(DoneTaskMessage(wd))
+
+    def _worker_loop(self, worker_id: int) -> None:
+        _tls.current = self._root
+        _tls.worker_id = worker_id
+        while not self._stop.is_set():
+            wd = self._pop_ready(worker_id)
+            if wd is not None:
+                self._execute(wd, worker_id)
+                continue
+            if self.mode == "ddast":
+                self.dispatcher.notify_idle(worker_id)
+                self._sample_trace()
+            time.sleep(0)                       # yield (busy-wait analogue)
+
+    def _dast_loop(self) -> None:
+        """Centralized manager thread (the authors' previous design [7])."""
+        while not self._stop.is_set():
+            n = self.ddast.drain_all()
+            if n == 0:
+                time.sleep(1e-6)

@@ -1,0 +1,457 @@
+"""Deterministic discrete-event simulator of the task runtime.
+
+This container exposes ONE physical core, so the paper's headline results
+(speedup vs. 16-64 worker threads, Figs 9-11) cannot be measured with real
+threads. The simulator reproduces them in *virtual time*: N virtual cores,
+task durations in microseconds, critical sections serialized on virtual
+locks, and the three runtime organizations:
+
+  sync   Nanos++ baseline — graph mutated by workers under a global lock,
+  dast   centralized manager thread [7] (P cores = P-1 workers + 1 manager),
+  ddast  this paper — idle cores run the DDAST callback (Listing 2).
+
+Cost constants default to values calibrated from the real threaded runtime
+on this machine (see benchmarks/bench_contention.py) and can be overridden.
+The cache-pollution effect the paper measures (§6.1: task bodies ~33 %
+faster under DDAST because workers stop touching runtime structures
+between tasks) is modeled with a per-core pollution flag set by graph
+operations and applied as a duration multiplier to the next task executed
+by that core.
+
+Everything is deterministic: no wall clock, no randomness — identical
+inputs give identical makespans (required for hypothesis-based testing).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .ddast import DDASTParams
+from .wd import DepMode
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimTaskSpec:
+    """One task in virtual time. `deps` = (region, DepMode) pairs; `dur` in
+    microseconds; `children` makes this a nesting parent (N-Body style):
+    the executing core creates the children, taskwaits on them (working as
+    a normal worker meanwhile), then the parent completes."""
+    dur: float
+    deps: Sequence[Tuple[Any, DepMode]] = ()
+    children: Optional[List["SimTaskSpec"]] = None
+    label: str = "t"
+
+
+@dataclass
+class SimCosts:
+    """Virtual-time costs (µs). Defaults calibrated on this host (see
+    EXPERIMENTS.md §Paper/contention)."""
+    create: float = 3.1        # WD alloc + arg capture (measured: 3.15us)
+    push: float = 0.08         # SPSC queue push (measured: 0.076us)
+    submit_cs: float = 2.0     # graph insert critical section (base)
+    submit_cs_dep: float = 0.8    # ... plus this per declared dependence
+    done_cs: float = 1.0       # graph completion critical section (base)
+    done_cs_dep: float = 0.5   # ... plus this per dependence scrubbed
+    msg_overhead: float = 0.25  # manager pop+dispatch per message
+    lock_overhead: float = 0.12  # uncontended acquire/release
+    idle_poll: float = 0.5     # idle re-poll period when nothing to do
+    pollution: float = 1.25    # duration multiplier after graph ops (§6.1)
+
+
+@dataclass
+class SimResult:
+    makespan_us: float
+    serial_us: float
+    tasks: int
+    lock_wait_us: float = 0.0
+    lock_acquisitions: int = 0
+    messages: int = 0
+    max_in_graph: int = 0
+    trace: List[Tuple[float, int, int]] = field(default_factory=list)
+
+    @property
+    def speedup(self) -> float:
+        return self.serial_us / self.makespan_us if self.makespan_us else 0.0
+
+
+# ---------------------------------------------------------------------------
+
+
+class _Task:
+    __slots__ = ("spec", "tid", "preds", "succs", "state", "parent",
+                 "pending_children")
+
+    def __init__(self, spec: SimTaskSpec, tid: int, parent: Optional["_Task"]):
+        self.spec = spec
+        self.tid = tid
+        self.preds = 0
+        self.succs: List["_Task"] = []
+        self.state = "created"
+        self.parent = parent
+        self.pending_children = 0
+
+
+class _VLock:
+    """Virtual lock: serializes critical sections in virtual time
+    (FIFO-handover approximation: acquirer waits until `free_at`)."""
+    __slots__ = ("free_at", "wait_us", "acquisitions")
+
+    def __init__(self) -> None:
+        self.free_at = 0.0
+        self.wait_us = 0.0
+        self.acquisitions = 0
+
+    def acquire(self, t: float, hold: float, overhead: float) -> float:
+        start = max(t, self.free_at)
+        self.wait_us += start - t
+        self.acquisitions += 1
+        end = start + hold + overhead
+        self.free_at = end
+        return end
+
+
+class _Graph:
+    """Virtual-time dependence graph — same rules as depgraph.DependenceGraph."""
+
+    def __init__(self) -> None:
+        self._regions: Dict[Any, Tuple[Optional[_Task], List[_Task]]] = {}
+        self.in_graph = 0
+        self.max_in_graph = 0
+
+    def submit(self, task: _Task) -> bool:
+        preds = set()
+        for region, mode in task.spec.deps:
+            lw, readers = self._regions.get(region, (None, []))
+            if mode.reads and lw is not None:
+                preds.add(lw)
+            if mode.writes:
+                if lw is not None:
+                    preds.add(lw)
+                preds.update(readers)
+            if mode.writes:
+                self._regions[region] = (task, [])
+            elif mode.reads:
+                self._regions[region] = (lw, readers + [task])
+        preds.discard(task)
+        live = [p for p in preds if p.state != "completed"]
+        task.preds = len(live)
+        for p in live:
+            p.succs.append(task)
+        self.in_graph += 1
+        self.max_in_graph = max(self.max_in_graph, self.in_graph)
+        task.state = "submitted"
+        if task.preds == 0:
+            task.state = "ready"
+            return True
+        return False
+
+    def complete(self, task: _Task) -> List[_Task]:
+        newly = []
+        for s in task.succs:
+            s.preds -= 1
+            if s.preds == 0 and s.state == "submitted":
+                s.state = "ready"
+                newly.append(s)
+        task.succs = []
+        for region, mode in task.spec.deps:
+            ent = self._regions.get(region)
+            if ent is None:
+                continue
+            lw, readers = ent
+            if lw is task:
+                lw = None
+            if mode.reads and task in readers:
+                readers = [r for r in readers if r is not task]
+            if lw is None and not readers:
+                self._regions.pop(region, None)
+            else:
+                self._regions[region] = (lw, readers)
+        self.in_graph -= 1
+        task.state = "completed"
+        return newly
+
+
+# ---------------------------------------------------------------------------
+
+
+class RuntimeSimulator:
+    """Event-driven simulation of `TaskRuntime` on `num_cores` virtual cores.
+
+    Core 0 runs the "main thread" program (creates the top-level tasks,
+    then taskwaits, working as a normal worker while waiting) — the same
+    structure as the real runtime and the paper's benchmarks.
+    """
+
+    def __init__(self, num_cores: int, mode: str = "ddast",
+                 params: Optional[DDASTParams] = None,
+                 costs: Optional[SimCosts] = None,
+                 trace: bool = False) -> None:
+        assert mode in ("sync", "dast", "ddast")
+        self.P = num_cores
+        self.mode = mode
+        self.params = params or DDASTParams()
+        self.costs = costs or SimCosts()
+        self.trace_enabled = trace
+
+    # -- public ---------------------------------------------------------
+    def run(self, specs: List[SimTaskSpec]) -> SimResult:
+        c, mode, P, params = self.costs, self.mode, self.P, self.params
+        max_mgr = (params.resolved_max_threads(P) if mode == "ddast"
+                   else (1 if mode == "dast" else 0))
+        dast_core = P - 1 if mode == "dast" else -1
+
+        graph = _Graph()
+        glock = _VLock()
+        tid_counter = [0]
+        total_tasks = [0]
+        completed = [0]
+        messages = [0]
+        active_mgr = [0]
+        polluted = [False] * P
+        trace: List[Tuple[float, int, int]] = []
+        serial_us = [0.0]
+
+        def count_serial(specs_: Sequence[SimTaskSpec]) -> None:
+            for s in specs_:
+                serial_us[0] += s.dur
+                total_tasks[0] += 1
+                if s.children:
+                    count_serial(s.children)
+        count_serial(specs)
+
+        submit_q: List[List[Tuple[float, _Task]]] = [[] for _ in range(P)]
+        done_q: List[List[Tuple[float, _Task]]] = [[] for _ in range(P)]
+        submit_busy = [False] * P
+        ready: List[Tuple[float, int, _Task]] = []  # heap keyed by avail time
+
+        # events: (time, seq, core, finished_task_or_None). Task completion
+        # must be delivered as an event at its finish time — evaluating it
+        # eagerly at start time would advance the virtual lock's `free_at`
+        # into the future and stall every earlier-timestamped acquirer
+        # (a causality violation).
+        events: List[Tuple[float, int, int, Optional[_Task]]] = []
+        seq = [0]
+        sleeping: set = set()
+
+        def schedule(t: float, core: int, fin: Optional[_Task] = None) -> None:
+            heapq.heappush(events, (t, seq[0], core, fin))
+            seq[0] += 1
+
+        def wake_all(t: float) -> None:
+            while sleeping:
+                schedule(t, sleeping.pop())
+
+        def sample(t: float) -> None:
+            if self.trace_enabled:
+                trace.append((t, graph.in_graph, len(ready)))
+
+        def make_task(spec: SimTaskSpec, parent: Optional[_Task]) -> _Task:
+            task = _Task(spec, tid_counter[0], parent)
+            tid_counter[0] += 1
+            if parent is not None:
+                parent.pending_children += 1
+            return task
+
+        # ---- graph operations in virtual time -------------------------
+        def proc_submit(task: _Task, t: float) -> float:
+            hold = c.submit_cs + c.submit_cs_dep * len(task.spec.deps)
+            end = glock.acquire(t, hold, c.lock_overhead)
+            if graph.submit(task):
+                heapq.heappush(ready, (end, task.tid, task))
+            sample(end)
+            wake_all(end)
+            return end
+
+        def proc_done(task: _Task, t: float) -> float:
+            hold = c.done_cs + c.done_cs_dep * len(task.spec.deps)
+            end = glock.acquire(t, hold, c.lock_overhead)
+            for s in graph.complete(task):
+                heapq.heappush(ready, (end, s.tid, s))
+            if task.parent is not None:
+                task.parent.pending_children -= 1
+            completed[0] += 1
+            sample(end)
+            wake_all(end)
+            return end
+
+        def submit_task(core: int, task: _Task, t: float) -> float:
+            if mode == "sync":
+                polluted[core] = True
+                return proc_submit(task, t)
+            submit_q[core].append((t + c.push, task))
+            wake_all(t + c.push)
+            return t + c.push
+
+        def finish_task(core: int, task: _Task, t: float) -> float:
+            task.state = "finished"
+            if mode == "sync":
+                polluted[core] = True
+                return proc_done(task, t)
+            done_q[core].append((t + c.push, task))
+            wake_all(t + c.push)
+            return t + c.push
+
+        # ---- DDAST callback (Listing 2) in virtual time ---------------
+        def run_callback(core: int, t: float) -> float:
+            if active_mgr[0] >= max_mgr:
+                return t
+            active_mgr[0] += 1
+            did_work = False
+            spins = params.max_spins
+            while True:
+                total_cnt = 0
+                for w in range(P):
+                    if len(ready) >= params.min_ready_tasks:
+                        break
+                    cnt = 0
+                    if not submit_busy[w]:
+                        submit_busy[w] = True
+                        while (cnt < params.max_ops_thread and submit_q[w]
+                               and submit_q[w][0][0] <= t):
+                            _, task = submit_q[w].pop(0)
+                            t = proc_submit(task, t + c.msg_overhead)
+                            messages[0] += 1
+                            cnt += 1
+                        submit_busy[w] = False
+                    while (cnt < params.max_ops_thread and done_q[w]
+                           and done_q[w][0][0] <= t):
+                        _, task = done_q[w].pop(0)
+                        t = proc_done(task, t + c.msg_overhead)
+                        messages[0] += 1
+                        cnt += 1
+                    total_cnt += cnt
+                if total_cnt:
+                    did_work = True
+                spins = (spins - 1) if total_cnt == 0 else params.max_spins
+                if spins == 0 or len(ready) >= params.min_ready_tasks:
+                    break
+            active_mgr[0] -= 1
+            if did_work:
+                polluted[core] = True
+            return t
+
+        def drain_dast(t: float) -> float:
+            progress = True
+            t2 = t
+            while progress:
+                progress = False
+                for w in range(P):
+                    while submit_q[w] and submit_q[w][0][0] <= t2:
+                        _, task = submit_q[w].pop(0)
+                        t2 = proc_submit(task, t2 + c.msg_overhead)
+                        messages[0] += 1
+                        progress = True
+                    while done_q[w] and done_q[w][0][0] <= t2:
+                        _, task = done_q[w].pop(0)
+                        t2 = proc_done(task, t2 + c.msg_overhead)
+                        messages[0] += 1
+                        progress = True
+            return t2
+
+        # ---- core state machine ---------------------------------------
+        # progs[core] = stack of creation frames [specs, idx, parent]
+        progs: Dict[int, List[List[Any]]] = {i: [] for i in range(P)}
+        progs[0].append([list(specs), 0, None])
+
+        def earliest_msg() -> Optional[float]:
+            best: Optional[float] = None
+            for w in range(P):
+                for q in (submit_q[w], done_q[w]):
+                    if q and (best is None or q[0][0] < best):
+                        best = q[0][0]
+            return best
+
+        def step_core(core: int, t: float) -> None:
+            if core == dast_core:               # dedicated manager [7]
+                t2 = drain_dast(t)
+                if t2 > t:
+                    schedule(t2, core)
+                else:
+                    nxt = earliest_msg()
+                    if nxt is not None and nxt > t:
+                        schedule(nxt, core)
+                    else:
+                        sleeping.add(core)
+                return
+            # 1. creation-program work (main thread / nesting parents)
+            stack = progs[core]
+            if stack:
+                frame = stack[-1]
+                specs_, idx, parent = frame
+                if idx < len(specs_):
+                    spec = specs_[idx]
+                    frame[1] += 1
+                    task = make_task(spec, parent)
+                    schedule(submit_task(core, task, t + c.create), core)
+                    return
+                # taskwait phase of this frame
+                pend = (parent.pending_children if parent is not None
+                        else total_tasks[0] - completed[0])
+                if pend == 0:
+                    stack.pop()
+                    if parent is not None:
+                        schedule(finish_task(core, parent, t), core)
+                        return
+                    schedule(t, core)  # main program done; loop re-checks
+                    return
+                # blocked in taskwait: fall through and work
+            # 2. worker behavior
+            if ready and ready[0][0] <= t:
+                task = heapq.heappop(ready)[2]
+                dur = task.spec.dur * (c.pollution if polluted[core] else 1.0)
+                polluted[core] = False
+                if task.spec.children:
+                    task.state = "running"
+                    stack.append([list(task.spec.children), 0, task])
+                    schedule(t + dur, core)     # parent body, then children
+                else:
+                    schedule(t + dur, core, fin=task)   # finish event
+                return
+            if ready:                            # ready item not visible yet
+                schedule(ready[0][0], core)
+                return
+            # 3. idle: become a manager (ddast) or sleep until state change
+            if mode == "ddast":
+                t2 = run_callback(core, t)
+                if t2 > t:
+                    schedule(t2, core)
+                    return
+                nxt = earliest_msg()
+                if nxt is not None and nxt > t:
+                    schedule(nxt, core)
+                    return
+            sleeping.add(core)
+
+        for i in range(P):
+            schedule(0.0, i)
+
+        makespan = 0.0
+        guard = 0
+        while events:
+            t, _, core, fin = heapq.heappop(events)
+            if completed[0] >= total_tasks[0] and not progs[0]:
+                makespan = max(makespan, t)
+                break
+            if fin is not None:
+                schedule(finish_task(core, fin, t), core)
+            else:
+                step_core(core, t)
+            makespan = max(makespan, t)
+            guard += 1
+            if guard > 100_000_000:  # pragma: no cover
+                raise RuntimeError("simulator exceeded event budget")
+
+        makespan = max(makespan, glock.free_at)
+        return SimResult(
+            makespan_us=makespan,
+            serial_us=serial_us[0],
+            tasks=total_tasks[0],
+            lock_wait_us=glock.wait_us,
+            lock_acquisitions=glock.acquisitions,
+            messages=messages[0],
+            max_in_graph=graph.max_in_graph,
+            trace=trace,
+        )

@@ -1,0 +1,369 @@
+"""The paper's evaluation applications (§4.2) on the task runtime.
+
+Each app exists in two forms:
+  * ``sim_*_specs``  — a SimTaskSpec graph with virtual durations, consumed
+    by core.simulator (reproduces Figs 5-11 scalability/tuning results);
+  * ``run_*``        — a real execution on core.runtime.TaskRuntime where
+    each task body is a jitted JAX block kernel (validates runtime
+    correctness against dense oracles).
+
+Dependence patterns follow the paper exactly:
+  Matmul    — regular, independent chains per output block (§4.2.1)
+  N-Body    — regular chains + NESTED tasks (§4.2.2): one top-level task
+              per timestep creates the per-block children
+  Sparse LU — complex irregular pattern (§4.2.3)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .simulator import SimTaskSpec
+from .wd import DepMode
+
+IN, OUT, INOUT = DepMode.IN, DepMode.OUT, DepMode.INOUT
+
+
+# ===========================================================================
+# Matmul (§4.2.1): C[i,j] += A[i,k] @ B[k,j]
+# ===========================================================================
+
+def sim_matmul_specs(nb: int, dur_us: float = 100.0) -> List[SimTaskSpec]:
+    """nb x nb blocked matmul task graph; nb**3 tasks; per-output-block
+    chains of length nb (the paper's 'several independent chains')."""
+    specs = []
+    for i in range(nb):
+        for j in range(nb):
+            for k in range(nb):
+                specs.append(SimTaskSpec(
+                    dur=dur_us,
+                    deps=[(("A", i, k), IN), (("B", k, j), IN),
+                          (("C", i, j), INOUT)],
+                    label=f"gemm{i}.{j}.{k}"))
+    return specs
+
+
+@functools.partial(jax.jit, donate_argnums=(2,))
+def _gemm_block(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    return c + a @ b
+
+
+def run_matmul(rt, a: np.ndarray, b: np.ndarray, bs: int) -> np.ndarray:
+    """Blocked matmul on the task runtime. Returns C = A @ B."""
+    ms = a.shape[0]
+    assert ms % bs == 0
+    nb = ms // bs
+    ab = {(i, k): jnp.asarray(a[i * bs:(i + 1) * bs, k * bs:(k + 1) * bs])
+          for i in range(nb) for k in range(nb)}
+    bb = {(k, j): jnp.asarray(b[k * bs:(k + 1) * bs, j * bs:(j + 1) * bs])
+          for k in range(nb) for j in range(nb)}
+    cb: Dict[Tuple[int, int], jax.Array] = {
+        (i, j): jnp.zeros((bs, bs), a.dtype) for i in range(nb)
+        for j in range(nb)}
+
+    def gemm(i: int, j: int, k: int) -> None:
+        cb[(i, j)] = _gemm_block(ab[(i, k)], bb[(k, j)], cb[(i, j)])
+
+    for i in range(nb):
+        for j in range(nb):
+            for k in range(nb):
+                rt.task(gemm, i, j, k,
+                        deps=[(("A", i, k), IN), (("B", k, j), IN),
+                              (("C", i, j), INOUT)],
+                        label=f"gemm{i}.{j}.{k}")
+    rt.taskwait()
+    out = np.empty_like(a)
+    for (i, j), blk in cb.items():
+        out[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] = np.asarray(blk)
+    return out
+
+
+# ===========================================================================
+# Sparse LU (§4.2.3): blocked LU over a sparse block pattern
+# ===========================================================================
+
+def sparse_pattern(nb: int) -> List[List[bool]]:
+    """BSC SparseLU-style initial block occupancy: diagonal + an irregular
+    subset (creates the paper's 'much more complex and irregular' graph)."""
+    return [[i == j or (i + j) % 3 != 1 or j == 0 or i == 0
+             for j in range(nb)] for i in range(nb)]
+
+
+def sim_sparselu_specs(nb: int, dur_lu0: float = 120.0,
+                       dur_fwd: float = 100.0, dur_bdiv: float = 100.0,
+                       dur_bmod: float = 110.0) -> List[SimTaskSpec]:
+    present = sparse_pattern(nb)
+    specs = []
+    for k in range(nb):
+        specs.append(SimTaskSpec(dur=dur_lu0, deps=[(("M", k, k), INOUT)],
+                                 label=f"lu0.{k}"))
+        for j in range(k + 1, nb):
+            if present[k][j]:
+                specs.append(SimTaskSpec(
+                    dur=dur_fwd,
+                    deps=[(("M", k, k), IN), (("M", k, j), INOUT)],
+                    label=f"fwd.{k}.{j}"))
+        for i in range(k + 1, nb):
+            if present[i][k]:
+                specs.append(SimTaskSpec(
+                    dur=dur_bdiv,
+                    deps=[(("M", k, k), IN), (("M", i, k), INOUT)],
+                    label=f"bdiv.{i}.{k}"))
+        for i in range(k + 1, nb):
+            if not present[i][k]:
+                continue
+            for j in range(k + 1, nb):
+                if not present[k][j]:
+                    continue
+                present[i][j] = True  # fill-in
+                specs.append(SimTaskSpec(
+                    dur=dur_bmod,
+                    deps=[(("M", i, k), IN), (("M", k, j), IN),
+                          (("M", i, j), INOUT)],
+                    label=f"bmod.{i}.{j}.{k}"))
+    return specs
+
+
+@jax.jit
+def _lu0(d: jax.Array) -> jax.Array:
+    """Unpivoted in-block LU (reference kernel of the BSC benchmark)."""
+    n = d.shape[0]
+
+    def body(k, m):
+        col = m[:, k] / m[k, k]
+        col = jnp.where(jnp.arange(n) > k, col, m[:, k])
+        m = m.at[:, k].set(col)
+        upd = jnp.outer(col, m[k, :])
+        mask = (jnp.arange(n)[:, None] > k) & (jnp.arange(n)[None, :] > k)
+        return m - jnp.where(mask, upd, 0.0)
+
+    return jax.lax.fori_loop(0, n, body, d)
+
+
+@jax.jit
+def _fwd(diag: jax.Array, c: jax.Array) -> jax.Array:
+    """Solve L x = c where L is the (unit-diag) lower part of `diag`."""
+    l = jnp.tril(diag, -1) + jnp.eye(diag.shape[0], dtype=diag.dtype)
+    return jax.scipy.linalg.solve_triangular(l, c, lower=True)
+
+
+@jax.jit
+def _bdiv(diag: jax.Array, r: jax.Array) -> jax.Array:
+    """Solve x U = r where U is the upper part of `diag`."""
+    u = jnp.triu(diag)
+    return jax.scipy.linalg.solve_triangular(u.T, r.T, lower=True).T
+
+
+@jax.jit
+def _bmod(row: jax.Array, col: jax.Array, inner: jax.Array) -> jax.Array:
+    return inner - row @ col
+
+
+def run_sparselu(rt, m: np.ndarray, bs: int) -> np.ndarray:
+    """Blocked sparse LU on the runtime; returns packed LU factors."""
+    ms = m.shape[0]
+    nb = ms // bs
+    present = sparse_pattern(nb)
+    blocks: Dict[Tuple[int, int], Optional[jax.Array]] = {}
+    for i in range(nb):
+        for j in range(nb):
+            blocks[(i, j)] = (jnp.asarray(m[i * bs:(i + 1) * bs,
+                                            j * bs:(j + 1) * bs])
+                              if present[i][j] else None)
+
+    def lu0(k):
+        blocks[(k, k)] = _lu0(blocks[(k, k)])
+
+    def fwd(k, j):
+        blocks[(k, j)] = _fwd(blocks[(k, k)], blocks[(k, j)])
+
+    def bdiv(i, k):
+        blocks[(i, k)] = _bdiv(blocks[(k, k)], blocks[(i, k)])
+
+    def bmod(i, j, k):
+        inner = blocks[(i, j)]
+        if inner is None:
+            inner = jnp.zeros((bs, bs), dtype=jnp.float32)
+        blocks[(i, j)] = _bmod(blocks[(i, k)], blocks[(k, j)], inner)
+
+    for k in range(nb):
+        rt.task(lu0, k, deps=[(("M", k, k), INOUT)], label=f"lu0.{k}")
+        for j in range(k + 1, nb):
+            if present[k][j]:
+                rt.task(fwd, k, j,
+                        deps=[(("M", k, k), IN), (("M", k, j), INOUT)],
+                        label=f"fwd.{k}.{j}")
+        for i in range(k + 1, nb):
+            if present[i][k]:
+                rt.task(bdiv, i, k,
+                        deps=[(("M", k, k), IN), (("M", i, k), INOUT)],
+                        label=f"bdiv.{i}.{k}")
+        for i in range(k + 1, nb):
+            if not present[i][k]:
+                continue
+            for j in range(k + 1, nb):
+                if not present[k][j]:
+                    continue
+                present[i][j] = True
+                rt.task(bmod, i, j, k,
+                        deps=[(("M", i, k), IN), (("M", k, j), IN),
+                              (("M", i, j), INOUT)],
+                        label=f"bmod.{i}.{j}.{k}")
+    rt.taskwait()
+    out = np.zeros_like(m)
+    for (i, j), blk in blocks.items():
+        if blk is not None:
+            out[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] = np.asarray(blk)
+    return out
+
+
+def sparselu_oracle(m: np.ndarray, bs: int) -> np.ndarray:
+    """Sequential reference of the same blocked algorithm (numpy)."""
+    ms = m.shape[0]
+    nb = ms // bs
+    present = sparse_pattern(nb)
+    blocks = {}
+    for i in range(nb):
+        for j in range(nb):
+            blocks[(i, j)] = (m[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs]
+                              .astype(np.float64).copy()
+                              if present[i][j] else None)
+
+    def lu0(d):
+        d = d.copy()
+        n = d.shape[0]
+        for k in range(n):
+            d[k + 1:, k] /= d[k, k]
+            d[k + 1:, k + 1:] -= np.outer(d[k + 1:, k], d[k, k + 1:])
+        return d
+
+    for k in range(nb):
+        blocks[(k, k)] = lu0(blocks[(k, k)])
+        dk = blocks[(k, k)]
+        l = np.tril(dk, -1) + np.eye(bs)
+        u = np.triu(dk)
+        for j in range(k + 1, nb):
+            if present[k][j]:
+                blocks[(k, j)] = np.linalg.solve(l, blocks[(k, j)])
+        for i in range(k + 1, nb):
+            if present[i][k]:
+                blocks[(i, k)] = np.linalg.solve(u.T, blocks[(i, k)].T).T
+        for i in range(k + 1, nb):
+            if not present[i][k]:
+                continue
+            for j in range(k + 1, nb):
+                if not present[k][j]:
+                    continue
+                present[i][j] = True
+                inner = blocks[(i, j)]
+                if inner is None:
+                    inner = np.zeros((bs, bs))
+                blocks[(i, j)] = inner - blocks[(i, k)] @ blocks[(k, j)]
+    out = np.zeros_like(m)
+    for (i, j), blk in blocks.items():
+        if blk is not None:
+            out[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] = blk
+    return out
+
+
+# ===========================================================================
+# N-Body (§4.2.2): blocked particles, NESTED tasks per timestep
+# ===========================================================================
+
+def sim_nbody_specs(nblocks: int, timesteps: int, dur_force: float = 150.0,
+                    dur_update: float = 30.0, dur_parent: float = 5.0,
+                    nested: bool = True) -> List[SimTaskSpec]:
+    """Per timestep: pairwise force(i,j) tasks chained on F(i) (the
+    paper's 'regular chained pattern similar to the Matmul one', §4.2.2 —
+    nblocks² force tasks per step matches the paper's task counts), then
+    update(i). With `nested`, each timestep is one top-level task whose
+    body creates the children (the paper notes this nesting makes the
+    Submit requests latency-critical because they block parallelism)."""
+    specs: List[SimTaskSpec] = []
+    for ts in range(timesteps):
+        children = []
+        for i in range(nblocks):
+            for j in range(nblocks):
+                children.append(SimTaskSpec(
+                    dur=dur_force,
+                    deps=[(("P", i), IN), (("P", j), IN), (("F", i), INOUT)],
+                    label=f"force.{ts}.{i}.{j}"))
+        for i in range(nblocks):
+            children.append(SimTaskSpec(
+                dur=dur_update,
+                deps=[(("F", i), IN), (("P", i), INOUT)],
+                label=f"update.{ts}.{i}"))
+        if nested:
+            specs.append(SimTaskSpec(dur=dur_parent, deps=[(("TS",), INOUT)],
+                                     children=children,
+                                     label=f"step.{ts}"))
+        else:
+            specs.extend(children)
+    return specs
+
+
+@jax.jit
+def _forces_block(pi: jax.Array, pall: jax.Array, mall: jax.Array):
+    """Gravity forces on block-i particles from all particles (softened)."""
+    d = pall[None, :, :] - pi[:, None, :]
+    r2 = jnp.sum(d * d, axis=-1) + 1e-6
+    inv_r3 = jnp.where(r2 > 1e-5, r2 ** -1.5, 0.0)
+    return jnp.sum(d * (mall[None, :] * inv_r3)[..., None], axis=1)
+
+
+@jax.jit
+def _update_block(p: jax.Array, v: jax.Array, f: jax.Array, dt: float):
+    v = v + f * dt
+    return p + v * dt, v
+
+
+def run_nbody(rt, pos: np.ndarray, vel: np.ndarray, mass: np.ndarray,
+              bs: int, timesteps: int, dt: float = 0.01):
+    """Blocked n-body with nested tasks: one parent task per timestep."""
+    n = pos.shape[0]
+    nb = n // bs
+    p = [jnp.asarray(pos[i * bs:(i + 1) * bs]) for i in range(nb)]
+    v = [jnp.asarray(vel[i * bs:(i + 1) * bs]) for i in range(nb)]
+    mall = jnp.asarray(mass)
+    f: List[Optional[jax.Array]] = [None] * nb
+
+    def force(i):
+        pall = jnp.concatenate(p, axis=0)
+        f[i] = _forces_block(p[i], pall, mall)
+
+    def update(i):
+        p[i], v[i] = _update_block(p[i], v[i], f[i], dt)
+
+    def step(ts):
+        for i in range(nb):
+            rt.task(force, i,
+                    deps=[(("P", j), IN) for j in range(nb)] + [(("F", i), OUT)],
+                    label=f"force.{ts}.{i}")
+        for i in range(nb):
+            rt.task(update, i, deps=[(("F", i), IN), (("P", i), INOUT)],
+                    label=f"update.{ts}.{i}")
+        rt.taskwait()
+
+    for ts in range(timesteps):
+        rt.task(step, ts, deps=[(("TS",), INOUT)], label=f"step.{ts}")
+    rt.taskwait()
+    return (np.concatenate([np.asarray(x) for x in p]),
+            np.concatenate([np.asarray(x) for x in v]))
+
+
+def nbody_oracle(pos: np.ndarray, vel: np.ndarray, mass: np.ndarray,
+                 timesteps: int, dt: float = 0.01):
+    p = pos.astype(np.float32).copy()
+    v = vel.astype(np.float32).copy()
+    for _ in range(timesteps):
+        d = p[None, :, :] - p[:, None, :]
+        r2 = np.sum(d * d, axis=-1) + 1e-6
+        inv_r3 = np.where(r2 > 1e-5, r2 ** -1.5, 0.0)
+        f = np.sum(d * (mass[None, :] * inv_r3)[..., None], axis=1)
+        v = v + f * dt
+        p = p + v * dt
+    return p, v

@@ -1,0 +1,98 @@
+"""Work Descriptor (WD) — task representation, mirroring Nanos++ (paper §2.2.1).
+
+Each task is one WD carrying everything needed across its life cycle:
+creation -> submission -> ready -> (blocked) -> finished -> completed -> deleted.
+
+The paper replaces a third "delete" message with an extra task state
+(§3.1): a WD whose Done Task Message has not yet been handled is in state
+FINISHED; once a manager processes the message it moves to COMPLETED and
+only then may be deleted (DELETED).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+_wd_ids = itertools.count()
+
+
+class DepMode(enum.Enum):
+    IN = "in"
+    OUT = "out"
+    INOUT = "inout"
+
+    @property
+    def reads(self) -> bool:
+        return self in (DepMode.IN, DepMode.INOUT)
+
+    @property
+    def writes(self) -> bool:
+        return self in (DepMode.OUT, DepMode.INOUT)
+
+
+class TaskState(enum.Enum):
+    CREATED = 0      # WD allocated, args captured
+    SUBMITTED = 1    # handed to the runtime, in (or queued for) the dep graph
+    READY = 2        # all predecessors satisfied, in the ready pool
+    RUNNING = 3      # executing on a worker
+    BLOCKED = 4      # taskwait: waiting for children
+    FINISHED = 5     # body done; Done Task Message not yet handled
+    COMPLETED = 6    # Done message handled; graph updated; safe to delete
+    DELETED = 7
+
+
+@dataclass(eq=False)
+class WorkDescriptor:
+    """One task. `deps` is a sequence of (region, mode); regions are any
+    hashable key (the block-id analogue of an OmpSs memory region)."""
+
+    func: Optional[Callable[..., Any]]
+    args: Tuple[Any, ...] = ()
+    deps: Sequence[Tuple[Any, DepMode]] = ()
+    label: str = "task"
+    parent: Optional["WorkDescriptor"] = None
+    duration: Optional[float] = None  # virtual duration for the simulator
+
+    wd_id: int = field(default_factory=lambda: next(_wd_ids))
+    state: TaskState = TaskState.CREATED
+    # Dependence bookkeeping (owned by the manager / graph lock holder).
+    num_predecessors: int = 0
+    successors: list = field(default_factory=list)
+    # Children bookkeeping for taskwait + lifetime (paper: parent WD holds
+    # the graph of its children and may not be deleted while referenced).
+    num_children_alive: int = 0
+    children_done_event: Optional[threading.Event] = None
+    result: Any = None
+
+    def __post_init__(self) -> None:
+        if self.parent is not None:
+            self.parent.num_children_alive += 1
+
+    # ---- life-cycle transitions -------------------------------------
+    def mark_ready(self) -> None:
+        self.state = TaskState.READY
+
+    def mark_running(self) -> None:
+        self.state = TaskState.RUNNING
+
+    def mark_finished(self) -> None:
+        self.state = TaskState.FINISHED
+
+    def mark_completed(self) -> None:
+        """Done Task Message fully handled (graph updated, successors
+        notified). After this the WD may be reclaimed unless children
+        still reference it."""
+        self.state = TaskState.COMPLETED
+        if self.parent is not None:
+            self.parent._child_completed()
+
+    def _child_completed(self) -> None:
+        self.num_children_alive -= 1
+        if self.num_children_alive == 0 and self.children_done_event is not None:
+            self.children_done_event.set()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"WD({self.wd_id}:{self.label}:{self.state.name})"

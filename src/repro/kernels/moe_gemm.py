@@ -1,0 +1,73 @@
+"""Grouped (per-expert) matmul Pallas kernel: x [E,C,d] @ w [E,d,f].
+
+The MoE dispatch packs tokens into per-expert buffers (models/moe.py);
+this kernel is the compute hotardspot. TPU adaptation: one expert per major
+grid step, classic MXU-tiled matmul inside with an f32 VMEM accumulator
+carried across the contraction blocks (minor-most grid dim => sequential).
+
+Oracle: kernels/ref.py::moe_gemm_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_gemm_kernel(x_ref, w_ref, o_ref, acc_scr, *, n_dblocks: int):
+    db = pl.program_id(3)
+
+    @pl.when(db == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [blk_c, blk_d]
+    w = w_ref[0].astype(jnp.float32)          # [blk_d, blk_f]
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(db == n_dblocks - 1)
+    def _done():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_gemm_pallas(x: jax.Array, w: jax.Array, blk_c: int = 128,
+                    blk_d: int = 256, blk_f: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """x [E,C,d] @ w [E,d,f] -> [E,C,f] with f32 accumulation."""
+    e, c, d = x.shape
+    f = w.shape[2]
+    blk_c = min(blk_c, c)
+    blk_d = min(blk_d, d)
+    blk_f = min(blk_f, f)
+    # pad to block multiples
+    cp = math.ceil(c / blk_c) * blk_c
+    dp = math.ceil(d / blk_d) * blk_d
+    fp = math.ceil(f / blk_f) * blk_f
+    if (cp, dp) != (c, d):
+        x = jnp.pad(x, ((0, 0), (0, cp - c), (0, dp - d)))
+    if (dp, fp) != (d, f):
+        w = jnp.pad(w, ((0, 0), (0, dp - d), (0, fp - f)))
+    grid = (e, cp // blk_c, fp // blk_f, dp // blk_d)
+    kernel = functools.partial(_moe_gemm_kernel, n_dblocks=dp // blk_d)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_c, blk_d),
+                         lambda ei, ci, fi, di: (ei, ci, di)),
+            pl.BlockSpec((1, blk_d, blk_f),
+                         lambda ei, ci, fi, di: (ei, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_c, blk_f),
+                               lambda ei, ci, fi, di: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_c, blk_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:, :c, :f]

@@ -1,0 +1,155 @@
+"""Selective-scan (Mamba) and generic linear-recurrence Pallas kernels.
+
+TPU adaptation: the recurrence is sequential in time, so the grid puts the
+time-block index minor-most (sequential on a TPU core) and carries the
+state h [blk_d, N] in VMEM scratch across time blocks. The channel
+dimension D is the parallel grid axis — each (batch, d-block) recurs
+independently. This mirrors how the original CUDA kernel splits channels
+over thread blocks, re-thought for VMEM residency: all per-step tensors
+(x/dt tiles [blk_t, blk_d], B/C tiles [blk_t, N]) stay in VMEM, and the
+inner fori walks blk_t steps with [blk_d, N] updates on the VPU.
+
+Oracles: kernels/ref.py::{selective_scan_ref, ssm_scan_ref}.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ------------------------------------------------------ selective scan
+def _sel_scan_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, d_ref, h0_ref,
+                     y_ref, hout_ref, h_scr, *, blk_t: int, blk_d: int,
+                     n: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]                       # [blk_d, N]
+
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))  # [blk_d, N]
+    dvec = d_ref[...].astype(jnp.float32)            # [1, blk_d]
+    x = x_ref[0].astype(jnp.float32)                 # [blk_t, blk_d]
+    dt = dt_ref[0].astype(jnp.float32)
+    bmat = b_ref[0].astype(jnp.float32)              # [blk_t, N]
+    cmat = c_ref[0].astype(jnp.float32)
+
+    def step(i, carry):
+        h, ys = carry
+        dt_i = dt[i][:, None]                        # [blk_d, 1]
+        x_i = x[i][:, None]
+        da = jnp.exp(dt_i * a)                       # [blk_d, N]
+        h = da * h + (dt_i * x_i) * bmat[i][None, :]
+        y = jnp.sum(h * cmat[i][None, :], axis=1)    # [blk_d]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, i, 0)
+        return h, ys
+
+    h, ys = jax.lax.fori_loop(
+        0, blk_t, step,
+        (h_scr[...], jnp.zeros((blk_t, blk_d), jnp.float32)))
+    h_scr[...] = h
+    y_ref[0] = (ys + x * dvec).astype(y_ref.dtype)
+    hout_ref[0] = h
+
+
+def selective_scan_pallas(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                          b: jax.Array, c: jax.Array, d: jax.Array,
+                          h0: Optional[jax.Array] = None,
+                          blk_t: int = 256, blk_d: int = 256,
+                          interpret: bool = False
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """x/dt [B,S,D]; a_log [D,N]; b/c [B,S,N]; d [D] -> (y, h_last)."""
+    bsz, s, dd = x.shape
+    n = a_log.shape[1]
+    blk_t = min(blk_t, s)
+    blk_d = min(blk_d, dd)
+    assert s % blk_t == 0 and dd % blk_d == 0, (s, dd, blk_t, blk_d)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, dd, n), jnp.float32)
+    grid = (bsz, dd // blk_d, s // blk_t)
+    kernel = functools.partial(_sel_scan_kernel, blk_t=blk_t, blk_d=blk_d,
+                               n=n)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_t, blk_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, blk_t, blk_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((blk_d, n), lambda bi, di, ti: (di, 0)),
+            pl.BlockSpec((1, blk_t, n), lambda bi, di, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, blk_t, n), lambda bi, di, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, blk_d), lambda bi, di, ti: (0, di)),
+            pl.BlockSpec((1, blk_d, n), lambda bi, di, ti: (bi, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_t, blk_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, blk_d, n), lambda bi, di, ti: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, dd), x.dtype),
+            jax.ShapeDtypeStruct((bsz, dd, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((blk_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, b, c, d.reshape(1, dd), h0)
+    return y, h_last
+
+
+# ------------------------------------------------- generic linear scan
+def _lin_scan_kernel(a_ref, bx_ref, h0_ref, y_ref, h_scr, *, blk_t: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]                     # [1, blk_d]
+
+    a = a_ref[0].astype(jnp.float32)                 # [blk_t, blk_d]
+    bx = bx_ref[0].astype(jnp.float32)
+
+    def step(i, carry):
+        h, ys = carry
+        h = a[i][None, :] * h + bx[i][None, :]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, h[0], i, 0)
+        return h, ys
+
+    h, ys = jax.lax.fori_loop(
+        0, blk_t, step,
+        (h_scr[...], jnp.zeros_like(a)))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def ssm_scan_pallas(a: jax.Array, bx: jax.Array,
+                    h0: Optional[jax.Array] = None,
+                    blk_t: int = 256, blk_d: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """Linear recurrence h_t = a_t*h_{t-1} + bx_t over axis 1.
+    a/bx [B,S,D] -> h [B,S,D]."""
+    bsz, s, dd = a.shape
+    blk_t = min(blk_t, s)
+    blk_d = min(blk_d, dd)
+    assert s % blk_t == 0 and dd % blk_d == 0
+    if h0 is None:
+        h0 = jnp.zeros((bsz, dd), jnp.float32)
+    grid = (bsz, dd // blk_d, s // blk_t)
+    kernel = functools.partial(_lin_scan_kernel, blk_t=blk_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_t, blk_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, blk_t, blk_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, blk_d), lambda bi, di, ti: (bi, di)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_t, blk_d),
+                               lambda bi, di, ti: (bi, ti, di)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, dd), bx.dtype),
+        scratch_shapes=[pltpu.VMEM((1, blk_d), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, h0)

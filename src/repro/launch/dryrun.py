@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+# backend init. 512 host devices exist ONLY in this process — smoke tests
+# and benches see the real single device.
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+# record memory/cost/collective analysis for the roofline.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+#       --shape train_4k --mesh multipod
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, ShapeSpec, get_shape
+from repro.models.registry import get_model, input_specs, param_specs
+from repro.parallel.sharding import (batch_specs, make_rules,
+                                     shard_cache_tree, shard_tree)
+from repro.train.optimizer import init_opt_state
+from repro.train.train_step import (TrainConfig, make_prefill_step,
+                                    make_serve_step, make_train_step)
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*?=\s*(\([^)]*\)|\S+?)\s", re.S)
+
+
+def should_skip(arch: str, shape: ShapeSpec) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: long_500k needs sub-quadratic "
+                "attention (DESIGN.md skip policy)")
+    return None
+
+
+# --------------------------------------------------------------- analysis
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(stext: str) -> int:
+    """bytes of an HLO shape string like 'bf16[4,128]{1,0}' or a tuple."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", stext):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r".*=\s*((?:\([^)]*\))|(?:\S+))\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1))
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               compile_: bool = True, fsdp: bool = True,
+               tp: bool = True, microbatches: int = 1,
+               grad_compress: bool = False,
+               moe: str = "ep") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    skip = should_skip(arch, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod", "skip": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, fsdp=fsdp, tp=tp)
+    model = get_model(cfg)
+    pspecs = param_specs(cfg)
+    pshard = shard_tree(pspecs, rules)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+    from repro.parallel.collectives import strategy
+    # also enter the abstract mesh so it is visible at trace time —
+    # parallel/collectives.constrain resolves axis names through it
+    with mesh, jax.sharding.use_abstract_mesh(mesh.abstract_mesh), \
+            strategy(tp=tp, moe=moe):
+        if shape.kind == "train":
+            ospecs = jax.eval_shape(init_opt_state, pspecs)
+            oshard = shard_tree(ospecs, rules)
+            bshard = batch_specs(specs, rules)
+            step = make_train_step(model, TrainConfig(
+                num_microbatches=microbatches, grad_compress=grad_compress))
+            lowered = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, None),
+            ).lower(pspecs, ospecs, specs)
+        elif shape.kind == "prefill":
+            bshard = batch_specs(specs, rules)
+            step = make_prefill_step(model)
+            lowered = jax.jit(
+                step, in_shardings=(pshard, bshard), out_shardings=None,
+            ).lower(pspecs, specs)
+        else:  # decode
+            cshard = shard_cache_tree(specs["cache"], rules)
+            tshard = batch_specs(
+                {"tokens": specs["tokens"], "pos": specs["pos"]}, rules)
+            step = make_serve_step(model)
+            lowered = jax.jit(
+                step,
+                in_shardings=(pshard, cshard, tshard["tokens"],
+                              tshard["pos"]),
+                out_shardings=(None, None, cshard),
+            ).lower(pspecs, specs["cache"], specs["tokens"], specs["pos"])
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multipod" if multi_pod else "pod",
+        "kind": shape.kind,
+        "devices": int(mesh.devices.size),
+        "lower_s": round(time.time() - t0, 1),
+    }
+    if not compile_:
+        return rec
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+    mem = compiled.memory_analysis()
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        try:
+            rec[key] = int(getattr(mem, key))
+        except Exception:
+            pass
+    cost = compiled.cost_analysis() or {}
+    rec["xla_flops_raw"] = float(cost.get("flops", 0.0))
+    rec["xla_bytes_raw"] = float(cost.get("bytes accessed", 0.0))
+    from repro.analysis.roofline import analyze_hlo, model_flops
+    terms = analyze_hlo(compiled.as_text(), int(mesh.devices.size))
+    rec["flops"] = terms.flops
+    rec["hbm_bytes"] = terms.hbm_bytes
+    rec["collectives"] = terms.coll_bytes
+    rec["terms_s"] = terms.seconds()
+    rec["dominant"] = terms.dominant()
+    rec["model_flops"] = model_flops(cfg, shape)
+    rec["useful_ratio"] = (rec["model_flops"] / terms.flops
+                           if terms.flops else 0.0)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES], default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.all or not args.shape \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multipod' if mp else 'pod'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip-cached] {tag}")
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, mp,
+                                     compile_=not args.no_compile)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multipod" if mp else "pod",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec.get("error") or rec.get("skip") or \
+                    (f"ok compile={rec.get('compile_s')}s "
+                     f"flops={rec.get('flops', 0):.3g}")
+                print(f"[{tag}] {status}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings. Pure-functional:
+`init_*` returns a param pytree, `apply`-style functions are stateless."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.collectives import constrain
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.jnp_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.jnp_dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+def rope_cos_sin(positions: jax.Array, head_dim: int,
+                 theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [...,] int32 -> cos/sin [..., head_dim/2] f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., n_heads, head_dim]; cos/sin broadcastable [..., hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]          # broadcast over heads
+    sin = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+def init_mlp(rng: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None,
+             d_in: Optional[int] = None) -> Params:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.jnp_dtype
+    k = jax.random.split(rng, 3)
+    s_in = (2.0 / (d + f)) ** 0.5
+    if cfg.act == "silu":  # gated
+        return {"w_gate": jax.random.normal(k[0], (d, f), dt) * s_in,
+                "w_up": jax.random.normal(k[1], (d, f), dt) * s_in,
+                "w_down": jax.random.normal(k[2], (f, d), dt) * s_in}
+    return {"w_up": jax.random.normal(k[0], (d, f), dt) * s_in,
+            "b_up": jnp.zeros((f,), dt),
+            "w_down": jax.random.normal(k[1], (f, d), dt) * s_in,
+            "b_down": jnp.zeros((d,), dt)}
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    nd = x.ndim
+    mid = ("dp",) + (None,) * (nd - 2) + ("model",)
+    out = ("dp",) + (None,) * (nd - 1)
+    if cfg.act == "silu":
+        h = constrain(jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"]), *mid)
+        return constrain(h @ p["w_down"], *out)
+    h = constrain(jax.nn.gelu(x @ p["w_up"] + p["b_up"]), *mid)
+    return constrain(h @ p["w_down"] + p["b_down"], *out)
+
+
+# ---------------------------------------------------------------- embed
+def padded_vocab(cfg: ModelConfig, multiple: int = 256) -> int:
+    """Vocab padded so the embedding table shards on any mesh axis we use
+    (whisper's 51865 is prime-ish; everything shards once padded)."""
+    v = cfg.vocab_size
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def init_embed(rng: jax.Array, cfg: ModelConfig) -> Params:
+    v = padded_vocab(cfg)
+    dt = cfg.jnp_dtype
+    k1, k2 = jax.random.split(rng)
+    p = {"embedding": jax.random.normal(k1, (v, cfg.d_model), dt) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(k2, (cfg.d_model, v), dt) * 0.02
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    x = p["embedding"][tokens]
+    if cfg.name.startswith("gemma2"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ p["embedding"].T
+    else:
+        logits = x @ p["unembed"]
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts with GROUP-LOCAL sort-based capacity dispatch.
+
+TPU/SPMD adaptation: a single global argsort over all B*S*k assignments
+would be partitioned as a *global* sort — XLA SPMD lowers that to full
+rematerialization (replicate + resort), which dry-run analysis showed to
+be the dominant collective cost. Instead, routing/sorting/packing happen
+independently per batch row (the batch dim is the sharded data dim), so
+every sort/cumsum is device-local; tokens then meet the expert-sharded
+weights in one grouped matmul whose input layout change IS the all-to-all
+(E-major), which GSPMD lowers to the canonical MoE token exchange.
+
+Supports routed top-k + shared experts (Qwen2-MoE) and router-logit
+masking for padded experts (expert counts that don't divide the EP axis,
+e.g. 60, pad to a shardable count WITHOUT changing routing semantics).
+
+Capacity is per (row, expert): C = ceil(S*k/E * capacity_factor)
+(overflow tokens drop — standard TPU MoE).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from ..parallel.collectives import constrain, moe_mode
+from .config import ModelConfig
+from .layers import init_mlp
+
+Params = Dict[str, Any]
+
+
+def padded_experts(cfg: ModelConfig, multiple: int = 16) -> int:
+    e = cfg.num_experts
+    return ((e + multiple - 1) // multiple) * multiple
+
+
+def init_moe(rng: jax.Array, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    ep = padded_experts(cfg)
+    dt = cfg.jnp_dtype
+    k = jax.random.split(rng, 5)
+    s = (2.0 / (d + f)) ** 0.5
+    p = {
+        "router": jax.random.normal(k[0], (d, ep), jnp.float32) * 0.02,
+        "w_gate": jax.random.normal(k[1], (ep, d, f), dt) * s,
+        "w_up": jax.random.normal(k[2], (ep, d, f), dt) * s,
+        "w_down": jax.random.normal(k[3], (ep, f, d), dt) * s,
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(k[4], cfg, d_ff=f * cfg.num_shared_experts)
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    ep = padded_experts(cfg)
+    c = int(tokens_per_group * cfg.experts_per_tok
+            * cfg.capacity_factor / ep)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,d] -> (y [B,S,d], aux_loss). All dispatch ops are local to
+    each batch row (see module docstring)."""
+    b, s, d = x.shape
+    e_real, e_pad = cfg.num_experts, padded_experts(cfg)
+    k = cfg.experts_per_tok
+    cap = _capacity(cfg, s)
+    nk = s * k
+
+    logits = x.astype(jnp.float32) @ p["router"]          # [B,S,E]
+    if e_pad > e_real:
+        pad_mask = jnp.arange(e_pad) >= e_real
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                # [B,S,k]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # Switch-style load-balance aux loss (global means are cheap scalars)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(top_i[..., 0], e_pad), axis=(0, 1))
+    aux = jnp.sum(me * ce) * e_real
+
+    # ---- group-local dispatch (everything [B, ...] => local) ----------
+    flat_e = top_i.reshape(b, nk)                         # expert per slot
+    flat_t = jnp.broadcast_to(jnp.arange(s)[:, None], (s, k)).reshape(nk)
+    flat_w = top_w.reshape(b, nk)
+    order = jnp.argsort(flat_e, axis=1)                   # local sort
+    se = jnp.take_along_axis(flat_e, order, axis=1)       # [B,nk]
+    st = flat_t[order]                                    # token idx [B,nk]
+    sw = jnp.take_along_axis(flat_w, order, axis=1)
+    onehot = jax.nn.one_hot(se, e_pad, dtype=jnp.int32)   # [B,nk,E]
+    rank = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=1), se[..., None], axis=2)[..., 0] - 1
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e_pad * cap)  # drop bin last
+
+    def pack_row(xr, str_, slotr):                        # per batch row
+        buf = jnp.zeros((e_pad * cap + 1, d), xr.dtype)
+        return buf.at[slotr].set(xr[str_])[:-1]
+
+    # 2D-shard the packed buffer immediately: batch on data AND the E*C
+    # slot dim on model. The scatter handles the slot dim shard-locally
+    # (bounds masking), and the later [B,E,C,d]->[E,B,C,d] transpose then
+    # never migrates data between mesh axes — this XLA's SPMD lowers
+    # data<->model migration as full rematerialization (b/433785288).
+    # Decode-sized buffers (s==1: a few slots per row) skip the slot-dim
+    # sharding — 2D-sharding tiny buffers only adds resharding churn
+    # (measured: jamba decode regressed 2.3x with it).
+    # decode (s==1) with SMALL buffers: replicate them fully (one cheap
+    # gather) so the subsequent E-sharding is a local slice, never a
+    # data<->model migration. Large-expert decode (qwen3: 128e) keeps the
+    # sharded path — replication there costs 4x (measured).
+    decode = s == 1 and b * e_pad * cap * d < (1 << 26)
+    # slot-dim 2D sharding only pays off for big (train/prefill) buffers
+    slot_ax = "model" if (moe_mode() == "ep" and not decode
+                          and e_pad * cap >= 4096) else None
+    batch_ax = None if decode else "dp"
+    grouped = constrain(jax.vmap(pack_row)(x, st, slot),
+                        batch_ax, slot_ax, None)      # [B,E*C,d]
+    # E-major layout change == the MoE all-to-all (B-shard -> E-shard).
+    # Constrain the 4D [E,B,cap,d] form BEFORE merging (B,cap): with B its
+    # own sharded dim the reshard is a clean all-to-all; merging first
+    # made GSPMD fall back to full all-gathers (10.7 GB/op, dry-run
+    # measured). Experts pin to model, batch stays on data, so the
+    # grouped matmuls gather only the small FSDP weight shards.
+    # MoE dataflow choice (EXPERIMENTS.md §Perf): "ep" pins experts on the
+    # model axis and moves token buffers; "gather" keeps tokens where
+    # their batch rows live and lets GSPMD gather the (smaller) weight
+    # shards instead — optimal when per-layer expert weights are smaller
+    # than the k-times-replicated token buffers.
+    e_ax = "model" if moe_mode() == "ep" else None
+    tok_ax = None if decode else "dp"
+    grouped4 = grouped.reshape(b, e_pad, cap, d).transpose(1, 0, 2, 3)
+    grouped4 = constrain(grouped4, e_ax, tok_ax, None, None)
+    grouped = constrain(grouped4.reshape(e_pad, b * cap, d),
+                        e_ax, tok_ax, None)
+
+    h = constrain(kops.moe_gemm(grouped, p["w_gate"]), e_ax, tok_ax, None)
+    hu = constrain(kops.moe_gemm(grouped, p["w_up"]), e_ax, tok_ax, None)
+    out = constrain(kops.moe_gemm(jax.nn.silu(h) * hu, p["w_down"]),
+                    e_ax, tok_ax, None)               # [E,B*C,d]
+
+    # ---- combine (inverse all-to-all, then local gather/scatter) ------
+    out4 = constrain(out.reshape(e_pad, b, cap, d), e_ax, tok_ax, None,
+                     None)
+    # symmetric 2D constraint: keep E on model through the transpose so
+    # the reshard is an axis-preserving all-to-all, not a migration.
+    # decode: replicate (tiny) then re-shard batch — both local-ish.
+    slot_back = None if decode else e_ax
+    outb = constrain(out4.transpose(1, 0, 2, 3), batch_ax, slot_back,
+                     None, None).reshape(b, e_pad * cap, d)
+    outb = constrain(outb, "dp", slot_back, None)
+
+    def combine_row(outr, slotr, str_, swr, keepr):
+        # combine stays in the activation dtype: an f32 combine would
+        # make the whole 10x-capacity exchange buffer (and its gradient)
+        # f32 — dry-run measured that as 2x the MoE collective bytes
+        vals = outr[jnp.where(keepr, slotr, 0)]           # [nk,d]
+        vals = jnp.where(keepr[:, None], vals, 0.0)
+        yr = jnp.zeros((s, d), outr.dtype)
+        return yr.at[str_].add(vals * swr[:, None].astype(outr.dtype))
+
+    yf = constrain(jax.vmap(combine_row)(outb, slot, st, sw, keep),
+                   "dp", None, None)                  # [B,S,d]
+
+    if cfg.num_shared_experts:
+        from .layers import apply_mlp
+        yf = yf + apply_mlp(cfg, p["shared"],
+                            x.reshape(b * s, d)).reshape(b, s, d)
+    return yf.astype(x.dtype), aux

@@ -1,0 +1,281 @@
+"""State-space / recurrent mixers: Mamba (Jamba's SSM layers) and
+xLSTM's mLSTM + sLSTM blocks. All are O(seq) — these are the mixers that
+make the long_500k shape runnable.
+
+Memory discipline: the recurrences NEVER materialize [B,S,D,N] (or the
+[B,S,H,hd,hd] matrix-memory trail). Scans carry the state and emit only
+y_t; `chunked_scan` wraps the inner scan in jax.checkpoint so the backward
+pass stores chunk-boundary carries only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ util
+def chunked_scan(step, carry, xs_time_major, chunk: int = 128):
+    """lax.scan over time split into remat'd chunks. xs leaves [S, ...]."""
+    s = jax.tree_util.tree_leaves(xs_time_major)[0].shape[0]
+    if s % chunk == 0 and s > chunk:
+        nc = s // chunk
+        xs_c = jax.tree.map(
+            lambda x: x.reshape((nc, chunk) + x.shape[1:]), xs_time_major)
+
+        @jax.checkpoint
+        def chunk_body(c, xc):
+            return jax.lax.scan(step, c, xc)
+
+        carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
+        ys = jax.tree.map(
+            lambda y: y.reshape((s,) + y.shape[2:]), ys)
+        return carry, ys
+    return jax.lax.scan(step, carry, xs_time_major)
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+# ================================================================= Mamba
+def init_mamba(rng: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    dr = _dt_rank(cfg)
+    dt = cfg.jnp_dtype
+    k = jax.random.split(rng, 6)
+    s = (1.0 / d) ** 0.5
+    return {
+        "in_proj": jax.random.normal(k[0], (d, 2 * di), dt) * s,
+        "conv_w": jax.random.normal(k[1], (cfg.ssm_d_conv, di), dt) * 0.2,
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": jax.random.normal(k[2], (di, dr + 2 * n), dt) * s,
+        "dt_proj": jax.random.normal(k[3], (dr, di), dt) * (dr ** -0.5),
+        "dt_bias": jnp.zeros((di,), dt),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "d": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(k[4], (di, d), dt) * s,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: x [B,S,D], w [K,D]."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def mamba_train(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """x [B,S,d] -> [B,S,d] (full-sequence selective scan)."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    dr = _dt_rank(cfg)
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    dbc = xin @ p["x_proj"]
+    dt_r = dbc[..., :dr]
+    bmat = dbc[..., dr:dr + n]
+    cmat = dbc[..., dr + n:]
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])
+    y, _ = kops.selective_scan(xin, dt, p["a_log"], bmat, cmat, p["d"])
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Params:
+    di = cfg.ssm_expand * cfg.d_model
+    return {"h": jnp.zeros((batch, di, cfg.ssm_d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, di),
+                              cfg.jnp_dtype)}
+
+
+def mamba_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                 state: Params) -> Tuple[jax.Array, Params]:
+    """One-step recurrence. x [B,1,d]."""
+    b = x.shape[0]
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    dr = _dt_rank(cfg)
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    # conv over buffered history
+    hist = jnp.concatenate([state["conv"],
+                            xin[:, None, :].astype(state["conv"].dtype)],
+                           axis=1)                     # [B,K,di]
+    conv = jnp.einsum("bkd,kd->bd", hist.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xin = jax.nn.silu(conv).astype(x.dtype)
+    dbc = xin @ p["x_proj"]
+    dt_r, bmat, cmat = (dbc[..., :dr], dbc[..., dr:dr + n],
+                        dbc[..., dr + n:])
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None])
+    h = da * state["h"] + (dt * xin).astype(jnp.float32)[..., None] \
+        * bmat.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32)) \
+        + xin.astype(jnp.float32) * p["d"][None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+# ================================================================= mLSTM
+def init_mlstm(rng: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    dt = cfg.jnp_dtype
+    k = jax.random.split(rng, 6)
+    s = (1.0 / d) ** 0.5
+    return {
+        "wq": jax.random.normal(k[0], (d, h * hd), dt) * s,
+        "wk": jax.random.normal(k[1], (d, h * hd), dt) * s,
+        "wv": jax.random.normal(k[2], (d, h * hd), dt) * s,
+        "w_i": jax.random.normal(k[3], (d, h), jnp.float32) * s,
+        "w_f": jax.random.normal(k[4], (d, h), jnp.float32) * s,
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.ones((h,), jnp.float32) * 3.0,   # open forget gates
+        "out_proj": jax.random.normal(k[5], (h * hd, d), dt) * s,
+    }
+
+
+def _mlstm_step(carry, inp):
+    """carry: (C [B,H,hd,hd], n [B,H,hd], m [B,H]); inp per-step tensors."""
+    c, n, m = carry
+    qt, kt, vt, it, ft = inp        # [B,H,hd] x3, [B,H] x2
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p[..., None, None] * c + i_p[..., None, None] * \
+        (vt[..., :, None] * kt[..., None, :])         # [B,H,hd,hd]
+    n = f_p[..., None] * n + i_p[..., None] * kt
+    num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+    y = num / den[..., None]
+    return (c, n, m_new), y
+
+
+def mlstm_train(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd).astype(jnp.float32) * hd ** -0.5
+    k = (x @ p["wk"]).reshape(b, s, h, hd).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(b, s, h, hd).astype(jnp.float32)
+    ig = x.astype(jnp.float32) @ p["w_i"] + p["b_i"]
+    fg = x.astype(jnp.float32) @ p["w_f"] + p["b_f"]
+    carry = (jnp.zeros((b, h, hd, hd), jnp.float32),
+             jnp.zeros((b, h, hd), jnp.float32),
+             jnp.zeros((b, h), jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, ig, fg))
+    _, ys = chunked_scan(_mlstm_step, carry, xs, chunk=128)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h * hd).astype(x.dtype)
+    return y @ p["out_proj"]
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Params:
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {"c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def mlstm_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                 state: Params) -> Tuple[jax.Array, Params]:
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    xt = x[:, 0]
+    q = (xt @ p["wq"]).reshape(b, h, hd).astype(jnp.float32) * hd ** -0.5
+    k = (xt @ p["wk"]).reshape(b, h, hd).astype(jnp.float32)
+    v = (xt @ p["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    ig = xt.astype(jnp.float32) @ p["w_i"] + p["b_i"]
+    fg = xt.astype(jnp.float32) @ p["w_f"] + p["b_f"]
+    (c, n, m), y = _mlstm_step((state["c"], state["n"], state["m"]),
+                               (q, k, v, ig, fg))
+    out = (y.reshape(b, h * hd).astype(x.dtype) @ p["out_proj"])[:, None]
+    return out, {"c": c, "n": n, "m": m}
+
+
+# ================================================================= sLSTM
+def init_slstm(rng: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    dt = cfg.jnp_dtype
+    k = jax.random.split(rng, 3)
+    s = (1.0 / d) ** 0.5
+    return {
+        # input weights for i,f,z,o stacked: [d, 4*H*hd]
+        "w_x": jax.random.normal(k[0], (d, 4 * h * hd), dt) * s,
+        # block-diagonal recurrent weights per head: [4, H, hd, hd]
+        "w_r": jax.random.normal(k[1], (4, h, hd, hd), jnp.float32)
+        * (hd ** -0.5),
+        "bias": jnp.zeros((4, h, hd), jnp.float32),
+        "out_proj": jax.random.normal(k[2], (h * hd, d), dt) * s,
+    }
+
+
+def _slstm_step(p_wr, p_b):
+    def step(carry, xt):
+        c, n, hprev, m = carry                   # [B,H,hd] x3, [B,H,hd]
+        # xt: [B,4,H,hd] pre-activations from input
+        rec = jnp.einsum("khvw,bhw->bkhv", p_wr, hprev)
+        pre = xt + rec + p_b[None]
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(zt)
+        n = f_p * n + i_p
+        hnew = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (c, n, hnew, m_new), hnew
+    return step
+
+
+def slstm_train(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    pre = (x @ p["w_x"]).reshape(b, s, 4, h, hd).astype(jnp.float32)
+    carry = tuple(jnp.zeros((b, h, hd), jnp.float32) for _ in range(4))
+    xs = jnp.moveaxis(pre, 1, 0)
+    _, ys = chunked_scan(_slstm_step(p["w_r"], p["bias"]), carry, xs,
+                         chunk=128)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h * hd).astype(x.dtype)
+    return y @ p["out_proj"]
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Params:
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                 state: Params) -> Tuple[jax.Array, Params]:
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    pre = (x[:, 0] @ p["w_x"]).reshape(b, 4, h, hd).astype(jnp.float32)
+    step = _slstm_step(p["w_r"], p["bias"])
+    (c, n, hn, m), y = step((state["c"], state["n"], state["h"],
+                             state["m"]), pre)
+    out = (y.reshape(b, h * hd).astype(x.dtype) @ p["out_proj"])[:, None]
+    return out, {"c": c, "n": n, "h": hn, "m": m}

@@ -1,0 +1,5 @@
+from .sharding import (batch_specs, cache_sharding, param_sharding,
+                       shard_tree, ShardingRules)
+
+__all__ = ["batch_specs", "cache_sharding", "param_sharding", "shard_tree",
+           "ShardingRules"]

@@ -1,0 +1,94 @@
+"""Activation sharding constraints — the canonical GSPMD steering every
+production framework inserts.
+
+Without constraints, GSPMD is free to contract an FSDP-sharded weight by
+psumming ACTIVATION-sized partials (dry-run analysis measured 8 GB/device/
+layer on qwen3-moe) instead of all-gathering the much smaller weight
+shard. `constrain(x, "dp", None, "model")` pins activations to the
+canonical layout (batch on the data axes, features on model), which makes
+ZeRO-3 lower to weight all-gathers + local matmuls, and keeps dispatch
+bookkeeping (one-hot cumsums, sorts) device-local.
+
+All helpers no-op when no mesh is in scope (single-device tests) and skip
+any dim whose size doesn't divide the axis — so the same model code runs
+everywhere (this is what keeps all 40 dry-run cells lowering).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+DimSpec = Union[None, str]   # None | "dp" | "model" | axis name
+
+# strategy knobs: when TP is disabled (pure-DP small-model mode) the
+# "model" logical dim must resolve to None or constraints would force
+# pointless resharding of replicated params' activations. moe_mode picks
+# the MoE dataflow: "ep" = tokens all-to-all to expert shards;
+# "gather" = weights gathered to the tokens (optimal when per-layer
+# expert weights < k x tokens x d — napkin math in EXPERIMENTS.md §Perf).
+_tp_enabled: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_tp_enabled", default=True)
+_moe_mode: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_moe_mode", default="ep")
+
+
+def moe_mode() -> str:
+    return _moe_mode.get()
+
+
+@contextlib.contextmanager
+def strategy(tp: bool = True, moe: str = "ep"):
+    tok = _tp_enabled.set(tp)
+    tok2 = _moe_mode.set(moe)
+    try:
+        yield
+    finally:
+        _tp_enabled.reset(tok)
+        _moe_mode.reset(tok2)
+
+
+def _mesh_axes() -> dict:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # noqa: BLE001
+        return {}
+    if mesh is None or not mesh.shape:
+        return {}
+    return dict(mesh.shape)
+
+
+def constrain(x: jax.Array, *dims: DimSpec) -> jax.Array:
+    """with_sharding_constraint with logical dim names + divisibility
+    fallback. dims: one entry per axis of x — None, "dp" (pod+data) or
+    "model"."""
+    axes = _mesh_axes()
+    if not axes or len(dims) != x.ndim:
+        return x
+    spec = []
+    for i, d in enumerate(dims):
+        if d is None:
+            spec.append(None)
+            continue
+        if d == "dp":
+            names = tuple(a for a in ("pod", "data") if a in axes)
+            if not _tp_enabled.get() and "model" in axes:
+                names = names + ("model",)     # model axis joins DP
+        elif d == "model" and not _tp_enabled.get():
+            names = ()
+        else:
+            names = (d,) if d in axes else ()
+        size = int(np.prod([axes[a] for a in names])) if names else 0
+        if names and size > 0 and x.shape[i] % size == 0 \
+                and x.shape[i] >= size:
+            spec.append(names if len(names) > 1 else names[0])
+        else:
+            spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:  # no mesh context at trace time  # noqa: BLE001
+        return x

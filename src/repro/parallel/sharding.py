@@ -1,0 +1,222 @@
+"""Sharding rules engine.
+
+GSPMD needs valid NamedShardings only for jit inputs/outputs (params,
+optimizer state, batch, caches); intermediates are the compiler's job.
+This engine assigns shardings per leaf from its tree path + shape with
+divisibility fallback, which is what lets EVERY pool architecture lower on
+ANY mesh (14-head attention, 60-expert MoE, batch-1 long-context, ...):
+
+  * TP/EP  — the "model" axis goes to the preferred parallel dim of each
+    leaf (experts for MoE weights, heads/ffn for projections, vocab for
+    embeddings) if divisible, else to the largest divisible dim, else the
+    leaf stays unsharded on that axis.
+  * FSDP   — the "data" axis additionally shards the largest remaining
+    divisible dim of big leaves (ZeRO-3: params + optimizer state).
+    Kept intra-pod so FSDP all-gathers never cross the pod axis; the pod
+    axis carries pure DP (gradient all-reduce only).
+  * batch  — ("pod","data") on the batch dim when divisible; batch-1
+    long-context falls back to sequence sharding (SP) on "data".
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name -> preferred dim index for the model axis, counted from the
+# END of the shape (negative) so stacked [repeats, ...] leaves need no
+# special casing. None entries mean "replicate on model".
+_MODEL_PREF: Dict[str, int] = {
+    # attention / generic projections: shard the output features
+    "wq": -1, "wk": -1, "wv": -1, "w_gate": -1, "w_up": -1, "w_x": -1,
+    "in_proj": -1, "x_proj": -1, "w_i": -1, "w_f": -1, "router": -1,
+    # row-parallel: shard the input features
+    "wo": -2, "w_down": -2, "out_proj": -2, "dt_proj": -2,
+    # embeddings: vocab dim
+    "embedding": -2, "unembed": -1,
+    # mamba extras
+    "conv_w": -1, "conv_b": -1, "dt_bias": -1, "a_log": -2, "d": -1,
+    # slstm recurrent block-diagonal [4,H,hd,hd]: heads
+    "w_r": -3,
+}
+
+# MoE expert-stacked weights [E, d, f] (possibly [R, E, d, f]): expert dim
+_EXPERT_LEAVES = ("w_gate", "w_up", "w_down")
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    model_axis: str = "model"
+    fsdp_axis: str = "data"
+    dp_axes: Tuple[str, ...] = ("data",)      # ("pod","data") multi-pod
+    fsdp_min_size: int = 2 ** 16              # don't FSDP tiny leaves
+    # strategy knobs (the §Perf hillclimb levers):
+    fsdp: bool = True      # False: params replicated on data (inference /
+    #                        small-model: kills per-step weight gathers)
+    tp: bool = True        # False: model axis joins the batch axes (pure
+    #                        DP for small models — no TP resharding thrash)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def fsdp_size(self) -> int:
+        return self.mesh.shape[self.fsdp_axis]
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return self.dp_axes + ((self.model_axis,) if not self.tp else ())
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True, tp: bool = True
+               ) -> ShardingRules:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return ShardingRules(mesh=mesh, dp_axes=dp, fsdp=fsdp, tp=tp)
+
+
+def _stack_depth(path: str) -> int:
+    """Leading stacked-layer dims to skip (never shard the scan axis)."""
+    return 1 if re.search(r"\b(layers|encoder|decoder)\b", path) else 0
+
+
+def _leaf_name(path: str) -> str:
+    return path.rstrip("]'\"").split("/")[-1].split("[")[-1].strip("'\" ")
+
+
+def param_sharding(path: str, shape: Sequence[int],
+                   rules: ShardingRules) -> NamedSharding:
+    rank = len(shape)
+    spec: list = [None] * rank
+    lo = _stack_depth(path)                   # protected leading dims
+    name = _leaf_name(path)
+    msz, fsz = rules.model_size, rules.fsdp_size
+
+    def assignable(i: int, size: int) -> bool:
+        return i >= lo and spec[i] is None and shape[i] % size == 0 \
+            and shape[i] >= size
+
+    # ---- model axis ----------------------------------------------------
+    midx: Optional[int] = None
+    if not rules.tp:
+        # pure-DP strategy: no tensor parallelism; FSDP may still apply
+        if rules.fsdp and int(np.prod(shape)) >= rules.fsdp_min_size:
+            order = sorted(range(lo, rank), key=lambda i: -shape[i])
+            for i in order:
+                if assignable(i, fsz):
+                    spec[i] = rules.fsdp_axis
+                    break
+        return NamedSharding(rules.mesh, P(*spec))
+    is_expert = name in _EXPERT_LEAVES and rank - lo == 3
+    if is_expert:
+        cand = lo                              # expert dim -> EP
+        if assignable(cand, msz):
+            midx = cand
+    if midx is None and name in _MODEL_PREF:
+        cand = rank + _MODEL_PREF[name]
+        if lo <= cand < rank and assignable(cand, msz):
+            midx = cand
+    if midx is None:                           # fallback: largest divisible
+        order = sorted(range(lo, rank), key=lambda i: -shape[i])
+        for i in order:
+            if assignable(i, msz):
+                midx = i
+                break
+    if midx is not None:
+        spec[midx] = rules.model_axis
+
+    # ---- FSDP on the data axis ------------------------------------------
+    if rules.fsdp and int(np.prod(shape)) >= rules.fsdp_min_size:
+        order = sorted(range(lo, rank), key=lambda i: -shape[i])
+        for i in order:
+            if i != midx and assignable(i, fsz):
+                spec[i] = rules.fsdp_axis
+                break
+
+    return NamedSharding(rules.mesh, P(*spec))
+
+
+def shard_tree(tree_specs: Any, rules: ShardingRules) -> Any:
+    """Map a pytree of ShapeDtypeStructs to a pytree of NamedShardings."""
+    paths = jax.tree_util.tree_flatten_with_path(tree_specs)[0]
+
+    def one(kp, leaf):
+        path = jax.tree_util.keystr(kp)
+        return param_sharding(path, leaf.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(one, tree_specs)
+
+
+# ------------------------------------------------------------------ batch
+def batch_specs(batch_tree: Any, rules: ShardingRules) -> Any:
+    """Shardings for train/prefill inputs: batch over dp axes; SP fallback
+    on the sequence dim when the batch doesn't divide (long-context)."""
+    dp = rules.batch_axes
+    dp_size = int(np.prod([rules.mesh.shape[a] for a in dp]))
+
+    def one(kp, leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if len(shape) >= 1 and shape[0] % dp_size == 0 and shape[0] > 1:
+            spec[0] = dp
+        elif len(shape) >= 2 and shape[1] % rules.fsdp_size == 0:
+            spec[1] = rules.fsdp_axis          # sequence parallelism
+        return NamedSharding(rules.mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_sharding(path: str, shape: Sequence[int],
+                   rules: ShardingRules) -> NamedSharding:
+    """KV caches [R,B,L,nkv,hd] and recurrent states [R,B,...]: batch over
+    dp axes when divisible (else SP on the cache length), then kv-heads /
+    head_dim / feature dims on "model" when divisible."""
+    rank = len(shape)
+    spec: list = [None] * rank
+    # decode caches are always stacked [repeats/layers, batch, ...]:
+    # dim0 is the scan axis — never shard it.
+    lo = 1 if rank >= 3 else 0
+    _ = path
+    dp = rules.batch_axes
+    dp_size = int(np.prod([rules.mesh.shape[a] for a in dp]))
+    msz = rules.model_size
+    b_idx = lo if rank > lo else None
+    if b_idx is not None and shape[b_idx] % dp_size == 0 and shape[b_idx] > 1:
+        spec[b_idx] = dp
+        sp_used = False
+    else:
+        sp_used = True
+    if rules.tp:
+        # KV caches [R,B,L,nkv,hd]: put the model axis on the cache LENGTH
+        # (context-parallel decode). Sharding heads/hd misaligns with GQA
+        # head counts (< axis size) and SPMD then all-gathers the whole
+        # cache every step (dry-run measured); L-sharding turns the
+        # per-step attention into tiny psums instead.
+        cand_order = ([2] + list(range(rank - 1, lo, -1))) if rank >= 5 \
+            else list(range(rank - 1, lo, -1))
+        for i in cand_order:
+            if spec[i] is None and shape[i] % msz == 0 and shape[i] >= msz:
+                spec[i] = rules.model_axis
+                break
+    if sp_used:
+        # SP: shard the longest remaining dim (the cache length) on data
+        order = sorted((i for i in range(lo, rank) if spec[i] is None),
+                       key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] % rules.fsdp_size == 0 and shape[i] >= 4 * rules.fsdp_size:
+                spec[i] = rules.fsdp_axis
+                break
+    return NamedSharding(rules.mesh, P(*spec))
+
+
+def shard_cache_tree(cache_specs_tree: Any, rules: ShardingRules) -> Any:
+    def one(kp, leaf):
+        path = jax.tree_util.keystr(kp)
+        return cache_sharding(path, leaf.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs_tree)

@@ -1,0 +1,183 @@
+"""Continuous-batching serving engine with the paper's asynchronous
+organization at the request layer.
+
+Clients NEVER touch the engine's scheduling structures (the paper's "no
+direct mutation" rule): `submit()` pushes a request message into the
+calling client's own SPSC queue (core.queues). The engine loop plays the
+DDAST manager: it drains client queues — round-robin, up to
+MAX_OPS_THREAD per client, stopping early once MIN_READY (free-slot fill)
+is reached — admits requests into batch slots, and every engine step
+advances ALL active slots by one token with a single batched
+`decode_step` (prompt tokens are teacher-forced through the decode path;
+generated tokens continue it). Slots free as requests finish => true
+continuous batching with per-slot positions.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ddast import DDASTParams
+from ..core.queues import WorkerQueues
+from ..models.registry import ModelAPI
+
+_req_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    req_id: int = field(default_factory=lambda: next(_req_ids))
+    output: List[int] = field(default_factory=list)
+    done_event: threading.Event = field(default_factory=threading.Event)
+    admitted_step: int = -1
+    finished_step: int = -1
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                    # next cache position
+    prompt_left: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ServeEngine:
+    def __init__(self, model: ModelAPI, params: Any, *, batch_slots: int = 4,
+                 max_len: int = 256, num_clients: int = 4,
+                 ddast: Optional[DDASTParams] = None, eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.ddast = ddast or DDASTParams()
+        self.client_queues = [WorkerQueues(i) for i in range(num_clients)]
+        self.slots = [_Slot() for _ in range(self.B)]
+        self.cache = model.init_cache(self.B, max_len)
+        self._tokens = np.zeros((self.B,), np.int32)
+        self._pos = np.zeros((self.B,), np.int32)
+        from ..train.train_step import make_serve_step
+        self._step_fn = jax.jit(make_serve_step(model))
+        self.steps = 0
+        self.completed: List[Request] = []
+        self.stats = {"admitted": 0, "drained_msgs": 0, "callback_passes": 0}
+
+    # ------------------------------------------------------- client API
+    def submit(self, req: Request, client_id: int = 0) -> Request:
+        """Lock-free from the caller's perspective: single-producer push
+        into the client's own queue (the Submit Task Message analogue)."""
+        self.client_queues[client_id].submit.push(req)
+        return req
+
+    # ---------------------------------------------------- manager logic
+    def _free_slots(self) -> int:
+        return sum(1 for s in self.slots if s.free)
+
+    def _admit_requests(self) -> None:
+        """DDAST callback port: round-robin client queues, up to
+        MAX_OPS_THREAD per queue, early-exit once MIN_READY slots filled
+        (ready tasks == occupied slots waiting to run)."""
+        p = self.ddast
+        self.stats["callback_passes"] += 1
+        spins = max(p.max_spins, 1)
+        while self._free_slots() > 0 and spins > 0:
+            total = 0
+            for q in self.client_queues:
+                if self._free_slots() == 0:
+                    break
+                cnt = 0
+                if q.acquire_submit():
+                    try:
+                        while cnt < p.max_ops_thread and \
+                                self._free_slots() > 0:
+                            req = q.submit.pop()
+                            if req is None:
+                                break
+                            self._admit(req)
+                            cnt += 1
+                    finally:
+                        q.release_submit()
+                total += cnt
+            self.stats["drained_msgs"] += total
+            spins = spins - 1 if total == 0 else spins
+            if total == 0:
+                break
+
+    def _admit(self, req: Request) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                slot.req = req
+                slot.pos = 0
+                slot.prompt_left = len(req.prompt)
+                req.admitted_step = self.steps
+                self._tokens[i] = req.prompt[0]
+                self._pos[i] = 0
+                self._reset_slot_cache(i)
+                self.stats["admitted"] += 1
+                return
+        raise RuntimeError("no free slot")
+
+    def _reset_slot_cache(self, i: int) -> None:
+        """Zero slot i's cache lanes (batch index i across the pytree)."""
+        def zero(c):
+            if c.ndim >= 2 and c.shape[1] == self.B:
+                return c.at[:, i].set(0)
+            return c
+        self.cache = jax.tree.map(zero, self.cache)
+
+    # ----------------------------------------------------------- stepping
+    def step(self) -> int:
+        """One engine iteration: drain client queues (manager), then one
+        batched decode step. Returns number of active slots advanced."""
+        self._admit_requests()
+        active = [i for i, s in enumerate(self.slots) if not s.free]
+        if not active:
+            return 0
+        next_tok, _, self.cache = self._step_fn(
+            self.params, self.cache, jnp.asarray(self._tokens),
+            jnp.asarray(self._pos))
+        next_tok = np.asarray(next_tok)
+        self.steps += 1
+        for i in active:
+            slot = self.slots[i]
+            req = slot.req
+            slot.pos += 1
+            slot.prompt_left -= 1
+            if slot.prompt_left > 0:
+                self._tokens[i] = req.prompt[slot.pos]      # teacher-force
+            else:
+                tok = int(next_tok[i])
+                req.output.append(tok)
+                self._tokens[i] = tok
+                if len(req.output) >= req.max_new_tokens or \
+                        tok == self.eos_id or slot.pos + 1 >= self.max_len:
+                    req.finished_step = self.steps
+                    req.done_event.set()
+                    self.completed.append(req)
+                    slot.req = None
+                    continue
+            self._pos[i] = slot.pos
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        idle = 0
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0:
+                if all(len(q.submit) == 0 for q in self.client_queues):
+                    idle += 1
+                    if idle > 2:
+                        return
+            else:
+                idle = 0

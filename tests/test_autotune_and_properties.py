@@ -1,0 +1,129 @@
+"""Dynamic DDAST tuning (the paper's §8 future work), big.LITTLE manager
+eligibility, and runtime-level property tests (random task graphs on the
+REAL threaded runtime vs a sequential oracle)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DDASTParams, TaskRuntime
+from repro.core.autotune import DynamicTuner, TunerConfig
+from repro.core.wd import DepMode
+
+IN, OUT, INOUT = DepMode.IN, DepMode.OUT, DepMode.INOUT
+
+
+# ------------------------------------------------------------- autotune
+def test_tuner_widens_managers_under_backlog():
+    params = DDASTParams(max_ddast_threads=1, max_spins=1, max_ops_thread=8)
+    rt = TaskRuntime(num_workers=4, mode="ddast", params=params)
+    tuner = DynamicTuner(rt, TunerConfig(interval_s=0.0, backlog_high=4))
+    # simulate backlog without starting workers: enqueue many submits
+    for i in range(100):
+        rt.worker_queues[0].submit.push(
+            type("M", (), {"wd": None})())
+    before = rt.params.max_ddast_threads
+    tuner.callback(0)
+    assert rt.params.max_ddast_threads == before + 1
+    assert rt.params.max_ops_thread > 8
+
+
+def test_tuner_decays_when_calm():
+    params = DDASTParams(max_ddast_threads=3, max_spins=1)
+    rt = TaskRuntime(num_workers=8, mode="ddast", params=params)
+    tuner = DynamicTuner(rt, TunerConfig(interval_s=0.0))
+    tuner._static_mgr = 1
+    tuner.callback(0)                       # empty queues -> decay
+    assert rt.params.max_ddast_threads == 2
+
+
+def test_tuner_end_to_end_still_correct():
+    from repro.core.taskgraph_apps import run_matmul
+    params = DDASTParams(max_ddast_threads=1)
+    a = np.random.RandomState(0).rand(64, 64).astype(np.float32)
+    with TaskRuntime(num_workers=3, mode="ddast", params=params) as rt:
+        DynamicTuner(rt, TunerConfig(interval_s=0.0005))
+        c = run_matmul(rt, a, a, bs=16)
+    np.testing.assert_allclose(c, a @ a, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ big.LITTLE
+def test_manager_eligibility_restricts_managers():
+    seen = set()
+    from repro.core.ddast import DDASTManager
+    orig = DDASTManager.callback
+
+    def spy(self, worker_id):
+        before = self.messages_processed
+        orig(self, worker_id)
+        if self.messages_processed > before:
+            seen.add(worker_id)
+
+    DDASTManager.callback = spy
+    try:
+        with TaskRuntime(num_workers=4, mode="ddast",
+                         manager_eligible={0, 1}) as rt:
+            for i in range(200):
+                rt.task(lambda: None, deps=[((i % 7,), INOUT)])
+            rt.taskwait()
+    finally:
+        DDASTManager.callback = orig
+    assert rt.stats.tasks_executed == 200
+    # workers 2,3 must never have processed messages
+    assert not (seen & {2, 3}), seen
+
+
+# -------------------------------------------- runtime property testing
+@st.composite
+def task_program(draw):
+    n_tasks = draw(st.integers(3, 18))
+    n_regions = draw(st.integers(1, 5))
+    prog = []
+    for _ in range(n_tasks):
+        k = draw(st.integers(1, min(2, n_regions)))
+        regions = draw(st.lists(st.integers(0, n_regions - 1),
+                                min_size=k, max_size=k, unique=True))
+        modes = [draw(st.sampled_from([IN, OUT, INOUT])) for _ in regions]
+        prog.append(list(zip(regions, modes)))
+    return prog
+
+
+@given(task_program(), st.sampled_from(["sync", "ddast"]))
+@settings(max_examples=15, deadline=None)
+def test_property_real_runtime_region_order(prog, mode):
+    """On the REAL threaded runtime: for every region, writer tasks must
+    execute in submission order and each reader sees the same last-writer
+    as sequential execution would give it."""
+    log_lock = threading.Lock()
+    logs = {}
+
+    def body(idx, deps):
+        with log_lock:
+            for region, m in deps:
+                logs.setdefault(region, []).append(
+                    (idx, "w" if m.writes else "r"))
+
+    with TaskRuntime(num_workers=2, mode=mode) as rt:
+        for idx, deps in enumerate(prog):
+            rt.task(body, idx, deps, deps=deps, label=str(idx))
+        rt.taskwait()
+    assert rt.stats.tasks_executed == len(prog)
+    for region, events in logs.items():
+        writes = [i for i, k in events if k == "w"]
+        assert writes == sorted(writes), (region, events)
+        # readers: compare visible writer against sequential semantics
+        seq_last = {}
+        cur = -1
+        for i, k in sorted(events, key=lambda e: e[0]):
+            if k == "w":
+                cur = i
+            else:
+                seq_last[i] = cur
+        cur = -1
+        for i, k in events:
+            if k == "w":
+                cur = i
+            else:
+                assert cur == seq_last[i], (region, events)

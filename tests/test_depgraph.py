@@ -1,0 +1,143 @@
+"""Unit + property tests for the dependence graph (paper §2.2.1 semantics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.depgraph import DependenceGraph
+from repro.core.wd import DepMode, TaskState, WorkDescriptor
+
+IN, OUT, INOUT = DepMode.IN, DepMode.OUT, DepMode.INOUT
+
+
+def wd(deps, label="t"):
+    return WorkDescriptor(func=None, deps=deps, label=label)
+
+
+def test_raw_dependence():
+    g = DependenceGraph()
+    w = wd([("a", OUT)])
+    r = wd([("a", IN)])
+    assert g.submit(w) is True
+    assert g.submit(r) is False          # RAW: reader waits for writer
+    assert r.num_predecessors == 1
+    newly = g.complete(w)
+    assert newly == [r]
+
+
+def test_war_and_waw():
+    g = DependenceGraph()
+    w1 = wd([("a", OUT)])
+    r1 = wd([("a", IN)])
+    r2 = wd([("a", IN)])
+    w2 = wd([("a", OUT)])
+    g.submit(w1)
+    g.submit(r1)
+    g.submit(r2)
+    assert g.submit(w2) is False
+    # WAW on w1 + WAR on both readers
+    assert w2.num_predecessors == 3
+    g.complete(w1)
+    assert w2.num_predecessors == 2
+    g.complete(r1)
+    g.complete(r2)
+    assert w2.state == TaskState.READY
+
+
+def test_independent_regions_parallel():
+    g = DependenceGraph()
+    tasks = [wd([((i,), INOUT)]) for i in range(10)]
+    assert all(g.submit(t) for t in tasks)
+
+
+def test_chain_in_order():
+    g = DependenceGraph()
+    chain = [wd([("c", INOUT)], label=f"c{i}") for i in range(5)]
+    ready = [g.submit(t) for t in chain]
+    assert ready == [True, False, False, False, False]
+    for i in range(4):
+        newly = g.complete(chain[i])
+        assert newly == [chain[i + 1]]
+
+
+def test_in_graph_counting():
+    g = DependenceGraph()
+    t1, t2 = wd([("x", INOUT)]), wd([("x", INOUT)])
+    g.submit(t1)
+    g.submit(t2)
+    assert g.in_graph == 2 and g.max_in_graph == 2
+    g.complete(t1)
+    assert g.in_graph == 1
+    g.complete(t2)
+    assert g.in_graph == 0 and g.max_in_graph == 2
+
+
+# ---- property: any interleaving-legal completion order preserves the
+# sequential-consistency order on every region ---------------------------
+
+@st.composite
+def random_task_set(draw):
+    n_tasks = draw(st.integers(2, 25))
+    n_regions = draw(st.integers(1, 6))
+    tasks = []
+    for _ in range(n_tasks):
+        n_deps = draw(st.integers(1, min(3, n_regions)))
+        regions = draw(st.lists(st.integers(0, n_regions - 1),
+                                min_size=n_deps, max_size=n_deps,
+                                unique=True))
+        modes = [draw(st.sampled_from([IN, OUT, INOUT])) for _ in regions]
+        tasks.append(list(zip(regions, modes)))
+    return tasks
+
+
+@given(random_task_set(), st.randoms(use_true_random=False))
+@settings(max_examples=60, deadline=None)
+def test_property_execution_respects_program_order(task_deps, rng):
+    """Execute in ANY legal order (randomly chosen among ready tasks):
+    for every region, writers must execute in submission order, and every
+    reader must see exactly the writes submitted before it."""
+    g = DependenceGraph()
+    wds = [wd(d, label=str(i)) for i, d in enumerate(task_deps)]
+    ready = []
+    for t in wds:
+        if g.submit(t):
+            ready.append(t)
+    executed = []
+    log = {}  # region -> list of (task_index, 'r'/'w')
+    while ready:
+        t = ready.pop(rng.randrange(len(ready)))
+        executed.append(t)
+        for region, mode in t.deps:
+            if mode.writes:
+                log.setdefault(region, []).append((int(t.label), "w"))
+            elif mode.reads:
+                log.setdefault(region, []).append((int(t.label), "r"))
+        ready.extend(g.complete(t))
+    assert len(executed) == len(wds), "deadlock: not all tasks executed"
+    for region, events in log.items():
+        writes = [i for i, k in events if k == "w"]
+        assert writes == sorted(writes), \
+            f"region {region}: writers out of program order: {writes}"
+        last_w = -1
+        for i, k in events:
+            if k == "w":
+                last_w = max(last_w, i)
+            else:
+                # reader index i must come after all writers with idx < i
+                # i.e. no pending earlier writer may execute after it
+                pass
+        # stronger check: replay sequentially and compare visible writer
+        seq_last = {}
+        cur = -1
+        for i, k in sorted(events, key=lambda e: e[0]):
+            if k == "w":
+                cur = i
+            else:
+                seq_last[i] = cur
+        cur = -1
+        for i, k in events:
+            if k == "w":
+                cur = i
+            else:
+                assert cur == seq_last[i], (
+                    f"region {region}: reader {i} saw writer {cur}, "
+                    f"sequential order implies {seq_last[i]}")

@@ -1,0 +1,69 @@
+"""Unit tests for the trip-count-aware HLO roofline parser."""
+import jax.numpy as jnp
+
+from repro.analysis.roofline import (RooflineTerms, _block_stats,
+                                     _split_blocks, _trip_count,
+                                     analyze_hlo, model_flops)
+from repro.configs import get_config
+from repro.models.config import get_shape
+
+_HLO = """\
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %w = f32[16,32]{1,0} constant(0)
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,32]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,32]{1,0} all-reduce(%d), replica_groups={}
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(10)
+  %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %t = (s32[], f32[8,16]) tuple(%c0, %a)
+  %wl = (s32[], f32[8,16]) while(%t), condition=%cond.1, body=%body.1
+  %g = f32[64,16]{1,0} all-gather(%a), dimensions={0}
+}
+"""
+
+
+def test_split_blocks_and_trip_count():
+    blocks = _split_blocks(_HLO)
+    assert set(blocks) >= {"body.1", "cond.1", "main"}
+    assert _trip_count(blocks["cond.1"]) == 10
+
+
+def test_dot_flops_with_symbol_table():
+    blocks = _split_blocks(_HLO)
+    st = _block_stats(blocks["body.1"])
+    # dot [8,16]x[16,32]: 2*8*32*16 = 8192 flops
+    assert st.dot_flops == 8192
+
+
+def test_loop_multiplier_applied():
+    terms = analyze_hlo(_HLO, devices=4)
+    # body dot runs 10 times; per-device 81920, scaled x4 devices
+    assert terms.flops == 8192 * 10 * 4
+    # all-reduce inside loop: [8,32] f32 = 1024 B x 10 trips; gather once
+    assert terms.coll_bytes["all-reduce"] == 1024 * 10 * 4
+    assert terms.coll_bytes["all-gather"] == 64 * 16 * 4 * 4
+
+
+def test_dominant_and_seconds():
+    t = RooflineTerms(flops=197e12 * 256, hbm_bytes=0, coll_bytes={},
+                      devices=256)
+    assert t.seconds()["compute"] == 1.0
+    assert t.dominant() == "compute"
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen2-72b")
+    tr = model_flops(cfg, get_shape("train_4k"))
+    de = model_flops(cfg, get_shape("decode_32k"))
+    # train: 6*N*(256*4096 tokens); decode: 2*N*128 tokens
+    assert tr / de == (6 * 256 * 4096) / (2 * 128)

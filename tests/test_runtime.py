@@ -1,0 +1,127 @@
+"""Integration tests: the real threaded runtime in all three modes, the
+paper's three applications, and the simulator's qualitative claims."""
+import numpy as np
+import pytest
+
+from repro.core import (DDASTParams, RuntimeSimulator, SimCosts, TaskRuntime)
+from repro.core.taskgraph_apps import (
+    nbody_oracle, run_matmul, run_nbody, run_sparselu, sim_matmul_specs,
+    sim_nbody_specs, sim_sparselu_specs, sparselu_oracle)
+
+MODES = ("sync", "dast", "ddast")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_matmul_all_modes(mode):
+    rng = np.random.RandomState(42)
+    a = rng.rand(64, 64).astype(np.float32)
+    b = rng.rand(64, 64).astype(np.float32)
+    with TaskRuntime(num_workers=3, mode=mode) as rt:
+        c = run_matmul(rt, a, b, bs=16)
+    np.testing.assert_allclose(c, a @ b, rtol=1e-4, atol=1e-4)
+    assert rt.stats.tasks_executed == 4 ** 3
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_sparselu_all_modes(mode):
+    rng = np.random.RandomState(0)
+    n, bs = 96, 24
+    m = rng.rand(n, n).astype(np.float32) + np.eye(n, dtype=np.float32) * n
+    with TaskRuntime(num_workers=3, mode=mode) as rt:
+        lu = run_sparselu(rt, m, bs)
+    ref = sparselu_oracle(m, bs)
+    np.testing.assert_allclose(lu, ref, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_nbody_nested_all_modes(mode):
+    rng = np.random.RandomState(7)
+    n, bs, steps = 64, 16, 3
+    pos = rng.rand(n, 3).astype(np.float32)
+    vel = np.zeros((n, 3), np.float32)
+    mass = rng.rand(n).astype(np.float32)
+    with TaskRuntime(num_workers=2, mode=mode) as rt:
+        p, v = run_nbody(rt, pos, vel, mass, bs, steps)
+    pr, vr = nbody_oracle(pos, vel, mass, steps)
+    np.testing.assert_allclose(p, pr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(v, vr, rtol=1e-3, atol=1e-3)
+
+
+def test_ddast_messages_flow_through_queues():
+    a = np.eye(32, dtype=np.float32)
+    with TaskRuntime(num_workers=2, mode="ddast") as rt:
+        run_matmul(rt, a, a, bs=16)
+    # every task went through submit+done messages handled by managers
+    assert rt.stats.messages_processed >= 2 * rt.stats.tasks_executed
+    assert rt.stats.ddast_callback_entries > 0
+
+
+def test_sync_mode_uses_lock_directly():
+    a = np.eye(32, dtype=np.float32)
+    with TaskRuntime(num_workers=2, mode="sync") as rt:
+        run_matmul(rt, a, a, bs=16)
+    assert rt.stats.messages_processed == 0
+    # one lock acquisition per submit + one per done
+    assert rt.stats.lock_acquisitions == 2 * rt.stats.tasks_executed
+
+
+def test_max_ddast_threads_limit():
+    params = DDASTParams(max_ddast_threads=1)
+    a = np.eye(32, dtype=np.float32)
+    with TaskRuntime(num_workers=4, mode="ddast", params=params) as rt:
+        run_matmul(rt, a, a, bs=16)
+    assert rt.stats.tasks_executed == 8
+
+
+# ---------------- simulator: the paper's qualitative claims -------------
+
+def test_sim_deterministic():
+    specs = lambda: sim_matmul_specs(6, dur_us=50)
+    r1 = RuntimeSimulator(16, "ddast").run(specs())
+    r2 = RuntimeSimulator(16, "ddast").run(specs())
+    assert r1.makespan_us == r2.makespan_us
+    assert r1.messages == r2.messages
+
+
+def test_sim_contention_grows_with_cores_sync():
+    lw = []
+    for p in (8, 32):
+        r = RuntimeSimulator(p, "sync").run(sim_matmul_specs(8, dur_us=100))
+        lw.append(r.lock_wait_us)
+    assert lw[1] > lw[0], "graph-lock contention should grow with cores (§1)"
+
+
+def test_sim_ddast_beats_sync_at_scale():
+    """Paper §6.1: DDAST outperforms the baseline for large thread counts."""
+    s = RuntimeSimulator(64, "sync").run(sim_matmul_specs(8, dur_us=100))
+    d = RuntimeSimulator(64, "ddast").run(sim_matmul_specs(8, dur_us=100))
+    assert d.speedup > s.speedup
+
+
+def test_sim_similar_at_small_scale():
+    """Paper: similar performance with few threads / few tasks."""
+    s = RuntimeSimulator(2, "sync").run(sim_matmul_specs(4, dur_us=100))
+    d = RuntimeSimulator(2, "ddast").run(sim_matmul_specs(4, dur_us=100))
+    assert abs(d.speedup - s.speedup) / s.speedup < 0.35
+
+
+def test_sim_roof_vs_pyramid():
+    """Fig 12: DDAST keeps fewer tasks in the dependence graph."""
+    s = RuntimeSimulator(16, "sync").run(sim_matmul_specs(16, dur_us=400))
+    d = RuntimeSimulator(16, "ddast").run(sim_matmul_specs(16, dur_us=400))
+    assert d.max_in_graph < s.max_in_graph
+
+
+def test_sim_nbody_submission_bound():
+    """Fig 11 (FG): sync plateaus, ddast keeps scaling past it."""
+    s = RuntimeSimulator(64, "sync").run(
+        sim_nbody_specs(16, 4, dur_force=60, dur_update=15))
+    d = RuntimeSimulator(64, "ddast").run(
+        sim_nbody_specs(16, 4, dur_force=60, dur_update=15))
+    assert d.speedup > s.speedup
+
+
+def test_sim_sparselu_irregular_graph_runs():
+    r = RuntimeSimulator(16, "ddast").run(sim_sparselu_specs(10))
+    assert r.tasks > 100
+    assert r.speedup > 4
