@@ -12,7 +12,8 @@ import time
 sys.path.insert(0, "src")
 
 from benchmarks import (bench_contention, bench_roofline,  # noqa: E402
-                        bench_scalability, bench_traces, bench_tuning)
+                        bench_scalability, bench_shards, bench_traces,
+                        bench_tuning)
 
 SUITES = {
     "contention": bench_contention.run,     # §1 motivation + calibration
@@ -20,6 +21,7 @@ SUITES = {
     "scalability": bench_scalability.run,   # Figs 9-11
     "traces": bench_traces.run,             # Figs 12-14
     "roofline": bench_roofline.run,         # §Roofline table
+    "shards": bench_shards.run,             # sharded manager sweep
 }
 
 

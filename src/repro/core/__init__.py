@@ -1,13 +1,17 @@
 """Core of the reproduction: the paper's asynchronous runtime organization
-with a distributed manager (DDAST), plus its simulator and the static
-scheduling adaptation for device DAGs."""
+with a distributed manager (DDAST), the sharded dependence-manager
+extension (region-hash-partitioned graphs, per-shard mailboxes,
+lock-free ready deques), plus its simulator and the static scheduling
+adaptation for device DAGs."""
 from .autotune import DynamicTuner, TunerConfig
 from .ddast import DDASTManager, DDASTParams
 from .depgraph import DependenceGraph
 from .dispatcher import FunctionalityDispatcher
 from .messages import DoneTaskMessage, SubmitTaskMessage
-from .queues import SPSCQueue, WorkerQueues
+from .queues import InstrumentedLock, SPSCQueue, WorkerQueues
 from .runtime import RuntimeStats, TaskRuntime
+from .shards import (AtomicCounter, GraphShard, ShardMailbox, ShardRouter,
+                     ShardedDependenceGraph, StealDeque, stable_region_hash)
 from .simulator import RuntimeSimulator, SimCosts, SimResult, SimTaskSpec
 from .static_sched import DagNode, ddast_schedule, overlap_collectives
 from .wd import DepMode, TaskState, WorkDescriptor
@@ -16,7 +20,10 @@ __all__ = [
     "DynamicTuner", "TunerConfig",
     "DDASTManager", "DDASTParams", "DependenceGraph",
     "FunctionalityDispatcher", "DoneTaskMessage", "SubmitTaskMessage",
-    "SPSCQueue", "WorkerQueues", "RuntimeStats", "TaskRuntime",
+    "InstrumentedLock", "SPSCQueue", "WorkerQueues",
+    "RuntimeStats", "TaskRuntime",
+    "AtomicCounter", "GraphShard", "ShardMailbox", "ShardRouter",
+    "ShardedDependenceGraph", "StealDeque", "stable_region_hash",
     "RuntimeSimulator", "SimCosts", "SimResult", "SimTaskSpec",
     "DagNode", "ddast_schedule", "overlap_collectives",
     "DepMode", "TaskState", "WorkDescriptor",

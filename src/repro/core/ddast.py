@@ -65,31 +65,14 @@ class DDASTManager:
                 return
             self._active += 1
         self.callback_entries += 1
+        # sharded mode: managers claim whole shards instead of whole
+        # per-worker queues; the spin/min-ready policy is identical.
+        drain_once = (self._drain_shards_once if rt.mode == "sharded"
+                      else self._drain_queues_once)
         try:
             spins = p.max_spins
             while True:
-                total_cnt = 0
-                for wq in rt.worker_queues:
-                    if rt.ready_count() >= p.min_ready_tasks:
-                        break
-                    cnt = 0
-                    if wq.acquire_submit():
-                        try:
-                            while cnt < p.max_ops_thread:
-                                msg = wq.submit.pop()
-                                if msg is None:
-                                    break
-                                rt.satisfy_submit(msg.wd)
-                                cnt += 1
-                        finally:
-                            wq.release_submit()
-                    while cnt < p.max_ops_thread:
-                        msg = wq.done.pop()
-                        if msg is None:
-                            break
-                        rt.satisfy_done(msg.wd)
-                        cnt += 1
-                    total_cnt += cnt
+                total_cnt = drain_once(worker_id)
                 self.messages_processed += total_cnt
                 spins = (spins - 1) if total_cnt == 0 else p.max_spins
                 if spins == 0 or rt.ready_count() >= p.min_ready_tasks:
@@ -98,9 +81,58 @@ class DDASTManager:
             with self._active_lock:
                 self._active -= 1
 
+    def _drain_queues_once(self, worker_id: int) -> int:
+        """One pass over the per-worker queues (Listing 2 lines 6-15)."""
+        del worker_id
+        rt, p = self.rt, self.params
+        total_cnt = 0
+        for wq in rt.worker_queues:
+            if rt.ready_count() >= p.min_ready_tasks:
+                break
+            cnt = 0
+            if wq.acquire_submit():
+                try:
+                    while cnt < p.max_ops_thread:
+                        msg = wq.submit.pop()
+                        if msg is None:
+                            break
+                        rt.satisfy_submit(msg.wd)
+                        cnt += 1
+                finally:
+                    wq.release_submit()
+            while cnt < p.max_ops_thread:
+                msg = wq.done.pop()
+                if msg is None:
+                    break
+                rt.satisfy_done(msg.wd)
+                cnt += 1
+            total_cnt += cnt
+        return total_cnt
+
+    def _drain_shards_once(self, worker_id: int) -> int:
+        """One pass over the shard mailboxes: claim each free shard in
+        turn (offset by worker id so concurrent managers spread out) and
+        drain up to MAX_OPS_THREAD messages from it."""
+        rt, p = self.rt, self.params
+        router = rt.shard_router
+        n = len(router.mailboxes)
+        total_cnt = 0
+        for off in range(n):
+            if rt.ready_count() >= p.min_ready_tasks:
+                break
+            idx = (worker_id + off) % n
+            if router.mailboxes[idx].pending() == 0:
+                continue                # cheap peek before claiming
+            total_cnt += router.drain_shard(idx, p.max_ops_thread)
+        return total_cnt
+
     def drain_all(self) -> int:
         """Drain every queue to empty (used at taskwait/shutdown edges)."""
         rt = self.rt
+        if rt.mode == "sharded":
+            n = rt.shard_router.drain_all()
+            self.messages_processed += n
+            return n
         n = 0
         progress = True
         while progress:

@@ -33,6 +33,50 @@ class _RegionState:
     readers: List[WorkDescriptor] = field(default_factory=list)
 
 
+def collect_preds_and_register(regions: Dict[Any, _RegionState],
+                               wd: WorkDescriptor, deps) -> set:
+    """The RAW/WAW/WAR predecessor rules over a region-state map:
+    collect `wd`'s predecessors from `deps` ((key, mode) pairs), then
+    register `wd` as last-writer/reader. Shared by DependenceGraph
+    (keys = regions) and shards.GraphShard (keys = (parent_id, region))
+    so the dependence semantics live in exactly one place."""
+    preds = set()
+    for key, mode in deps:
+        st = regions.get(key)
+        if st is None:
+            st = regions[key] = _RegionState()
+        if mode.reads and st.last_writer is not None:
+            preds.add(st.last_writer)
+        if mode.writes:
+            if st.last_writer is not None:
+                preds.add(st.last_writer)
+            preds.update(st.readers)
+        # register wd on the region *after* collecting preds
+        if mode.writes:
+            st.last_writer = wd
+            st.readers = []
+        elif mode.reads:
+            st.readers.append(wd)
+    preds.discard(wd)
+    return preds
+
+
+def scrub_regions(regions: Dict[Any, _RegionState],
+                  wd: WorkDescriptor, deps) -> None:
+    """Remove a completed `wd` from the region records (shared by
+    DependenceGraph and shards.GraphShard)."""
+    for key, mode in deps:
+        st = regions.get(key)
+        if st is None:
+            continue
+        if st.last_writer is wd:
+            st.last_writer = None
+        if mode.reads and wd in st.readers:
+            st.readers.remove(wd)
+        if st.last_writer is None and not st.readers:
+            del regions[key]
+
+
 class DependenceGraph:
     """Graph of sibling tasks (one instance per parent WD, paper §2.2.1)."""
 
@@ -51,24 +95,8 @@ class DependenceGraph:
         Must be called in task-creation order for siblings (the Submit
         queue ordering invariant of §3.1).
         """
-        preds: Set[WorkDescriptor] = set()
-        for region, mode in wd.deps:
-            st = self._regions.get(region)
-            if st is None:
-                st = self._regions[region] = _RegionState()
-            if mode.reads and st.last_writer is not None:
-                preds.add(st.last_writer)
-            if mode.writes:
-                if st.last_writer is not None:
-                    preds.add(st.last_writer)
-                preds.update(st.readers)
-            # register wd on the region *after* collecting preds
-            if mode.writes:
-                st.last_writer = wd
-                st.readers = []
-            elif mode.reads:
-                st.readers.append(wd)
-        preds.discard(wd)
+        preds: Set[WorkDescriptor] = collect_preds_and_register(
+            self._regions, wd, wd.deps)
         live_preds = [p for p in preds
                       if p.state not in (TaskState.COMPLETED, TaskState.DELETED)]
         wd.num_predecessors = len(live_preds)
@@ -97,16 +125,7 @@ class DependenceGraph:
         wd.successors = []
         # Scrub region records pointing at the completed task so the maps
         # do not grow without bound (region count is bounded by live data).
-        for region, mode in wd.deps:
-            st = self._regions.get(region)
-            if st is None:
-                continue
-            if st.last_writer is wd:
-                st.last_writer = None
-            if mode.reads and wd in st.readers:
-                st.readers.remove(wd)
-            if st.last_writer is None and not st.readers:
-                del self._regions[region]
+        scrub_regions(self._regions, wd, wd.deps)
         self.in_graph -= 1
         wd.mark_completed()
         return newly_ready

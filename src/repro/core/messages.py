@@ -2,6 +2,12 @@
 
 Two message types only; task deletion is covered by the extra FINISHED ->
 COMPLETED state transition instead of a third message.
+
+The same two types serve both routings: in ``dast``/``ddast`` mode a
+message sits in the creating/executing worker's queue pair; in
+``sharded`` mode one message object is pushed to the mailbox of every
+shard its WD's regions hash to, and each shard processes only its own
+portion of the deps (see ``core.shards.router``).
 """
 from __future__ import annotations
 

@@ -13,10 +13,38 @@ paper.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from typing import Generic, Optional, TypeVar
 
 T = TypeVar("T")
+
+
+class InstrumentedLock:
+    """Lock that records contention (acquisitions + wait time).
+
+    Used for the global graph lock in ``sync`` mode and for each shard
+    lock in ``sharded`` mode, so per-organization lock-wait numbers are
+    directly comparable (the paper's §1 motivation metric).
+    """
+
+    __slots__ = ("_lock", "acquisitions", "wait_s")
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.acquisitions = 0
+        self.wait_s = 0.0
+
+    def __enter__(self) -> "InstrumentedLock":
+        t0 = time.perf_counter()
+        self._lock.acquire()
+        self.wait_s += time.perf_counter() - t0
+        self.acquisitions += 1
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._lock.release()
+        return False
 
 
 class SPSCQueue(Generic[T]):

@@ -1,19 +1,27 @@
-"""Threaded task runtime with three dependence-management organizations.
+"""Threaded task runtime with four dependence-management organizations.
 
-Modes (the paper's §6 comparison set):
-  * ``sync``  — Nanos++ baseline: every worker mutates the dependence graph
-                directly under a global graph lock at submit & finish.
-  * ``dast``  — the authors' earlier centralized design [7]: ONE dedicated
-                manager thread drains all queues.
-  * ``ddast`` — this paper: no dedicated resources; idle workers become
-                managers through the Functionality Dispatcher.
+Modes (the paper's §6 comparison set plus the sharded extension):
+  * ``sync``    — Nanos++ baseline: every worker mutates the dependence
+                  graph directly under a global graph lock at submit &
+                  finish.
+  * ``dast``    — the authors' earlier centralized design [7]: ONE
+                  dedicated manager thread drains all queues.
+  * ``ddast``   — this paper: no dedicated resources; idle workers become
+                  managers through the Functionality Dispatcher.
+  * ``sharded`` — beyond the paper (after Álvarez et al. 2021 / Yu et al.
+                  2022): the graph is partitioned by region hash into N
+                  shards, each with its own lock and mailbox; idle
+                  workers claim whole shards, so no global serialization
+                  point remains (see ``core.shards``).
 
 Scheduling is Distributed Breadth-First (paper §4, point 4): one ready
-deque per worker with work stealing.
+deque per worker with work stealing — lock-free ``StealDeque``s (owner
+LIFO pop, thief FIFO steal) in every mode.
 
 The runtime is instrumented with exactly the quantities the paper plots:
-graph-lock wait time, in-graph/ready task counts over time (Figs 12-14),
-message counts, and task throughput.
+graph-lock wait time (per-shard waits summed in ``sharded`` mode),
+in-graph/ready task counts over time (Figs 12-14), message counts, and
+task throughput.
 """
 from __future__ import annotations
 
@@ -26,10 +34,11 @@ from .ddast import DDASTManager, DDASTParams
 from .depgraph import DependenceGraph
 from .dispatcher import FunctionalityDispatcher
 from .messages import DoneTaskMessage, SubmitTaskMessage
-from .queues import WorkerQueues
+from .queues import InstrumentedLock, WorkerQueues
+from .shards import ShardedDependenceGraph, ShardRouter, StealDeque
 from .wd import DepMode, TaskState, WorkDescriptor
 
-_MODES = ("sync", "dast", "ddast")
+_MODES = ("sync", "dast", "ddast", "sharded")
 
 _tls = threading.local()
 
@@ -47,35 +56,21 @@ def _parse_deps(deps: Sequence[Tuple[Any, Union[str, DepMode]]]):
 class RuntimeStats:
     tasks_executed: int = 0
     lock_acquisitions: int = 0
-    lock_wait_s: float = 0.0
-    messages_processed: int = 0
+    lock_wait_s: float = 0.0           # sharded: per-shard waits summed
+    messages_processed: int = 0        # sharded: per-shard counts summed
     ddast_callback_entries: int = 0
     max_in_graph: int = 0
     total_edges: int = 0
     trace: List[Tuple[float, int, int]] = field(default_factory=list)  # (t, in_graph, ready)
     wall_s: float = 0.0
+    # Per-shard breakdowns (empty outside "sharded" mode).
+    shard_lock_wait_s: List[float] = field(default_factory=list)
+    shard_messages: List[int] = field(default_factory=list)
 
 
-class _InstrumentedLock:
-    """Lock that records contention (acquisitions + wait time)."""
-
-    __slots__ = ("_lock", "acquisitions", "wait_s")
-
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self.acquisitions = 0
-        self.wait_s = 0.0
-
-    def __enter__(self):
-        t0 = time.perf_counter()
-        self._lock.acquire()
-        self.wait_s += time.perf_counter() - t0
-        self.acquisitions += 1
-        return self
-
-    def __exit__(self, *exc):
-        self._lock.release()
-        return False
+# Backward-compatible alias: the lock now lives in queues.py so the
+# shards subsystem can use it without a circular import.
+_InstrumentedLock = InstrumentedLock
 
 
 class TaskRuntime:
@@ -89,7 +84,8 @@ class TaskRuntime:
     def __init__(self, num_workers: int = 4, mode: str = "ddast",
                  params: Optional[DDASTParams] = None,
                  trace: bool = False,
-                 manager_eligible: Optional[set] = None) -> None:
+                 manager_eligible: Optional[set] = None,
+                 num_shards: Optional[int] = None) -> None:
         if mode not in _MODES:
             raise ValueError(f"mode must be one of {_MODES}")
         self.num_workers = num_workers
@@ -103,13 +99,23 @@ class TaskRuntime:
 
         self.worker_queues: List[WorkerQueues] = [
             WorkerQueues(i) for i in range(num_workers + 1)]  # +1: main thread
-        self._ready: List[List[WorkDescriptor]] = [[] for _ in range(num_workers + 1)]
-        self._ready_lock = threading.Lock()
+        self._ready: List[StealDeque] = [
+            StealDeque() for _ in range(num_workers + 1)]
         self._graph_lock = _InstrumentedLock()
         self._graphs: Dict[int, DependenceGraph] = {}
+        # sharded mode: region-hash-partitioned graph + per-shard mailboxes
+        if num_shards is not None and num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.num_shards = num_shards or max(2, num_workers)
+        self.shard_graph: Optional[ShardedDependenceGraph] = None
+        self.shard_router: Optional[ShardRouter] = None
+        if mode == "sharded":
+            self.shard_graph = ShardedDependenceGraph(self.num_shards)
+            self.shard_router = ShardRouter(self.shard_graph,
+                                            on_ready=self._push_ready)
         self.dispatcher = FunctionalityDispatcher()
         self.ddast = DDASTManager(self, self.params)
-        if mode == "ddast":
+        if mode in ("ddast", "sharded"):
             self.dispatcher.register("ddast", self.ddast.callback, priority=10)
 
         self._root = WorkDescriptor(func=None, label="main")
@@ -153,13 +159,29 @@ class TaskRuntime:
         if self._dast_thread is not None:
             self._dast_thread.join(timeout=5.0)
         self.stats.wall_s = time.perf_counter() - self._trace_t0
-        self.stats.messages_processed = self.ddast.messages_processed
         self.stats.ddast_callback_entries = self.ddast.callback_entries
-        self.stats.lock_acquisitions = self._graph_lock.acquisitions
-        self.stats.lock_wait_s = self._graph_lock.wait_s
-        for g in self._graphs.values():
-            self.stats.max_in_graph = max(self.stats.max_in_graph, g.max_in_graph)
-            self.stats.total_edges += g.total_edges
+        if self.mode == "sharded":
+            # Aggregate per-shard counters: the single DDASTManager's
+            # counters alone would under-report (shards are also drained
+            # via drain_all and taskwait edges).
+            self.stats.shard_messages = [
+                mb.messages_processed for mb in self.shard_router.mailboxes]
+            self.stats.shard_lock_wait_s = [
+                s.lock.wait_s for s in self.shard_graph.shards]
+            self.stats.messages_processed = sum(self.stats.shard_messages)
+            self.stats.lock_acquisitions = sum(
+                s.lock.acquisitions for s in self.shard_graph.shards)
+            self.stats.lock_wait_s = sum(self.stats.shard_lock_wait_s)
+            self.stats.max_in_graph = self.shard_graph.max_in_graph
+            self.stats.total_edges = self.shard_graph.total_edges
+        else:
+            self.stats.messages_processed = self.ddast.messages_processed
+            self.stats.lock_acquisitions = self._graph_lock.acquisitions
+            self.stats.lock_wait_s = self._graph_lock.wait_s
+            for g in self._graphs.values():
+                self.stats.max_in_graph = max(self.stats.max_in_graph,
+                                              g.max_in_graph)
+                self.stats.total_edges += g.total_edges
 
     # ------------------------------------------------------------------
     # graph plumbing (called by whoever manages: worker in sync mode,
@@ -185,26 +207,30 @@ class TaskRuntime:
         self._sample_trace()
 
     # ------------------------------------------------------------------
-    # ready pool (DBF: per-worker deques + stealing)
+    # ready pool (DBF: per-worker lock-free StealDeques)
     def _push_ready(self, wd: WorkDescriptor) -> None:
-        with self._ready_lock:
-            self._ready[self._rr].append(wd)
-            self._rr = (self._rr + 1) % len(self._ready)
+        # Round-robin distribution; the unguarded _rr update is a benign
+        # race (any value it yields is a valid target index).
+        self._ready[self._rr].push(wd)
+        self._rr = (self._rr + 1) % len(self._ready)
 
     def _pop_ready(self, worker_id: int) -> Optional[WorkDescriptor]:
-        with self._ready_lock:
-            q = self._ready[worker_id]
-            if q:
-                return q.pop()
-            for other in self._ready:           # steal (FIFO end)
-                if other:
-                    return other.pop(0)
+        wd = self._ready[worker_id].pop()       # own deque: LIFO end
+        if wd is not None:
+            return wd
+        n = len(self._ready)
+        for off in range(1, n):                 # steal: FIFO end, O(1)
+            wd = self._ready[(worker_id + off) % n].steal()
+            if wd is not None:
+                return wd
         return None
 
     def ready_count(self) -> int:
         return sum(len(q) for q in self._ready)
 
     def in_graph_count(self) -> int:
+        if self.mode == "sharded":
+            return self.shard_graph.in_graph
         return sum(g.in_graph for g in self._graphs.values())
 
     def _sample_trace(self) -> None:
@@ -219,11 +245,14 @@ class TaskRuntime:
              label: str = "task") -> WorkDescriptor:
         """Create + submit a task (life-cycle steps 1-2)."""
         parent = getattr(_tls, "current", self._root)
-        wid = getattr(_tls, "worker_id", self.num_workers)
+        wid = self._current_wid()
         wd = WorkDescriptor(func=func, args=args, deps=_parse_deps(deps),
                             label=label, parent=parent)
         if self.mode == "sync":
             self.satisfy_submit(wd)            # direct, under the graph lock
+        elif self.mode == "sharded":
+            self.shard_router.route_submit(wd)  # to per-shard mailboxes
+            self._sample_trace()
         else:
             self.worker_queues[wid].submit.push(SubmitTaskMessage(wd))
         return wd
@@ -233,7 +262,7 @@ class TaskRuntime:
         blocked thread keeps working: executes ready tasks and (ddast)
         runs the manager callback — the paper's idle-thread philosophy."""
         parent = getattr(_tls, "current", self._root)
-        wid = getattr(_tls, "worker_id", self.num_workers)
+        wid = self._current_wid()
         while True:
             # account for children whose Submit message is still queued
             if parent.num_children_alive == 0 and not self._pending_msgs():
@@ -242,15 +271,25 @@ class TaskRuntime:
             if wd is not None:
                 self._execute(wd, wid)
                 continue
-            if self.mode == "ddast":
+            if self.mode in ("ddast", "sharded"):
                 self.dispatcher.notify_idle(wid)
             elif self.mode == "sync":
                 time.sleep(0)                   # busy-wait yield
             else:
                 time.sleep(1e-5)
 
+    def _current_wid(self) -> int:
+        """This thread's worker id, clamped to this runtime's queues: the
+        TLS is module-global, so a thread that last belonged to a larger
+        runtime would otherwise index out of range here."""
+        wid = getattr(_tls, "worker_id", self.num_workers)
+        return wid if wid < len(self.worker_queues) else self.num_workers
+
     def _pending_msgs(self) -> int:
-        return sum(wq.pending() for wq in self.worker_queues)
+        n = sum(wq.pending() for wq in self.worker_queues)
+        if self.shard_router is not None:
+            n += self.shard_router.pending()
+        return n
 
     # ------------------------------------------------------------------
     # execution
@@ -268,6 +307,9 @@ class TaskRuntime:
         self.stats.tasks_executed += 1
         if self.mode == "sync":
             self.satisfy_done(wd)              # direct, under the graph lock
+        elif self.mode == "sharded":
+            self.shard_router.route_done(wd)   # to per-shard mailboxes
+            self._sample_trace()
         else:
             self.worker_queues[worker_id].done.push(DoneTaskMessage(wd))
 
@@ -279,7 +321,7 @@ class TaskRuntime:
             if wd is not None:
                 self._execute(wd, worker_id)
                 continue
-            if self.mode == "ddast":
+            if self.mode in ("ddast", "sharded"):
                 self.dispatcher.notify_idle(worker_id)
                 self._sample_trace()
             time.sleep(0)                       # yield (busy-wait analogue)

@@ -1,0 +1,198 @@
+"""Shard router: per-shard mailboxes + the cross-shard join protocol.
+
+Message flow in ``sharded`` mode (compare Fig. 3 of the paper, where the
+mailboxes are per *worker*):
+
+    worker creates task ──route_submit──▶ mailbox of every shard its
+                                          regions hash to (FIFO, MPSC)
+    worker finishes task ─route_done────▶ same mailboxes
+    idle worker (manager) ──claims a shard──▶ drains its mailbox,
+                                          mutating ONLY that shard
+
+Exactly one manager drains a given mailbox at a time (``try_claim``, the
+per-shard analogue of the per-worker Submit-queue exclusivity flag of
+Listing 2 line 8). Because a region maps to exactly one shard and a
+parent's children are created by the single thread executing the parent,
+FIFO mailbox order preserves per-region submission order — the §3.1
+invariant the dependence rules require — while different shards proceed
+fully in parallel.
+
+Join protocol for a task whose deps span k shards:
+
+  * ``route_submit`` sets ``wd.shard_pending = k`` (the submit latch) and
+    ``wd.shard_done = k`` (the completion latch), then posts one
+    SubmitTaskMessage per shard. k == 0 (no deps) short-circuits to
+    ready.
+  * each shard's Submit processing atomically adds
+    ``local_pred_edges - 1``; the unique update that reaches 0 marks the
+    task ready (all shards inserted, no unsatisfied edge).
+  * each shard's Done processing subtracts 1 per satisfied edge of each
+    local successor, and subtracts 1 from the finished task's
+    ``shard_done``; the unique update reaching 0 completes the WD
+    (parent bookkeeping, graph occupancy).
+
+A predecessor recorded via two regions on two different shards yields
+two edges and, symmetrically, two decrements — counts balance, so the
+deduplication the single graph performs globally is only needed (and
+done) within each shard.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Callable, List, Optional, Union
+
+from ..messages import DoneTaskMessage, SubmitTaskMessage
+from ..wd import TaskState, WorkDescriptor
+from .sharded_graph import ShardedDependenceGraph, partition_deps
+from .steal_deque import AtomicCounter
+
+_Message = Union[SubmitTaskMessage, DoneTaskMessage]
+
+
+class ShardMailbox:
+    """MPSC FIFO message queue of one shard: every worker thread pushes
+    (CPython deque.append is atomic under the GIL), one draining manager
+    at a time pops (claim flag). Deliberately NOT an SPSCQueue — that
+    class's contract and counters assume a single producer."""
+
+    __slots__ = ("index", "_q", "_drain_flag", "messages_processed")
+
+    def __init__(self, index: int) -> None:
+        self.index = index
+        self._q: deque = deque()
+        self._drain_flag = threading.Lock()
+        # only the claiming manager mutates this, so a plain int is safe
+        self.messages_processed = 0
+
+    def push(self, msg: "_Message") -> None:
+        self._q.append(msg)
+
+    def pop(self) -> Optional["_Message"]:
+        try:
+            return self._q.popleft()
+        except IndexError:
+            return None
+
+    def try_claim(self) -> bool:
+        return self._drain_flag.acquire(blocking=False)
+
+    def release(self) -> None:
+        self._drain_flag.release()
+
+    def pending(self) -> int:
+        return len(self._q)
+
+
+class ShardRouter:
+    """Routes Submit/Done to shard mailboxes and applies the join
+    protocol when managers process them."""
+
+    def __init__(self, graph: ShardedDependenceGraph,
+                 on_ready: Callable[[WorkDescriptor], None]) -> None:
+        self.graph = graph
+        self.on_ready = on_ready
+        self.mailboxes: List[ShardMailbox] = [
+            ShardMailbox(i) for i in range(graph.num_shards)]
+
+    # -- producer side (any worker thread) -----------------------------
+    def route_submit(self, wd: WorkDescriptor) -> None:
+        # Partition the deps once; shards read wd.shard_parts on the hot
+        # path instead of re-hashing regions under their lock.
+        parts = partition_deps(wd, self.graph.num_shards)
+        wd.shard_parts = parts
+        k = len(parts)
+        # Both latches MUST be initialized before the first message is
+        # visible to a manager.
+        wd.shard_pending = AtomicCounter(k)
+        wd.shard_done = AtomicCounter(k)
+        wd.state = TaskState.SUBMITTED
+        self.graph.task_entered()
+        if k == 0:                       # dependence-free: ready now
+            wd.mark_ready()
+            self.on_ready(wd)
+            return
+        msg = SubmitTaskMessage(wd)
+        for s in parts:
+            self.mailboxes[s].push(msg)
+
+    def route_done(self, wd: WorkDescriptor) -> None:
+        parts = wd.shard_parts            # cached by route_submit
+        if not parts:                     # never entered any shard
+            self.graph.task_left()
+            wd.mark_completed()
+            return
+        msg = DoneTaskMessage(wd)
+        for s in parts:
+            self.mailboxes[s].push(msg)
+
+    # -- consumer side (the claiming manager) --------------------------
+    def process(self, shard_index: int, msg: _Message) -> None:
+        """Apply one message to one shard. Caller must hold the shard's
+        mailbox claim (single manager per shard)."""
+        shard = self.graph.shards[shard_index]
+        wd = msg.wd
+        if type(msg) is SubmitTaskMessage:
+            with shard.lock:
+                local_preds = shard.submit_local(wd)
+            # +local edges, -1 for this shard's latch unit
+            if wd.shard_pending.add(local_preds - 1) == 0:
+                wd.mark_ready()
+                self.on_ready(wd)
+        else:
+            with shard.lock:
+                succs = shard.complete_local(wd)
+            for s in succs:
+                if s.shard_pending.add(-1) == 0:
+                    s.mark_ready()
+                    self.on_ready(s)
+            if wd.shard_done.add(-1) == 0:
+                self.graph.task_left()
+                wd.mark_completed()
+        self.mailboxes[shard_index].messages_processed += 1
+
+    def drain_shard(self, shard_index: int, max_ops: int) -> int:
+        """Claim one shard and process up to ``max_ops`` messages.
+        Returns messages processed (0 if the shard was already claimed)."""
+        mb = self.mailboxes[shard_index]
+        if not mb.try_claim():
+            return 0
+        cnt = 0
+        try:
+            while cnt < max_ops:
+                msg = mb.pop()
+                if msg is None:
+                    break
+                self.process(shard_index, msg)
+                cnt += 1
+        finally:
+            mb.release()
+        return cnt
+
+    def drain_all(self) -> int:
+        """Drain every shard mailbox to empty (taskwait/shutdown edges)."""
+        n = 0
+        progress = True
+        while progress:
+            progress = False
+            for mb in self.mailboxes:
+                if not mb.try_claim():
+                    continue
+                try:
+                    while True:
+                        msg = mb.pop()
+                        if msg is None:
+                            break
+                        self.process(mb.index, msg)
+                        n += 1
+                        progress = True
+                finally:
+                    mb.release()
+        return n
+
+    def pending(self) -> int:
+        return sum(mb.pending() for mb in self.mailboxes)
+
+    @property
+    def messages_processed(self) -> int:
+        return sum(mb.messages_processed for mb in self.mailboxes)

@@ -1,0 +1,115 @@
+"""Lock-free primitives for the sharded dependence manager.
+
+``StealDeque`` is the per-worker ready pool of Distributed Breadth-First
+scheduling without the global ready lock the baseline runtime used: the
+owner pops LIFO from the hot end (cache-warm, newest task first) while
+thieves steal FIFO from the cold end (oldest task first — the classic
+Chase-Lev / Cilk discipline). In CPython ``collections.deque`` append /
+pop / popleft are each atomic under the GIL, so owner and thief never
+corrupt the structure; a concurrent pop+steal race on a single remaining
+element resolves to exactly one winner (the loser sees ``IndexError`` and
+reports empty). This also fixes the O(n) ``list.pop(0)`` steal of the
+previous implementation — ``popleft`` is O(1).
+
+``AtomicCounter`` is the per-WD pending-predecessor join counter used by
+cross-shard tasks: every shard portion of a Submit adds its local
+predecessor count, every satisfied edge subtracts one, and the unique
+caller that observes zero marks the task ready. CPython has no lock-free
+fetch-add, so a private lock guards the two-instruction update; the
+counter is per-task, touched only a handful of times, and therefore never
+a contention point (that is the whole idea of the subsystem).
+
+``stable_region_hash`` partitions regions across shards. ``hash()`` is
+salted per process for strings, which would make shard assignment — and
+with it every per-shard statistic — unreproducible across runs, so we
+hash the ``repr`` with crc32 instead: stable, cheap, and good enough
+spread for block-index tuples like ``("M", i, j)``.
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from collections import deque
+from typing import Any, Generic, Optional, TypeVar
+
+T = TypeVar("T")
+
+
+def stable_region_hash(key: Any) -> int:
+    """Deterministic (cross-process) non-negative hash of a region key.
+
+    crc32 alone is linear: two reprs differing in one digit produce a
+    fixed XOR delta that often misses the low bits, so ``% num_shards``
+    would lump adjacent block ids onto one shard. The murmur3 fmix32
+    finalizer below is nonlinear and spreads any input difference across
+    all 32 bits, making small-modulus partitioning uniform."""
+    h = zlib.crc32(repr(key).encode("utf-8", "backslashreplace"))
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h
+
+
+class AtomicCounter:
+    """Lock-guarded integer with a fetch-add that returns the new value."""
+
+    __slots__ = ("_value", "_lock")
+
+    def __init__(self, value: int = 0) -> None:
+        self._value = value
+        self._lock = threading.Lock()
+
+    def add(self, delta: int) -> int:
+        with self._lock:
+            self._value += delta
+            return self._value
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"AtomicCounter({self._value})"
+
+
+class StealDeque(Generic[T]):
+    """Per-worker ready deque: owner-side LIFO pop, thief-side FIFO steal.
+
+    Push may come from any thread (managers make tasks ready); deque
+    append is atomic, so no producer lock is needed either.
+    """
+
+    __slots__ = ("_q", "pushed", "popped", "stolen")
+
+    def __init__(self) -> None:
+        self._q: deque = deque()
+        self.pushed = 0
+        self.popped = 0
+        self.stolen = 0
+
+    def push(self, item: T) -> None:
+        self._q.append(item)
+        self.pushed += 1
+
+    def pop(self) -> Optional[T]:
+        """Owner side: newest task (LIFO — cache-warm end)."""
+        try:
+            item = self._q.pop()
+        except IndexError:
+            return None
+        self.popped += 1
+        return item
+
+    def steal(self) -> Optional[T]:
+        """Thief side: oldest task (FIFO — the breadth-first end)."""
+        try:
+            item = self._q.popleft()
+        except IndexError:
+            return None
+        self.stolen += 1
+        return item
+
+    def __len__(self) -> int:
+        return len(self._q)

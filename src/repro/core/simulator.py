@@ -6,9 +6,15 @@ threads. The simulator reproduces them in *virtual time*: N virtual cores,
 task durations in microseconds, critical sections serialized on virtual
 locks, and the three runtime organizations:
 
-  sync   Nanos++ baseline — graph mutated by workers under a global lock,
-  dast   centralized manager thread [7] (P cores = P-1 workers + 1 manager),
-  ddast  this paper — idle cores run the DDAST callback (Listing 2).
+  sync    Nanos++ baseline — graph mutated by workers under a global lock,
+  dast    centralized manager thread [7] (P cores = P-1 workers + 1 manager),
+  ddast   this paper — idle cores run the DDAST callback (Listing 2),
+  sharded the core.shards extension — the graph is partitioned by region
+          hash into S shards, each with its own virtual lock and mailbox;
+          idle cores claim whole shards. A task spanning k shards splits
+          its critical section k ways (base cost divided across portions,
+          per-dep cost charged where the dep lives), mirroring the real
+          runtime's join-latch protocol; lock waits are summed per shard.
 
 Cost constants default to values calibrated from the real threaded runtime
 on this machine (see benchmarks/bench_contention.py) and can be overridden.
@@ -24,10 +30,12 @@ inputs give identical makespans (required for hypothesis-based testing).
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .ddast import DDASTParams
+from .shards import stable_region_hash
 from .wd import DepMode
 
 # ---------------------------------------------------------------------------
@@ -82,7 +90,8 @@ class SimResult:
 
 class _Task:
     __slots__ = ("spec", "tid", "preds", "succs", "state", "parent",
-                 "pending_children")
+                 "pending_children", "shard_ids", "shard_parts",
+                 "done_pending")
 
     def __init__(self, spec: SimTaskSpec, tid: int, parent: Optional["_Task"]):
         self.spec = spec
@@ -92,6 +101,52 @@ class _Task:
         self.state = "created"
         self.parent = parent
         self.pending_children = 0
+        self.shard_ids: Tuple[int, ...] = ()   # sharded mode only
+        self.shard_parts: Dict[int, list] = {}  # shard -> local deps
+        self.done_pending = 0                  # sharded mode only
+
+
+def _reg_collect_and_register(regions: Dict[Any, Tuple[Optional[_Task],
+                                                       List[_Task]]],
+                              task: _Task, deps) -> set:
+    """The region dependence rules (same as depgraph.DependenceGraph):
+    collect RAW/WAW/WAR predecessors of `task` from `regions`, then
+    register it as last-writer/reader. Shared by the global virtual
+    graph and the per-shard region maps so the rules live once."""
+    preds = set()
+    for region, mode in deps:
+        lw, readers = regions.get(region, (None, []))
+        if mode.reads and lw is not None:
+            preds.add(lw)
+        if mode.writes:
+            if lw is not None:
+                preds.add(lw)
+            preds.update(readers)
+        if mode.writes:
+            regions[region] = (task, [])
+        elif mode.reads:
+            regions[region] = (lw, readers + [task])
+    preds.discard(task)
+    return preds
+
+
+def _reg_scrub(regions: Dict[Any, Tuple[Optional[_Task], List[_Task]]],
+               task: _Task, deps) -> None:
+    """Remove a completed `task` from the region records (shared by the
+    global virtual graph and the per-shard region maps)."""
+    for region, mode in deps:
+        ent = regions.get(region)
+        if ent is None:
+            continue
+        lw, readers = ent
+        if lw is task:
+            lw = None
+        if mode.reads and task in readers:
+            readers = [r for r in readers if r is not task]
+        if lw is None and not readers:
+            regions.pop(region, None)
+        else:
+            regions[region] = (lw, readers)
 
 
 class _VLock:
@@ -122,20 +177,8 @@ class _Graph:
         self.max_in_graph = 0
 
     def submit(self, task: _Task) -> bool:
-        preds = set()
-        for region, mode in task.spec.deps:
-            lw, readers = self._regions.get(region, (None, []))
-            if mode.reads and lw is not None:
-                preds.add(lw)
-            if mode.writes:
-                if lw is not None:
-                    preds.add(lw)
-                preds.update(readers)
-            if mode.writes:
-                self._regions[region] = (task, [])
-            elif mode.reads:
-                self._regions[region] = (lw, readers + [task])
-        preds.discard(task)
+        preds = _reg_collect_and_register(self._regions, task,
+                                          task.spec.deps)
         live = [p for p in preds if p.state != "completed"]
         task.preds = len(live)
         for p in live:
@@ -156,19 +199,7 @@ class _Graph:
                 s.state = "ready"
                 newly.append(s)
         task.succs = []
-        for region, mode in task.spec.deps:
-            ent = self._regions.get(region)
-            if ent is None:
-                continue
-            lw, readers = ent
-            if lw is task:
-                lw = None
-            if mode.reads and task in readers:
-                readers = [r for r in readers if r is not task]
-            if lw is None and not readers:
-                self._regions.pop(region, None)
-            else:
-                self._regions[region] = (lw, readers)
+        _reg_scrub(self._regions, task, task.spec.deps)
         self.in_graph -= 1
         task.state = "completed"
         return newly
@@ -188,18 +219,22 @@ class RuntimeSimulator:
     def __init__(self, num_cores: int, mode: str = "ddast",
                  params: Optional[DDASTParams] = None,
                  costs: Optional[SimCosts] = None,
-                 trace: bool = False) -> None:
-        assert mode in ("sync", "dast", "ddast")
+                 trace: bool = False,
+                 num_shards: Optional[int] = None) -> None:
+        assert mode in ("sync", "dast", "ddast", "sharded")
         self.P = num_cores
         self.mode = mode
         self.params = params or DDASTParams()
         self.costs = costs or SimCosts()
         self.trace_enabled = trace
+        if num_shards is not None and num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.num_shards = num_shards
 
     # -- public ---------------------------------------------------------
     def run(self, specs: List[SimTaskSpec]) -> SimResult:
         c, mode, P, params = self.costs, self.mode, self.P, self.params
-        max_mgr = (params.resolved_max_threads(P) if mode == "ddast"
+        max_mgr = (params.resolved_max_threads(P) if mode in ("ddast", "sharded")
                    else (1 if mode == "dast" else 0))
         dast_core = P - 1 if mode == "dast" else -1
 
@@ -227,6 +262,29 @@ class RuntimeSimulator:
         submit_busy = [False] * P
         ready: List[Tuple[float, int, _Task]] = []  # heap keyed by avail time
 
+        # ---- sharded-mode state (mirrors core.shards) -----------------
+        S = self.num_shards or P
+        shard_locks = [_VLock() for _ in range(S)]
+        # per-shard FIFO mailbox of (avail_time, kind, task); kind is
+        # "sub" or "done"; deque so the head-first drain is O(1)
+        shard_q: List[deque] = [deque() for _ in range(S)]
+        shard_busy = [False] * S               # one manager per shard
+        shard_regions: List[Dict[Any, Tuple[Optional[_Task], List[_Task]]]] = [
+            {} for _ in range(S)]
+        shard_succs: List[Dict[int, List[_Task]]] = [{} for _ in range(S)]
+        in_graph_s = [0]
+        max_in_graph_s = [0]
+
+        def partition_task(task: _Task) -> None:
+            """Hash each dep's region once; cache shard -> local deps
+            (mirrors shards.partition_deps, same bare-region keying)."""
+            parts: Dict[int, list] = {}
+            for region, m in task.spec.deps:
+                parts.setdefault(stable_region_hash(region) % S,
+                                 []).append((region, m))
+            task.shard_parts = parts
+            task.shard_ids = tuple(parts)
+
         # events: (time, seq, core, finished_task_or_None). Task completion
         # must be delivered as an event at its finish time — evaluating it
         # eagerly at start time would advance the virtual lock's `free_at`
@@ -246,7 +304,8 @@ class RuntimeSimulator:
 
         def sample(t: float) -> None:
             if self.trace_enabled:
-                trace.append((t, graph.in_graph, len(ready)))
+                ig = in_graph_s[0] if mode == "sharded" else graph.in_graph
+                trace.append((t, ig, len(ready)))
 
         def make_task(spec: SimTaskSpec, parent: Optional[_Task]) -> _Task:
             task = _Task(spec, tid_counter[0], parent)
@@ -277,10 +336,68 @@ class RuntimeSimulator:
             wake_all(end)
             return end
 
+        # ---- sharded graph operations in virtual time -----------------
+        def proc_submit_shard(task: _Task, s: int, t: float) -> float:
+            local = task.shard_parts[s]
+            hold = (c.submit_cs / len(task.shard_ids)
+                    + c.submit_cs_dep * len(local))
+            end = shard_locks[s].acquire(t, hold, c.lock_overhead)
+            preds = _reg_collect_and_register(shard_regions[s], task, local)
+            for p in preds:
+                shard_succs[s].setdefault(p.tid, []).append(task)
+            # join-latch arithmetic: +local edges, -1 for this shard's
+            # latch unit (task.preds was initialized to len(shard_ids))
+            task.preds += len(preds) - 1
+            if task.preds == 0:
+                task.state = "ready"
+                heapq.heappush(ready, (end, task.tid, task))
+            sample(end)
+            wake_all(end)
+            return end
+
+        def proc_done_shard(task: _Task, s: int, t: float) -> float:
+            local = task.shard_parts[s]
+            hold = (c.done_cs / len(task.shard_ids)
+                    + c.done_cs_dep * len(local))
+            end = shard_locks[s].acquire(t, hold, c.lock_overhead)
+            _reg_scrub(shard_regions[s], task, local)
+            for succ in shard_succs[s].pop(task.tid, []):
+                succ.preds -= 1
+                if succ.preds == 0 and succ.state == "submitted":
+                    succ.state = "ready"
+                    heapq.heappush(ready, (end, succ.tid, succ))
+            task.done_pending -= 1
+            if task.done_pending == 0:          # last shard portion
+                task.state = "completed"
+                in_graph_s[0] -= 1
+                if task.parent is not None:
+                    task.parent.pending_children -= 1
+                completed[0] += 1
+            sample(end)
+            wake_all(end)
+            return end
+
         def submit_task(core: int, task: _Task, t: float) -> float:
             if mode == "sync":
                 polluted[core] = True
                 return proc_submit(task, t)
+            if mode == "sharded":
+                partition_task(task)
+                sids = task.shard_ids
+                task.preds = len(sids)          # submit latch
+                task.done_pending = len(sids)
+                task.state = "submitted"
+                in_graph_s[0] += 1
+                max_in_graph_s[0] = max(max_in_graph_s[0], in_graph_s[0])
+                tp = t + c.push
+                if not sids:                    # dependence-free
+                    task.state = "ready"
+                    heapq.heappush(ready, (tp, task.tid, task))
+                else:
+                    for s in sids:
+                        shard_q[s].append((tp, "sub", task))
+                wake_all(tp)
+                return tp
             submit_q[core].append((t + c.push, task))
             wake_all(t + c.push)
             return t + c.push
@@ -290,6 +407,19 @@ class RuntimeSimulator:
             if mode == "sync":
                 polluted[core] = True
                 return proc_done(task, t)
+            if mode == "sharded":
+                tp = t + c.push
+                if not task.shard_ids:          # never entered any shard
+                    task.state = "completed"
+                    in_graph_s[0] -= 1
+                    if task.parent is not None:
+                        task.parent.pending_children -= 1
+                    completed[0] += 1
+                else:
+                    for s in task.shard_ids:
+                        shard_q[s].append((tp, "done", task))
+                wake_all(tp)
+                return tp
             done_q[core].append((t + c.push, task))
             wake_all(t + c.push)
             return t + c.push
@@ -333,6 +463,43 @@ class RuntimeSimulator:
                 polluted[core] = True
             return t
 
+        # ---- sharded callback: idle cores claim whole shards ----------
+        def run_callback_sharded(core: int, t: float) -> float:
+            if active_mgr[0] >= max_mgr:
+                return t
+            active_mgr[0] += 1
+            did_work = False
+            spins = params.max_spins
+            while True:
+                total_cnt = 0
+                for off in range(S):
+                    if len(ready) >= params.min_ready_tasks:
+                        break
+                    s = (core + off) % S        # spread managers out
+                    if shard_busy[s]:
+                        continue
+                    shard_busy[s] = True
+                    cnt = 0
+                    while (cnt < params.max_ops_thread and shard_q[s]
+                           and shard_q[s][0][0] <= t):
+                        _, kind, task = shard_q[s].popleft()
+                        proc = (proc_submit_shard if kind == "sub"
+                                else proc_done_shard)
+                        t = proc(task, s, t + c.msg_overhead)
+                        messages[0] += 1
+                        cnt += 1
+                    shard_busy[s] = False
+                    total_cnt += cnt
+                if total_cnt:
+                    did_work = True
+                spins = (spins - 1) if total_cnt == 0 else params.max_spins
+                if spins == 0 or len(ready) >= params.min_ready_tasks:
+                    break
+            active_mgr[0] -= 1
+            if did_work:
+                polluted[core] = True
+            return t
+
         def drain_dast(t: float) -> float:
             progress = True
             t2 = t
@@ -358,6 +525,12 @@ class RuntimeSimulator:
 
         def earliest_msg() -> Optional[float]:
             best: Optional[float] = None
+            if mode == "sharded":
+                for s in range(S):
+                    q = shard_q[s]
+                    if q and (best is None or q[0][0] < best):
+                        best = q[0][0]
+                return best
             for w in range(P):
                 for q in (submit_q[w], done_q[w]):
                     if q and (best is None or q[0][0] < best):
@@ -413,9 +586,11 @@ class RuntimeSimulator:
             if ready:                            # ready item not visible yet
                 schedule(ready[0][0], core)
                 return
-            # 3. idle: become a manager (ddast) or sleep until state change
-            if mode == "ddast":
-                t2 = run_callback(core, t)
+            # 3. idle: become a manager (ddast/sharded) or sleep until
+            # state change
+            if mode in ("ddast", "sharded"):
+                cb = run_callback if mode == "ddast" else run_callback_sharded
+                t2 = cb(core, t)
                 if t2 > t:
                     schedule(t2, core)
                     return
@@ -444,6 +619,18 @@ class RuntimeSimulator:
             if guard > 100_000_000:  # pragma: no cover
                 raise RuntimeError("simulator exceeded event budget")
 
+        if mode == "sharded":
+            makespan = max(makespan, *(l.free_at for l in shard_locks))
+            return SimResult(
+                makespan_us=makespan,
+                serial_us=serial_us[0],
+                tasks=total_tasks[0],
+                lock_wait_us=sum(l.wait_us for l in shard_locks),
+                lock_acquisitions=sum(l.acquisitions for l in shard_locks),
+                messages=messages[0],
+                max_in_graph=max_in_graph_s[0],
+                trace=trace,
+            )
         makespan = max(makespan, glock.free_at)
         return SimResult(
             makespan_us=makespan,

@@ -28,6 +28,19 @@ from .wd import DepMode
 IN, OUT, INOUT = DepMode.IN, DepMode.OUT, DepMode.INOUT
 
 
+def sim_app_specs(app: str, scale: Optional[int] = None) -> List[SimTaskSpec]:
+    """Named access to the three paper app graphs at a given scale —
+    the sweep axis used by benchmarks/bench_shards.py and the CI smoke
+    run. ``scale`` is nb for matmul/sparselu and nblocks for nbody."""
+    if app == "matmul":
+        return sim_matmul_specs(scale or 8, dur_us=100.0)
+    if app == "nbody":
+        return sim_nbody_specs(scale or 8, timesteps=2)
+    if app == "sparselu":
+        return sim_sparselu_specs(scale or 10)
+    raise ValueError(f"unknown app {app!r} (matmul|nbody|sparselu)")
+
+
 # ===========================================================================
 # Matmul (§4.2.1): C[i,j] += A[i,k] @ B[k,j]
 # ===========================================================================

@@ -66,10 +66,27 @@ class WorkDescriptor:
     num_children_alive: int = 0
     children_done_event: Optional[threading.Event] = None
     result: Any = None
+    # Sharded-mode bookkeeping (core.shards), set by the ShardRouter at
+    # submit time; None in every other mode.
+    #   shard_pending — submit latch + unsatisfied predecessor edges;
+    #                   the unique decrement to 0 marks the task ready.
+    #   shard_done    — per-shard Done portions outstanding; the unique
+    #                   decrement to 0 completes the WD.
+    #   shard_parts   — {shard_index: [(map_key, mode), ...]} dep
+    #                   partition, hashed once so shards never re-hash.
+    shard_pending: Any = None
+    shard_done: Any = None
+    shard_parts: Any = None
+    # Guards num_children_alive: in dast/ddast/sharded modes sibling
+    # completions are processed by concurrent managers, so the +1/-1
+    # pair below must be atomic with respect to each other.
+    _children_lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False)
 
     def __post_init__(self) -> None:
         if self.parent is not None:
-            self.parent.num_children_alive += 1
+            with self.parent._children_lock:
+                self.parent.num_children_alive += 1
 
     # ---- life-cycle transitions -------------------------------------
     def mark_ready(self) -> None:
@@ -90,8 +107,10 @@ class WorkDescriptor:
             self.parent._child_completed()
 
     def _child_completed(self) -> None:
-        self.num_children_alive -= 1
-        if self.num_children_alive == 0 and self.children_done_event is not None:
+        with self._children_lock:
+            self.num_children_alive -= 1
+            alive = self.num_children_alive
+        if alive == 0 and self.children_done_event is not None:
             self.children_done_event.set()
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid

@@ -6,7 +6,9 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import DDASTParams, TaskRuntime
 from repro.core.autotune import DynamicTuner, TunerConfig

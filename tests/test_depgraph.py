@@ -1,7 +1,9 @@
 """Unit + property tests for the dependence graph (paper §2.2.1 semantics)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.depgraph import DependenceGraph
 from repro.core.wd import DepMode, TaskState, WorkDescriptor

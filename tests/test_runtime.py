@@ -1,4 +1,4 @@
-"""Integration tests: the real threaded runtime in all three modes, the
+"""Integration tests: the real threaded runtime in all four modes, the
 paper's three applications, and the simulator's qualitative claims."""
 import numpy as np
 import pytest
@@ -8,7 +8,7 @@ from repro.core.taskgraph_apps import (
     nbody_oracle, run_matmul, run_nbody, run_sparselu, sim_matmul_specs,
     sim_nbody_specs, sim_sparselu_specs, sparselu_oracle)
 
-MODES = ("sync", "dast", "ddast")
+MODES = ("sync", "dast", "ddast", "sharded")
 
 
 @pytest.mark.parametrize("mode", MODES)

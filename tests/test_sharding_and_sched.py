@@ -6,8 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import ARCHS, get_config, tiny_config
 from repro.core.static_sched import DagNode, ddast_schedule, \
