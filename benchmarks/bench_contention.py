@@ -2,17 +2,40 @@
 runtime's critical-section costs and lock contention on this host.
 
 Emits the µs-scale constants that SimCosts defaults are calibrated from,
-plus lock-wait statistics for sync vs ddast with real threads."""
+plus lock-wait statistics for sync vs ddast with real threads.
+
+Standalone::
+
+    PYTHONPATH=src python benchmarks/bench_contention.py --calibrate
+
+prints the measured per-shard-portion overhead — the constant that
+``SimCosts.portion_overhead`` models. The simulator used to charge an
+idealized ``submit_cs / k`` per shard portion of a cross-shard task,
+i.e. splitting a task across k shards was free; in the real runtime each
+extra portion pays for mailbox dispatch, join-latch arithmetic and an
+extra lock acquisition. The calibration isolates exactly that: the same
+tasks with the same dependence count are pushed through a 1-shard router
+(one portion per task) and a many-shard router (~k portions per task),
+so the per-dependence cost cancels and the slope is the per-portion
+overhead.
+"""
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
 
-import numpy as np
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import DDASTParams, TaskRuntime
-from repro.core.depgraph import DependenceGraph
-from repro.core.queues import SPSCQueue
-from repro.core.wd import DepMode, WorkDescriptor
+import numpy as np  # noqa: F401,E402  (parity with sibling benches)
+
+from repro.core import DDASTParams, TaskRuntime  # noqa: F401,E402
+from repro.core.depgraph import DependenceGraph  # noqa: E402
+from repro.core.queues import SPSCQueue  # noqa: E402
+from repro.core.shards import (ShardRouter,  # noqa: E402
+                               ShardedDependenceGraph)
+from repro.core.wd import DepMode, WorkDescriptor  # noqa: E402
 
 
 def calibrate() -> dict:
@@ -43,6 +66,47 @@ def calibrate() -> dict:
             "submit_cs_us": submit_us, "done_cs_us": done_us}
 
 
+def calibrate_portion(tasks: int = 4000, k: int = 4) -> dict:
+    """Measure the fixed cost of one extra shard portion
+    (``SimCosts.portion_overhead``): identical k-dependence tasks through
+    a 1-shard router (1 portion each) vs a 64-shard router (~k portions
+    each); the per-dependence work cancels in the difference."""
+
+    def measure(num_shards: int):
+        graph = ShardedDependenceGraph(num_shards)
+        router = ShardRouter(graph, on_ready=lambda wd: None)
+        root = WorkDescriptor(func=None, label="root")
+        wds = []
+        for i in range(tasks):
+            deps = tuple((("r", j, i % 61), DepMode.INOUT)
+                         for j in range(k))
+            wds.append(WorkDescriptor(func=None, deps=deps, parent=root))
+        t0 = time.perf_counter()
+        for wd in wds:
+            router.route_submit(wd)
+        router.drain_all()
+        for wd in wds:
+            wd.mark_finished()
+            router.route_done(wd)
+        router.drain_all()
+        elapsed_us = (time.perf_counter() - t0) * 1e6
+        portions = sum(len(wd.shard_parts) for wd in wds) * 2  # sub + done
+        return elapsed_us, portions
+
+    t1, p1 = measure(1)
+    tk, pk = measure(64)
+    if pk <= p1:                        # degenerate hash collapse
+        return {"portion_overhead_us": 0.0, "portions_single": p1,
+                "portions_spread": pk}
+    return {
+        "portion_overhead_us": (tk - t1) / (pk - p1),
+        "portions_single": p1,
+        "portions_spread": pk,
+        "per_task_single_us": t1 / tasks,
+        "per_task_spread_us": tk / tasks,
+    }
+
+
 def lock_contention(num_workers: int = 4, tasks: int = 600) -> dict:
     """Real threads: same independent-task workload under sync vs ddast;
     report graph-lock acquisitions + wait time."""
@@ -70,10 +134,41 @@ def lock_contention(num_workers: int = 4, tasks: int = 600) -> dict:
 
 def run(csv_rows: list) -> None:
     cal = calibrate()
-    for k, v in cal.items():
-        csv_rows.append((f"calibrate.{k}", v, ""))
+    for key, v in cal.items():
+        csv_rows.append((f"calibrate.{key}", v, ""))
+    por = calibrate_portion()
+    csv_rows.append(("calibrate.portion_overhead_us",
+                     por["portion_overhead_us"],
+                     f"portions {por['portions_single']}->"
+                     f"{por['portions_spread']}"))
     lc = lock_contention()
     for mode, st in lc.items():
         csv_rows.append((f"contention.{mode}.lock_wait_ms",
                          st["lock_wait_ms"],
                          f"acq={st['lock_acq']} msgs={st['msgs']}"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure the per-shard-portion overhead from the "
+                         "threaded runtime and print the value to use for "
+                         "SimCosts.portion_overhead")
+    args = ap.parse_args()
+    if args.calibrate:
+        por = calibrate_portion()
+        print(f"measured portion_overhead: "
+              f"{por['portion_overhead_us']:.3f} us/portion "
+              f"({por['portions_single']} -> {por['portions_spread']} "
+              f"portions)")
+        print(f"suggested: SimCosts(portion_overhead="
+              f"{por['portion_overhead_us']:.2f})")
+        return
+    rows: list = []
+    run(rows)
+    for name, value, note in rows:
+        print(f"{name:42s} {value:10.4f}  {note}")
+
+
+if __name__ == "__main__":
+    main()

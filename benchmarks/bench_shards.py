@@ -1,12 +1,16 @@
-"""Shard-count × worker sweep for the sharded dependence manager.
+"""Shard-count × worker × batch-size sweep for the sharded manager.
 
 Simulated (virtual-time) sweep over the paper's three app graphs
 (matmul / N-Body / sparse LU from ``taskgraph_apps``) comparing the four
-runtime organizations, with the shard-count axis for ``sharded``. The
-headline number is total graph-lock wait: ``sync`` reports the global
-lock's wait, ``sharded`` the per-shard waits summed — directly
-comparable contention metrics. A small real-threaded section measures
-the same quantities on this host's actual cores.
+runtime organizations, with the shard-count and Submit-batch axes for
+``sharded``. The headline numbers are total graph-lock wait (``sync``
+reports the global lock's wait, ``sharded`` the per-shard waits summed —
+directly comparable contention metrics) and mailbox message counts: at
+64 shards a cross-shard task pays one ``msg_overhead`` per shard
+portion, the cliff that Submit batching (one ``SubmitBatchMessage``
+carrying up to ``batch_size`` portions per mailbox entry) flattens. A
+small real-threaded section measures the same quantities on this host's
+actual cores.
 
 Standalone:
 
@@ -15,6 +19,10 @@ Standalone:
     ... [--out BENCH_shards.json]
 
 or as a suite inside ``python -m benchmarks.run --only shards``.
+
+Exit status doubles as the CI gate: non-zero when the sharded
+organization's summed lock wait stops undercutting sync at 8 workers on
+matmul, or when batching stops reducing the 16-shard message count.
 """
 from __future__ import annotations
 
@@ -34,18 +42,21 @@ FULL = {
     "apps": {"matmul": 8, "nbody": 8, "sparselu": 10},
     "workers": (2, 8, 16, 32),
     "shards": (1, 4, 16, 64),
+    "batches": (None, 4, 16),
     "real_tasks": 600,
 }
 SMOKE = {
     "apps": {"matmul": 6, "nbody": 4, "sparselu": 8},
     "workers": (8,),
     "shards": (4, 16),
+    "batches": (None, 8),
     "real_tasks": 200,
 }
 
 
 def sim_sweep(cfg: dict) -> list:
-    """Virtual-time sweep; one record per (app, workers, mode[, shards])."""
+    """Virtual-time sweep; one record per
+    (app, workers, mode[, shards[, batch]])."""
     records = []
     for app, scale in cfg["apps"].items():
         for p in cfg["workers"]:
@@ -53,6 +64,7 @@ def sim_sweep(cfg: dict) -> list:
                 r = RuntimeSimulator(p, mode).run(sim_app_specs(app, scale))
                 records.append({
                     "app": app, "workers": p, "mode": mode, "shards": None,
+                    "batch": None,
                     "tasks": r.tasks, "speedup": round(r.speedup, 3),
                     "makespan_us": round(r.makespan_us, 1),
                     "lock_wait_us": round(r.lock_wait_us, 2),
@@ -60,23 +72,26 @@ def sim_sweep(cfg: dict) -> list:
                     "messages": r.messages,
                 })
             for nshards in cfg["shards"]:
-                r = RuntimeSimulator(p, "sharded", num_shards=nshards).run(
-                    sim_app_specs(app, scale))
-                records.append({
-                    "app": app, "workers": p, "mode": "sharded",
-                    "shards": nshards,
-                    "tasks": r.tasks, "speedup": round(r.speedup, 3),
-                    "makespan_us": round(r.makespan_us, 1),
-                    "lock_wait_us": round(r.lock_wait_us, 2),
-                    "lock_acq": r.lock_acquisitions,
-                    "messages": r.messages,
-                })
+                for batch in cfg["batches"]:
+                    r = RuntimeSimulator(p, "sharded", num_shards=nshards,
+                                         batch_size=batch).run(
+                        sim_app_specs(app, scale))
+                    records.append({
+                        "app": app, "workers": p, "mode": "sharded",
+                        "shards": nshards, "batch": batch,
+                        "tasks": r.tasks, "speedup": round(r.speedup, 3),
+                        "makespan_us": round(r.makespan_us, 1),
+                        "lock_wait_us": round(r.lock_wait_us, 2),
+                        "lock_acq": r.lock_acquisitions,
+                        "messages": r.messages,
+                    })
     return records
 
 
 def real_sweep(cfg: dict) -> list:
     """Real threads on this host: independent-chain workload, graph-lock
-    wait under sync vs sharded (per-shard waits summed)."""
+    wait under sync vs sharded (per-shard waits summed), batched and
+    not."""
     records = []
 
     def spin():
@@ -86,15 +101,22 @@ def real_sweep(cfg: dict) -> list:
         return x
 
     tasks = cfg["real_tasks"]
-    for mode, nshards in (("sync", None), ("ddast", None),
-                          ("sharded", 4), ("sharded", 16)):
-        kw = {"num_shards": nshards} if nshards else {}
+    for mode, nshards, batch in (("sync", None, None),
+                                 ("ddast", None, None),
+                                 ("sharded", 4, None),
+                                 ("sharded", 16, None),
+                                 ("sharded", 16, 8)):
+        kw = {}
+        if nshards:
+            kw["num_shards"] = nshards
+        if batch:
+            kw["batch_size"] = batch
         with TaskRuntime(num_workers=4, mode=mode, **kw) as rt:
             for i in range(tasks):
                 rt.task(spin, deps=[((i % 97,), DepMode.INOUT)])
             rt.taskwait()
         records.append({
-            "mode": mode, "shards": nshards, "tasks": tasks,
+            "mode": mode, "shards": nshards, "batch": batch, "tasks": tasks,
             "wall_s": round(rt.stats.wall_s, 4),
             "lock_wait_ms": round(rt.stats.lock_wait_s * 1e3, 4),
             "lock_acq": rt.stats.lock_acquisitions,
@@ -104,26 +126,42 @@ def real_sweep(cfg: dict) -> list:
 
 
 def acceptance(sim_records: list) -> dict:
-    """The check ISSUE.md gates on: at 8 workers on the matmul graph the
+    """The checks CI gates on: (1) at 8 workers on the matmul graph the
     sharded organization's summed per-shard lock wait must undercut the
-    sync global lock's wait."""
+    sync global lock's wait; (2) batched sharded runs must not process
+    more mailbox entries than unbatched at 16 shards."""
     sync8 = [r for r in sim_records
              if r["app"] == "matmul" and r["workers"] == 8
              and r["mode"] == "sync"]
     shard8 = [r for r in sim_records
               if r["app"] == "matmul" and r["workers"] == 8
-              and r["mode"] == "sharded"]
-    if not sync8 or not shard8:
-        return {"checked": False}
-    best = min(shard8, key=lambda r: r["lock_wait_us"])
-    return {
-        "checked": True,
-        "sync_lock_wait_us": sync8[0]["lock_wait_us"],
-        "sharded_best_lock_wait_us": best["lock_wait_us"],
-        "sharded_best_shards": best["shards"],
-        "sharded_lock_wait_lt_sync":
-            best["lock_wait_us"] < sync8[0]["lock_wait_us"],
-    }
+              and r["mode"] == "sharded" and not r["batch"]]
+    out = {"checked": bool(sync8 and shard8)}
+    if sync8 and shard8:
+        best = min(shard8, key=lambda r: r["lock_wait_us"])
+        out.update({
+            "sync_lock_wait_us": sync8[0]["lock_wait_us"],
+            "sharded_best_lock_wait_us": best["lock_wait_us"],
+            "sharded_best_shards": best["shards"],
+            "sharded_lock_wait_lt_sync":
+                best["lock_wait_us"] < sync8[0]["lock_wait_us"],
+        })
+    s16 = [r for r in sim_records
+           if r["mode"] == "sharded" and r["shards"] == 16
+           and r["app"] == "matmul" and r["workers"] == 8]
+    unb = [r for r in s16 if not r["batch"]]
+    bat = [r for r in s16 if r["batch"]]
+    out["batch_checked"] = bool(unb and bat)
+    if unb and bat:
+        best_b = min(bat, key=lambda r: r["messages"])
+        out.update({
+            "unbatched_messages_16": unb[0]["messages"],
+            "batched_messages_16": best_b["messages"],
+            "batched_batch_size": best_b["batch"],
+            "batched_le_unbatched":
+                best_b["messages"] <= unb[0]["messages"],
+        })
+    return out
 
 
 def collect(smoke: bool, with_real: bool = True) -> dict:
@@ -146,17 +184,21 @@ def run(csv_rows: list) -> None:
     out = collect(smoke=True)
     for r in out["sim"]:
         tag = (f"shards.sim.{r['app']}.p{r['workers']}.{r['mode']}"
-               + (f".s{r['shards']}" if r["shards"] else ""))
+               + (f".s{r['shards']}" if r["shards"] else "")
+               + (f".b{r['batch']}" if r["batch"] else ""))
         csv_rows.append((f"{tag}.lock_wait_us", r["lock_wait_us"],
-                         f"speedup={r['speedup']}"))
+                         f"speedup={r['speedup']} msgs={r['messages']}"))
     for r in out["real"]:
         tag = (f"shards.real.{r['mode']}"
-               + (f".s{r['shards']}" if r["shards"] else ""))
+               + (f".s{r['shards']}" if r["shards"] else "")
+               + (f".b{r['batch']}" if r["batch"] else ""))
         csv_rows.append((f"{tag}.lock_wait_ms", r["lock_wait_ms"],
                          f"msgs={r['messages']}"))
     acc = out["acceptance"]
     csv_rows.append(("shards.acceptance.sharded_lock_wait_lt_sync",
                      int(acc.get("sharded_lock_wait_lt_sync", False)), ""))
+    csv_rows.append(("shards.acceptance.batched_le_unbatched",
+                     int(acc.get("batched_le_unbatched", False)), ""))
 
 
 def main() -> None:
@@ -174,14 +216,23 @@ def main() -> None:
     acc = out["acceptance"]
     print(f"wrote {args.out} ({len(out['sim'])} sim + "
           f"{len(out['real'])} real records, {out['bench_wall_s']}s)")
+    failed = False
     if acc.get("checked"):
         print(f"matmul @ 8 workers: sync lock wait "
               f"{acc['sync_lock_wait_us']}us vs sharded "
               f"{acc['sharded_best_lock_wait_us']}us "
               f"(S={acc['sharded_best_shards']}) -> "
               f"{'OK' if acc['sharded_lock_wait_lt_sync'] else 'REGRESSION'}")
-        if not acc["sharded_lock_wait_lt_sync"]:
-            sys.exit(1)
+        failed |= not acc["sharded_lock_wait_lt_sync"]
+    if acc.get("batch_checked"):
+        print(f"matmul @ 8 workers, 16 shards: unbatched "
+              f"{acc['unbatched_messages_16']} msgs vs batched "
+              f"{acc['batched_messages_16']} "
+              f"(batch={acc['batched_batch_size']}) -> "
+              f"{'OK' if acc['batched_le_unbatched'] else 'REGRESSION'}")
+        failed |= not acc["batched_le_unbatched"]
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,20 @@
 """Figs 5-8 / Table 5 reproduction: sweep each DDAST parameter (doubling
 1..128, as in the paper) with the others at their tuned defaults, on
 Matmul + Sparse LU at the two largest thread counts (the paper's most
-interesting configurations)."""
+interesting configurations).
+
+Also exercises the online ``num_shards`` hill-climb of ``DynamicTuner``
+over the sharded policy: a phased real-threaded workload where the tuner
+doubles/halves the shard count at taskwait quiescence until the
+lock-wait-per-message metric brackets its optimum and settles — the
+convergence trajectory is the benchmark output.
+"""
 from __future__ import annotations
 
-from repro.core import DDASTParams, RuntimeSimulator
+from repro.core import (DDASTParams, DynamicTuner, RuntimeSimulator,
+                        TaskRuntime, TunerConfig)
 from repro.core.taskgraph_apps import sim_matmul_specs, sim_sparselu_specs
+from repro.core.wd import DepMode
 
 SWEEP = (1, 2, 4, 8, 16, 32, 64, 128)
 THREADS = (32, 64)
@@ -33,6 +42,32 @@ def sweep_param(param: str) -> dict:
     return out
 
 
+def shard_convergence(phases: int = 12, tasks: int = 400,
+                      workers: int = 4) -> list:
+    """Phased chained workload on the real threaded runtime with the
+    shard hill-climb active; returns the num_shards trajectory (one entry
+    per phase, observed after the phase's taskwait quiescence)."""
+
+    def spin():
+        x = 0.0
+        for i in range(150):
+            x += i * i
+        return x
+
+    traj = []
+    with TaskRuntime(num_workers=workers, mode="sharded",
+                     num_shards=2) as rt:
+        tuner = DynamicTuner(rt, TunerConfig(interval_s=0.0,
+                                             shard_min_messages=64))
+        for _ in range(phases):
+            for i in range(tasks):
+                rt.task(spin, deps=[((i % 97,), DepMode.INOUT)])
+            rt.taskwait()
+            traj.append(rt.policy.num_shards)
+        traj.append(1 if tuner.shards_settled else 0)  # settled flag last
+    return traj
+
+
 def run(csv_rows: list) -> None:
     for param, tuned in (("max_ddast_threads", "num_threads/8"),
                          ("max_spins", 1),
@@ -47,3 +82,16 @@ def run(csv_rows: list) -> None:
                     f"tuning.{param}.{app}.{p}t", best_val,
                     f"tuned_default={tuned} rel_speedup@1..128 "
                     + "/".join(curve)))
+    traj = shard_convergence()
+    settled = traj.pop()
+    csv_rows.append(("tuning.num_shards.final", traj[-1],
+                     "traj=" + "/".join(map(str, traj))))
+    csv_rows.append(("tuning.num_shards.settled", settled,
+                     "hill-climb bracketed its optimum"))
+
+
+if __name__ == "__main__":
+    traj = shard_convergence()
+    settled = traj.pop()
+    print("num_shards trajectory:", " -> ".join(map(str, traj)),
+          "(settled)" if settled else "(still moving)")

@@ -1,13 +1,20 @@
 """Core of the reproduction: the paper's asynchronous runtime organization
-with a distributed manager (DDAST), the sharded dependence-manager
-extension (region-hash-partitioned graphs, per-shard mailboxes,
-lock-free ready deques), plus its simulator and the static scheduling
+with a distributed manager (DDAST), unified behind the mode-agnostic
+dependence-policy engine (``core.engine``: one ``DependencePolicy`` per
+organization, shared verbatim by the threaded ``TaskRuntime`` and the
+virtual-time ``RuntimeSimulator``), the sharded dependence-manager
+extension (region-hash-partitioned graphs, per-shard mailboxes with
+batched Submits, lock-free ready deques), plus the static scheduling
 adaptation for device DAGs."""
 from .autotune import DynamicTuner, TunerConfig
 from .ddast import DDASTManager, DDASTParams
 from .depgraph import DependenceGraph
 from .dispatcher import FunctionalityDispatcher
-from .messages import DoneTaskMessage, SubmitTaskMessage
+from .engine import (CostCharger, DastPolicy, DdastPolicy, DependencePolicy,
+                     PlacementPolicy, RoundRobinPlacement, ShardAffinePlacement,
+                     ShardedPolicy, SimCharger, SyncPolicy, make_placement,
+                     make_policy)
+from .messages import DoneTaskMessage, SubmitBatchMessage, SubmitTaskMessage
 from .queues import InstrumentedLock, SPSCQueue, WorkerQueues
 from .runtime import RuntimeStats, TaskRuntime
 from .shards import (AtomicCounter, GraphShard, ShardMailbox, ShardRouter,
@@ -19,7 +26,13 @@ from .wd import DepMode, TaskState, WorkDescriptor
 __all__ = [
     "DynamicTuner", "TunerConfig",
     "DDASTManager", "DDASTParams", "DependenceGraph",
-    "FunctionalityDispatcher", "DoneTaskMessage", "SubmitTaskMessage",
+    "FunctionalityDispatcher",
+    "CostCharger", "SimCharger",
+    "DependencePolicy", "SyncPolicy", "DastPolicy", "DdastPolicy",
+    "ShardedPolicy", "make_policy",
+    "PlacementPolicy", "RoundRobinPlacement", "ShardAffinePlacement",
+    "make_placement",
+    "DoneTaskMessage", "SubmitBatchMessage", "SubmitTaskMessage",
     "InstrumentedLock", "SPSCQueue", "WorkerQueues",
     "RuntimeStats", "TaskRuntime",
     "AtomicCounter", "GraphShard", "ShardMailbox", "ShardRouter",

@@ -11,19 +11,25 @@ and adjust the DDASTParams in place:
   * queues near-empty -> decay managers toward the tuned static default
     (num_threads/8) to recover locality (paper §5.1's finding).
 
-All adjustments are bounded and hysteretic so the controller cannot
-oscillate; the tuned static defaults remain the fixed point under calm
-load.
+Since the unified policy engine, the tuner also hill-climbs the sharded
+policy's ``num_shards`` online: at taskwait quiescence (the dispatcher's
+``notify_quiescent`` hook — the only moment ``ShardedPolicy.resize`` is
+legal) it reads the single ``ShardedPolicy.stats()`` dict, computes the
+lock-wait cost per processed message since the previous adjustment, and
+doubles/halves the shard count in the improving direction. Two
+consecutive direction flips mean the optimum is bracketed and the
+controller settles — the same bounded-hysteresis discipline as the
+manager-thread loop, so it cannot oscillate.
+
+All adjustments are bounded and hysteretic; the tuned static defaults
+remain the fixed point under calm load.
 """
 from __future__ import annotations
 
-import math
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, List, Tuple
-
-from .ddast import DDASTParams
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, List, Optional, Tuple
 
 if TYPE_CHECKING:  # pragma: no cover
     from .runtime import TaskRuntime
@@ -36,6 +42,11 @@ class TunerConfig:
     backlog_low: int = 2
     ops_step: int = 4
     max_ops: int = 64
+    # -- num_shards hill-climb (sharded policy only) --------------------
+    tune_shards: bool = True
+    shard_min_messages: int = 64    # min msgs between shard adjustments
+    shard_improve_eps: float = 0.05  # relative improvement to keep going
+    shard_cap: Optional[int] = None  # default: max(64, 4 * num_workers)
 
 
 class DynamicTuner:
@@ -53,6 +64,17 @@ class DynamicTuner:
             p.max_ddast_threads = self._static_mgr
         runtime.dispatcher.register("ddast-autotune", self.callback,
                                     priority=0)
+        # -- shard-count controller state -------------------------------
+        self.shard_adjustments: List[Tuple[float, int]] = []
+        self._shard_dir = 1            # +1: double, -1: halve
+        self._shard_flips = 0
+        self._shard_settled = False
+        self._shard_prev_metric: Optional[float] = None
+        self._m0 = 0                   # messages at last adjustment
+        self._w0 = 0.0                 # lock wait at last adjustment
+        if cfg.tune_shards and hasattr(runtime.policy, "resize"):
+            runtime.dispatcher.register_quiescent(
+                "shard-autotune", self.quiescent_callback, priority=0)
 
     # -- dispatcher callback --------------------------------------------
     def callback(self, worker_id: int) -> None:
@@ -81,3 +103,62 @@ class DynamicTuner:
             p.max_ops_thread = max(8, p.max_ops_thread - c.ops_step)
             self.adjustments.append((now, p.max_ddast_threads,
                                      p.max_ops_thread))
+
+    # -- quiescence callback: num_shards hill-climb ---------------------
+    def quiescent_callback(self, worker_id: int) -> None:
+        del worker_id
+        pol = self.rt.policy
+        if self._shard_settled or not hasattr(pol, "resize"):
+            return
+        # Nested taskwaits also notify, but their parent is still in the
+        # graph — resize would refuse; don't consume a metric sample.
+        if pol.pending() or pol.in_graph():
+            return
+        self.consider_shard_step(pol.stats())
+
+    def consider_shard_step(self, stats: dict) -> bool:
+        """One hill-climb decision from a ``ShardedPolicy.stats()``
+        snapshot. Split out from the dispatcher hook so the decision
+        logic is testable with fabricated counter deltas. Returns True
+        if a resize was applied."""
+        pol, c = self.rt.policy, self.cfg
+        if self._shard_settled:
+            return False
+        msgs = int(stats["messages_processed"])
+        wait = float(stats["lock_wait_s"])
+        dm = msgs - self._m0
+        if dm < c.shard_min_messages:
+            return False                 # not enough new signal yet
+        metric = (wait - self._w0) / dm  # lock-wait cost per message
+        self._m0, self._w0 = msgs, wait
+        prev = self._shard_prev_metric
+        self._shard_prev_metric = metric
+        bracketed = False
+        if prev is not None and metric > prev * (1.0 - c.shard_improve_eps):
+            # Stopped improving: reverse. Flips accumulate across the
+            # whole climb (an improving leg does NOT reset them —
+            # otherwise a clean unimodal metric bounces S/2 -> S -> 2S
+            # forever). The second flip means the optimum is bracketed:
+            # take one final step back toward it, then settle.
+            self._shard_dir = -self._shard_dir
+            self._shard_flips += 1
+            bracketed = self._shard_flips >= 2
+        cap = c.shard_cap or max(64, 4 * self.rt.num_workers)
+        target = (pol.num_shards * 2 if self._shard_dir > 0
+                  else pol.num_shards // 2)
+        target = max(1, min(target, cap))
+        if target == pol.num_shards:
+            # nowhere to step (boundary); if bracketed we are done here
+            self._shard_settled = bracketed or self._shard_settled
+            return False
+        if not pol.resize(target):
+            # refused (work in flight): retry at the next quiescence
+            # rather than latching settled at the worse bracket end
+            return False
+        self._shard_settled = bracketed or self._shard_settled
+        self.shard_adjustments.append((time.perf_counter(), target))
+        return True
+
+    @property
+    def shards_settled(self) -> bool:
+        return self._shard_settled

@@ -1,24 +1,26 @@
-"""DDAST — the Distributed DAS Thread manager callback (paper §3.3, Listing 2).
+"""DDAST tunables (paper §3.3, Table 5).
 
-Any idle worker thread that enters the callback becomes a *manager thread*
-and drains the per-worker message queues, updating the dependence graph.
-Faithful port of Listing 2 with the four tunables and the tuned defaults
-from Table 5:
+The Distributed DAS Thread manager itself — the Listing-2 callback any
+idle worker enters to become a *manager thread* — lives in
+``core.engine.policy`` as :class:`~repro.core.engine.policy.DdastPolicy`
+(with the centralized [7] variant as ``DastPolicy`` and the sharded
+extension as ``ShardedPolicy``), so the drain protocol is shared between
+the threaded runtime and the virtual-time simulator. This module keeps
+the four tunables and the tuned defaults from Table 5:
 
     MAX_DDAST_THREADS  = ceil(num_threads / 8)      (initial: inf)
     MAX_SPINS          = 1                           (initial: 20)
     MAX_OPS_THREAD     = 8                           (initial: 6)
     MIN_READY_TASKS    = 4                           (initial: 4)
+
+``DDASTManager`` remains importable here as an alias of ``DdastPolicy``
+(resolved lazily to avoid a circular import with the engine package).
 """
 from __future__ import annotations
 
 import math
-import threading
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Optional
-
-if TYPE_CHECKING:  # pragma: no cover
-    from .runtime import TaskRuntime
+from typing import Optional
 
 
 @dataclass
@@ -40,121 +42,8 @@ class DDASTParams:
                            max_ops_thread=6, min_ready_tasks=4)
 
 
-class DDASTManager:
-    """Holds manager-side state; `callback` is what gets registered in the
-    Functionality Dispatcher."""
-
-    def __init__(self, runtime: "TaskRuntime", params: DDASTParams) -> None:
-        self.rt = runtime
-        self.params = params
-        self._active = 0
-        self._active_lock = threading.Lock()
-        self.messages_processed = 0
-        self.callback_entries = 0
-
-    # -- Listing 2 ------------------------------------------------------
-    def callback(self, worker_id: int) -> None:
-        rt, p = self.rt, self.params
-        eligible = getattr(rt, "manager_eligible", None)
-        if eligible is not None and worker_id != rt.num_workers \
-                and worker_id not in eligible:
-            return                      # big.LITTLE: not a manager core
-        max_threads = p.resolved_max_threads(rt.num_workers)
-        with self._active_lock:
-            if self._active >= max_threads:
-                return
-            self._active += 1
-        self.callback_entries += 1
-        # sharded mode: managers claim whole shards instead of whole
-        # per-worker queues; the spin/min-ready policy is identical.
-        drain_once = (self._drain_shards_once if rt.mode == "sharded"
-                      else self._drain_queues_once)
-        try:
-            spins = p.max_spins
-            while True:
-                total_cnt = drain_once(worker_id)
-                self.messages_processed += total_cnt
-                spins = (spins - 1) if total_cnt == 0 else p.max_spins
-                if spins == 0 or rt.ready_count() >= p.min_ready_tasks:
-                    break
-        finally:
-            with self._active_lock:
-                self._active -= 1
-
-    def _drain_queues_once(self, worker_id: int) -> int:
-        """One pass over the per-worker queues (Listing 2 lines 6-15)."""
-        del worker_id
-        rt, p = self.rt, self.params
-        total_cnt = 0
-        for wq in rt.worker_queues:
-            if rt.ready_count() >= p.min_ready_tasks:
-                break
-            cnt = 0
-            if wq.acquire_submit():
-                try:
-                    while cnt < p.max_ops_thread:
-                        msg = wq.submit.pop()
-                        if msg is None:
-                            break
-                        rt.satisfy_submit(msg.wd)
-                        cnt += 1
-                finally:
-                    wq.release_submit()
-            while cnt < p.max_ops_thread:
-                msg = wq.done.pop()
-                if msg is None:
-                    break
-                rt.satisfy_done(msg.wd)
-                cnt += 1
-            total_cnt += cnt
-        return total_cnt
-
-    def _drain_shards_once(self, worker_id: int) -> int:
-        """One pass over the shard mailboxes: claim each free shard in
-        turn (offset by worker id so concurrent managers spread out) and
-        drain up to MAX_OPS_THREAD messages from it."""
-        rt, p = self.rt, self.params
-        router = rt.shard_router
-        n = len(router.mailboxes)
-        total_cnt = 0
-        for off in range(n):
-            if rt.ready_count() >= p.min_ready_tasks:
-                break
-            idx = (worker_id + off) % n
-            if router.mailboxes[idx].pending() == 0:
-                continue                # cheap peek before claiming
-            total_cnt += router.drain_shard(idx, p.max_ops_thread)
-        return total_cnt
-
-    def drain_all(self) -> int:
-        """Drain every queue to empty (used at taskwait/shutdown edges)."""
-        rt = self.rt
-        if rt.mode == "sharded":
-            n = rt.shard_router.drain_all()
-            self.messages_processed += n
-            return n
-        n = 0
-        progress = True
-        while progress:
-            progress = False
-            for wq in rt.worker_queues:
-                if wq.acquire_submit():
-                    try:
-                        while True:
-                            msg = wq.submit.pop()
-                            if msg is None:
-                                break
-                            rt.satisfy_submit(msg.wd)
-                            n += 1
-                            progress = True
-                    finally:
-                        wq.release_submit()
-                while True:
-                    msg = wq.done.pop()
-                    if msg is None:
-                        break
-                    rt.satisfy_done(msg.wd)
-                    n += 1
-                    progress = True
-        self.messages_processed += n
-        return n
+def __getattr__(name: str):
+    if name == "DDASTManager":
+        from .engine.policy import DdastPolicy
+        return DdastPolicy
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

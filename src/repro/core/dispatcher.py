@@ -25,6 +25,7 @@ class _Callback:
 class FunctionalityDispatcher:
     def __init__(self) -> None:
         self._callbacks: List[_Callback] = []
+        self._quiescent: List[_Callback] = []
         self._lock = threading.Lock()
 
     def register(self, name: str, fn: Callable[[int], None],
@@ -33,9 +34,20 @@ class FunctionalityDispatcher:
             self._callbacks.append(_Callback(name, fn, priority))
             self._callbacks.sort(key=lambda c: -c.priority)
 
+    def register_quiescent(self, name: str, fn: Callable[[int], None],
+                           priority: int = 0) -> None:
+        """Register a callback run at taskwait quiescence (the blocked
+        thread observed zero live children and zero pending messages) —
+        the only moments global reconfiguration (e.g. shard-count
+        retuning) is safe."""
+        with self._lock:
+            self._quiescent.append(_Callback(name, fn, priority))
+            self._quiescent.sort(key=lambda c: -c.priority)
+
     def unregister(self, name: str) -> None:
         with self._lock:
             self._callbacks = [c for c in self._callbacks if c.name != name]
+            self._quiescent = [c for c in self._quiescent if c.name != name]
 
     def notify_idle(self, worker_id: int) -> bool:
         """An idle worker offers itself; run registered callbacks (highest
@@ -47,5 +59,15 @@ class FunctionalityDispatcher:
             ran = True
         return ran
 
+    def notify_quiescent(self, worker_id: int) -> bool:
+        """A taskwait reached quiescence on ``worker_id``'s thread."""
+        ran = False
+        for cb in list(self._quiescent):
+            cb.fn(worker_id)
+            cb.calls += 1
+            ran = True
+        return ran
+
     def stats(self) -> Dict[str, int]:
-        return {c.name: c.calls for c in self._callbacks}
+        return {c.name: c.calls
+                for c in self._callbacks + self._quiescent}

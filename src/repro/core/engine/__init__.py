@@ -1,0 +1,34 @@
+"""Unified dependence-policy engine.
+
+One mode-agnostic core shared by the threaded ``TaskRuntime`` and the
+virtual-time ``RuntimeSimulator``:
+
+    ┌──────────────────────────┐   ┌──────────────────────────────┐
+    │ TaskRuntime (threads)    │   │ RuntimeSimulator (virtual t) │
+    │   CostCharger (no-op)    │   │   SimCharger (VirtualLocks)  │
+    └────────────┬─────────────┘   └──────────────┬───────────────┘
+                 └───────────── drives ───────────┘
+                   ┌────────────────▼────────────────┐
+                   │        DependencePolicy         │
+                   │ Sync · Dast · Ddast · Sharded   │
+                   └──┬───────────────────────────┬──┘
+                      ▼                           ▼
+             PlacementPolicy               graph structures
+        (RoundRobin / ShardAffine       (DependenceGraph · shards:
+         over per-slot StealDeques)      ShardedDependenceGraph,
+                                         ShardRouter mailboxes)
+"""
+from .charge import CostCharger, SimCharger, VirtualLock
+from .placement import (PlacementPolicy, RoundRobinPlacement,
+                        ShardAffinePlacement, make_placement)
+from .policy import (POLICY_NAMES, DastPolicy, DdastPolicy,
+                     DependencePolicy, ShardedPolicy, SyncPolicy,
+                     make_policy)
+
+__all__ = [
+    "CostCharger", "SimCharger", "VirtualLock",
+    "PlacementPolicy", "RoundRobinPlacement", "ShardAffinePlacement",
+    "make_placement",
+    "POLICY_NAMES", "DependencePolicy", "SyncPolicy", "DastPolicy",
+    "DdastPolicy", "ShardedPolicy", "make_policy",
+]

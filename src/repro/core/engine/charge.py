@@ -1,0 +1,167 @@
+"""Cost-charging adapter: how one policy implementation runs under two
+drivers.
+
+Every :class:`~repro.core.engine.policy.DependencePolicy` mutates *real*
+data structures (``DependenceGraph``, ``ShardedDependenceGraph``, shard
+mailboxes, ``StealDeque``s) and, around each protocol step, calls a hook
+on its :class:`CostCharger`. The two drivers differ only in which charger
+they install:
+
+  * ``TaskRuntime`` (real threads) passes the no-op base class — real
+    time simply passes, and the ``InstrumentedLock``s inside the
+    structures record real contention;
+  * ``RuntimeSimulator`` passes :class:`SimCharger`, which advances a
+    virtual clock, serializes critical sections on :class:`VirtualLock`s
+    (one per lock key), and records the §6.1 cache-pollution flag for
+    the acting core.
+
+This is what makes sim-vs-real divergence structurally impossible: the
+dependence protocol runs exactly once, in the policy; the charger only
+decides what the protocol *costs*.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, Sequence, Set, Tuple
+
+
+class CostCharger:
+    """No-op charger used by the threaded driver. Method-per-event so the
+    simulator can price each protocol step; all bodies are empty here."""
+
+    __slots__ = ()
+
+    def begin(self, slot: int, now: float) -> None:
+        """Driver hook: the acting core/worker and its local clock."""
+
+    def create(self) -> None:
+        """WD allocation + argument capture."""
+
+    def push(self) -> None:
+        """One queue/mailbox push by the producing worker."""
+
+    def message(self) -> None:
+        """Manager pop+dispatch of one mailbox/queue entry."""
+
+    def submit_cs(self, key: Hashable, ndeps: int) -> None:
+        """Whole-graph Submit critical section under lock ``key``."""
+
+    def done_cs(self, key: Hashable, ndeps: int) -> None:
+        """Whole-graph Done critical section under lock ``key``."""
+
+    def submit_portion_cs(self, key: Hashable, nlocal: int,
+                          nparts: int) -> None:
+        """One shard's portion of a Submit spanning ``nparts`` shards."""
+
+    def done_portion_cs(self, key: Hashable, nlocal: int,
+                        nparts: int) -> None:
+        """One shard's portion of a Done spanning ``nparts`` shards."""
+
+    def submit_batch_cs(self, key: Hashable,
+                        portions: Sequence[Tuple[int, int]]) -> None:
+        """A batched Submit: ``portions`` is one (nlocal, nparts) pair per
+        task portion applied under a single lock acquisition."""
+
+
+class VirtualLock:
+    """Serializes critical sections in virtual time (FIFO-handover
+    approximation: an acquirer at local time t waits until ``free_at``)."""
+
+    __slots__ = ("free_at", "wait_us", "acquisitions")
+
+    def __init__(self) -> None:
+        self.free_at = 0.0
+        self.wait_us = 0.0
+        self.acquisitions = 0
+
+    def acquire(self, t: float, hold: float, overhead: float) -> float:
+        start = max(t, self.free_at)
+        self.wait_us += start - t
+        self.acquisitions += 1
+        end = start + hold + overhead
+        self.free_at = end
+        return end
+
+
+class SimCharger(CostCharger):
+    """Virtual-time charger: prices every protocol step with
+    :class:`~repro.core.simulator.SimCosts` and keeps one
+    :class:`VirtualLock` per lock key (``"graph"`` for the global-lock
+    policies, ``("shard", i)`` per shard for the sharded one)."""
+
+    __slots__ = ("costs", "now", "slot", "vlocks", "polluted")
+
+    def __init__(self, costs) -> None:
+        self.costs = costs
+        self.now = 0.0
+        self.slot = -1
+        self.vlocks: Dict[Hashable, VirtualLock] = {}
+        # cores whose next task body runs ``costs.pollution`` slower
+        # because they touched runtime structures (paper §6.1)
+        self.polluted: Set[int] = set()
+
+    # -- driver side ----------------------------------------------------
+    def begin(self, slot: int, now: float) -> None:
+        self.slot = slot
+        self.now = now
+
+    # -- priced protocol steps ------------------------------------------
+    def create(self) -> None:
+        self.now += self.costs.create
+
+    def push(self) -> None:
+        self.now += self.costs.push
+
+    def message(self) -> None:
+        self.now += self.costs.msg_overhead
+
+    def _acquire(self, key: Hashable, hold: float) -> None:
+        vl = self.vlocks.get(key)
+        if vl is None:
+            vl = self.vlocks[key] = VirtualLock()
+        self.now = vl.acquire(self.now, hold, self.costs.lock_overhead)
+        self.polluted.add(self.slot)
+
+    def submit_cs(self, key: Hashable, ndeps: int) -> None:
+        c = self.costs
+        self._acquire(key, c.submit_cs + c.submit_cs_dep * ndeps)
+
+    def done_cs(self, key: Hashable, ndeps: int) -> None:
+        c = self.costs
+        self._acquire(key, c.done_cs + c.done_cs_dep * ndeps)
+
+    def _portion_hold(self, base: float, per_dep: float, nlocal: int,
+                      nparts: int) -> float:
+        # base cost split across the k shard portions, plus the measured
+        # fixed per-portion overhead (latch arithmetic, mailbox dispatch)
+        # and the per-dependence cost charged where the dep lives.
+        return (base / max(nparts, 1) + self.costs.portion_overhead
+                + per_dep * nlocal)
+
+    def submit_portion_cs(self, key: Hashable, nlocal: int,
+                          nparts: int) -> None:
+        c = self.costs
+        self._acquire(key, self._portion_hold(c.submit_cs, c.submit_cs_dep,
+                                              nlocal, nparts))
+
+    def done_portion_cs(self, key: Hashable, nlocal: int,
+                        nparts: int) -> None:
+        c = self.costs
+        self._acquire(key, self._portion_hold(c.done_cs, c.done_cs_dep,
+                                              nlocal, nparts))
+
+    def submit_batch_cs(self, key: Hashable,
+                        portions: Sequence[Tuple[int, int]]) -> None:
+        c = self.costs
+        hold = sum(self._portion_hold(c.submit_cs, c.submit_cs_dep, nl, np)
+                   for nl, np in portions)
+        self._acquire(key, hold)
+
+    # -- result aggregation ---------------------------------------------
+    def lock_wait_us(self) -> float:
+        return sum(v.wait_us for v in self.vlocks.values())
+
+    def lock_acquisitions(self) -> int:
+        return sum(v.acquisitions for v in self.vlocks.values())
+
+    def max_free_at(self) -> float:
+        return max((v.free_at for v in self.vlocks.values()), default=0.0)

@@ -1,17 +1,21 @@
 """Runtime request messages (paper §3.1).
 
-Two message types only; task deletion is covered by the extra FINISHED ->
-COMPLETED state transition instead of a third message.
+Two request kinds only — Submit and Done; task deletion is covered by the
+extra FINISHED -> COMPLETED state transition instead of a third message.
 
-The same two types serve both routings: in ``dast``/``ddast`` mode a
-message sits in the creating/executing worker's queue pair; in
-``sharded`` mode one message object is pushed to the mailbox of every
-shard its WD's regions hash to, and each shard processes only its own
-portion of the deps (see ``core.shards.router``).
+The same types serve both routings: in ``dast``/``ddast`` mode a message
+sits in the creating/executing worker's queue pair; in ``sharded`` mode
+one message object is pushed to the mailbox of every shard its WD's
+regions hash to, and each shard processes only its own portion of the
+deps (see ``core.shards.router``). :class:`SubmitBatchMessage` is the
+batched Submit: one mailbox entry carrying up to ``batch_size`` per-shard
+task portions, so the per-message manager overhead that dominates at
+high shard counts is paid once per batch.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import List
 
 from .wd import WorkDescriptor
 
@@ -22,6 +26,17 @@ class SubmitTaskMessage:
     its predecessors. MUST be processed in per-worker insertion order and
     by at most one manager per worker queue at a time."""
     wd: WorkDescriptor
+
+
+@dataclass
+class SubmitBatchMessage:
+    """Batched Submit for ``sharded`` mode: the receiving shard inserts
+    its portion of every WD in ``wds`` under ONE lock acquisition and the
+    whole entry costs one manager pop+dispatch. Order within ``wds`` is
+    the producer's creation order, so the §3.1 per-region submission
+    ordering invariant is preserved batch-internally exactly as FIFO
+    mailbox order preserves it across entries."""
+    wds: List[WorkDescriptor]
 
 
 @dataclass

@@ -1,25 +1,32 @@
-"""Threaded task runtime with four dependence-management organizations.
+"""Threaded task runtime: a thin thread-driver over a DependencePolicy.
 
-Modes (the paper's §6 comparison set plus the sharded extension):
+The four dependence-management organizations (the paper's §6 comparison
+set plus the sharded extension) live in ``core.engine.policy``:
+
   * ``sync``    — Nanos++ baseline: every worker mutates the dependence
-                  graph directly under a global graph lock at submit &
-                  finish.
+                  graph directly under a global graph lock.
   * ``dast``    — the authors' earlier centralized design [7]: ONE
                   dedicated manager thread drains all queues.
   * ``ddast``   — this paper: no dedicated resources; idle workers become
                   managers through the Functionality Dispatcher.
-  * ``sharded`` — beyond the paper (after Álvarez et al. 2021 / Yu et al.
-                  2022): the graph is partitioned by region hash into N
-                  shards, each with its own lock and mailbox; idle
-                  workers claim whole shards, so no global serialization
-                  point remains (see ``core.shards``).
+  * ``sharded`` — beyond the paper: region-hash-partitioned graph shards
+                  with per-shard mailboxes; idle workers claim whole
+                  shards; optional Submit batching (``batch_size``).
+
+This module knows nothing about any of that: it owns the threads, the
+thread-local task context, the taskwait protocol, and the stats
+aggregation, and delegates every dependence action to ``self.policy``.
+The same policy objects run unchanged under ``RuntimeSimulator`` in
+virtual time, so sim-vs-real protocol divergence is structurally
+impossible.
 
 Scheduling is Distributed Breadth-First (paper §4, point 4): one ready
 deque per worker with work stealing — lock-free ``StealDeque``s (owner
-LIFO pop, thief FIFO steal) in every mode.
+LIFO pop, thief FIFO steal) owned by the ``PlacementPolicy``
+(round-robin by default, shard-affine with ``placement="shard_affine"``).
 
 The runtime is instrumented with exactly the quantities the paper plots:
-graph-lock wait time (per-shard waits summed in ``sharded`` mode),
+graph-lock wait time (per-shard waits summed under the sharded policy),
 in-graph/ready task counts over time (Figs 12-14), message counts, and
 task throughput.
 """
@@ -28,14 +35,12 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
-from .ddast import DDASTManager, DDASTParams
-from .depgraph import DependenceGraph
+from .ddast import DDASTParams
 from .dispatcher import FunctionalityDispatcher
-from .messages import DoneTaskMessage, SubmitTaskMessage
-from .queues import InstrumentedLock, WorkerQueues
-from .shards import ShardedDependenceGraph, ShardRouter, StealDeque
+from .engine import make_placement, make_policy
+from .queues import InstrumentedLock
 from .wd import DepMode, TaskState, WorkDescriptor
 
 _MODES = ("sync", "dast", "ddast", "sharded")
@@ -63,13 +68,13 @@ class RuntimeStats:
     total_edges: int = 0
     trace: List[Tuple[float, int, int]] = field(default_factory=list)  # (t, in_graph, ready)
     wall_s: float = 0.0
-    # Per-shard breakdowns (empty outside "sharded" mode).
+    # Per-shard breakdowns (empty outside the sharded policy).
     shard_lock_wait_s: List[float] = field(default_factory=list)
     shard_messages: List[int] = field(default_factory=list)
 
 
-# Backward-compatible alias: the lock now lives in queues.py so the
-# shards subsystem can use it without a circular import.
+# Backward-compatible alias: the lock lives in queues.py so every layer
+# can use it without circular imports.
 _InstrumentedLock = InstrumentedLock
 
 
@@ -85,47 +90,63 @@ class TaskRuntime:
                  params: Optional[DDASTParams] = None,
                  trace: bool = False,
                  manager_eligible: Optional[set] = None,
-                 num_shards: Optional[int] = None) -> None:
+                 num_shards: Optional[int] = None,
+                 batch_size: Optional[int] = None,
+                 placement: Any = "round_robin") -> None:
         if mode not in _MODES:
             raise ValueError(f"mode must be one of {_MODES}")
+        if num_shards is not None and num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
         self.num_workers = num_workers
         self.mode = mode
         self.params = params or DDASTParams()
         self.trace_enabled = trace
-        # big.LITTLE support (paper §8): restrict which workers may become
-        # manager threads (None = any, the homogeneous default). The main
-        # thread (id num_workers) is always eligible so taskwait drains.
         self.manager_eligible = manager_eligible
-
-        self.worker_queues: List[WorkerQueues] = [
-            WorkerQueues(i) for i in range(num_workers + 1)]  # +1: main thread
-        self._ready: List[StealDeque] = [
-            StealDeque() for _ in range(num_workers + 1)]
-        self._graph_lock = _InstrumentedLock()
-        self._graphs: Dict[int, DependenceGraph] = {}
-        # sharded mode: region-hash-partitioned graph + per-shard mailboxes
-        if num_shards is not None and num_shards < 1:
-            raise ValueError("num_shards must be >= 1")
         self.num_shards = num_shards or max(2, num_workers)
-        self.shard_graph: Optional[ShardedDependenceGraph] = None
-        self.shard_router: Optional[ShardRouter] = None
-        if mode == "sharded":
-            self.shard_graph = ShardedDependenceGraph(self.num_shards)
-            self.shard_router = ShardRouter(self.shard_graph,
-                                            on_ready=self._push_ready)
+        self.batch_size = batch_size
+
+        num_slots = num_workers + 1        # +1: the main thread's slot
+        self.placement = make_placement(placement, num_slots)
+        self.policy = make_policy(
+            mode, num_slots,
+            num_workers=num_workers,
+            params=self.params,
+            placement=self.placement,
+            manager_eligible=manager_eligible,
+            main_slot=num_workers,
+            num_shards=self.num_shards,
+            batch_size=batch_size)
         self.dispatcher = FunctionalityDispatcher()
-        self.ddast = DDASTManager(self, self.params)
-        if mode in ("ddast", "sharded"):
-            self.dispatcher.register("ddast", self.ddast.callback, priority=10)
+        if self.policy.uses_idle_managers:
+            self.dispatcher.register("policy", self.policy.callback,
+                                     priority=10)
 
         self._root = WorkDescriptor(func=None, label="main")
         self._root.state = TaskState.RUNNING
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
-        self._dast_thread: Optional[threading.Thread] = None
+        self._manager_thread: Optional[threading.Thread] = None
         self.stats = RuntimeStats()
         self._trace_t0 = time.perf_counter()
-        self._rr = 0  # round-robin target for newly-ready tasks
+
+    # ------------------------------------------------------------------
+    # historical accessors (the policy owns the structures now)
+    @property
+    def ddast(self):
+        """The manager-side policy object (historically a DDASTManager)."""
+        return self.policy
+
+    @property
+    def worker_queues(self):
+        return getattr(self.policy, "worker_queues", [])
+
+    @property
+    def shard_router(self):
+        return getattr(self.policy, "router", None)
+
+    @property
+    def shard_graph(self):
+        return getattr(self.policy, "graph", None)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -140,103 +161,51 @@ class TaskRuntime:
     def start(self) -> None:
         self._trace_t0 = time.perf_counter()
         _tls.current = self._root
-        _tls.worker_id = self.num_workers  # main thread owns the last queue pair
+        _tls.worker_id = self.num_workers  # main thread owns the last slot
         for i in range(self.num_workers):
             t = threading.Thread(target=self._worker_loop, args=(i,),
                                  name=f"worker-{i}", daemon=True)
             self._threads.append(t)
             t.start()
-        if self.mode == "dast":
-            self._dast_thread = threading.Thread(
-                target=self._dast_loop, name="dast", daemon=True)
-            self._dast_thread.start()
+        if self.policy.needs_manager_thread:
+            self._manager_thread = threading.Thread(
+                target=self._manager_loop, name="manager", daemon=True)
+            self._manager_thread.start()
 
     def shutdown(self) -> None:
         self.taskwait()
         self._stop.set()
         for t in self._threads:
             t.join(timeout=5.0)
-        if self._dast_thread is not None:
-            self._dast_thread.join(timeout=5.0)
+        if self._manager_thread is not None:
+            self._manager_thread.join(timeout=5.0)
         self.stats.wall_s = time.perf_counter() - self._trace_t0
-        self.stats.ddast_callback_entries = self.ddast.callback_entries
-        if self.mode == "sharded":
-            # Aggregate per-shard counters: the single DDASTManager's
-            # counters alone would under-report (shards are also drained
-            # via drain_all and taskwait edges).
-            self.stats.shard_messages = [
-                mb.messages_processed for mb in self.shard_router.mailboxes]
-            self.stats.shard_lock_wait_s = [
-                s.lock.wait_s for s in self.shard_graph.shards]
-            self.stats.messages_processed = sum(self.stats.shard_messages)
-            self.stats.lock_acquisitions = sum(
-                s.lock.acquisitions for s in self.shard_graph.shards)
-            self.stats.lock_wait_s = sum(self.stats.shard_lock_wait_s)
-            self.stats.max_in_graph = self.shard_graph.max_in_graph
-            self.stats.total_edges = self.shard_graph.total_edges
-        else:
-            self.stats.messages_processed = self.ddast.messages_processed
-            self.stats.lock_acquisitions = self._graph_lock.acquisitions
-            self.stats.lock_wait_s = self._graph_lock.wait_s
-            for g in self._graphs.values():
-                self.stats.max_in_graph = max(self.stats.max_in_graph,
-                                              g.max_in_graph)
-                self.stats.total_edges += g.total_edges
+        self.stats.ddast_callback_entries = self.policy.callback_entries
+        st = self.policy.stats()
+        self.stats.messages_processed = st["messages_processed"]
+        self.stats.lock_acquisitions = st["lock_acquisitions"]
+        self.stats.lock_wait_s = st["lock_wait_s"]
+        self.stats.max_in_graph = st["max_in_graph"]
+        self.stats.total_edges = st["total_edges"]
+        self.stats.shard_messages = st["shard_messages"]
+        self.stats.shard_lock_wait_s = st["shard_lock_wait_s"]
 
     # ------------------------------------------------------------------
-    # graph plumbing (called by whoever manages: worker in sync mode,
-    # manager threads in dast/ddast mode)
-    def _graph_for(self, parent: WorkDescriptor) -> DependenceGraph:
-        g = self._graphs.get(parent.wd_id)
-        if g is None:
-            g = self._graphs[parent.wd_id] = DependenceGraph()
-        return g
-
-    def satisfy_submit(self, wd: WorkDescriptor) -> None:
-        with self._graph_lock:
-            ready = self._graph_for(wd.parent).submit(wd)
-        if ready:
-            self._push_ready(wd)
-        self._sample_trace()
-
-    def satisfy_done(self, wd: WorkDescriptor) -> None:
-        with self._graph_lock:
-            newly = self._graph_for(wd.parent).complete(wd)
-        for s in newly:
-            self._push_ready(s)
-        self._sample_trace()
-
-    # ------------------------------------------------------------------
-    # ready pool (DBF: per-worker lock-free StealDeques)
-    def _push_ready(self, wd: WorkDescriptor) -> None:
-        # Round-robin distribution; the unguarded _rr update is a benign
-        # race (any value it yields is a valid target index).
-        self._ready[self._rr].push(wd)
-        self._rr = (self._rr + 1) % len(self._ready)
-
-    def _pop_ready(self, worker_id: int) -> Optional[WorkDescriptor]:
-        wd = self._ready[worker_id].pop()       # own deque: LIFO end
-        if wd is not None:
-            return wd
-        n = len(self._ready)
-        for off in range(1, n):                 # steal: FIFO end, O(1)
-            wd = self._ready[(worker_id + off) % n].steal()
-            if wd is not None:
-                return wd
-        return None
-
+    # ready pool / occupancy probes (delegated)
     def ready_count(self) -> int:
-        return sum(len(q) for q in self._ready)
+        return self.placement.ready_count()
 
     def in_graph_count(self) -> int:
-        if self.mode == "sharded":
-            return self.shard_graph.in_graph
-        return sum(g.in_graph for g in self._graphs.values())
+        return self.policy.in_graph()
+
+    def _pending_msgs(self) -> int:
+        return self.policy.pending()
 
     def _sample_trace(self) -> None:
         if self.trace_enabled:
             self.stats.trace.append((time.perf_counter() - self._trace_t0,
-                                     self.in_graph_count(), self.ready_count()))
+                                     self.in_graph_count(),
+                                     self.ready_count()))
 
     # ------------------------------------------------------------------
     # public task API
@@ -248,48 +217,35 @@ class TaskRuntime:
         wid = self._current_wid()
         wd = WorkDescriptor(func=func, args=args, deps=_parse_deps(deps),
                             label=label, parent=parent)
-        if self.mode == "sync":
-            self.satisfy_submit(wd)            # direct, under the graph lock
-        elif self.mode == "sharded":
-            self.shard_router.route_submit(wd)  # to per-shard mailboxes
-            self._sample_trace()
-        else:
-            self.worker_queues[wid].submit.push(SubmitTaskMessage(wd))
+        self.policy.submit(wd, wid)
+        self._sample_trace()
         return wd
 
     def taskwait(self) -> None:
         """Block until all children of the current task completed. The
-        blocked thread keeps working: executes ready tasks and (ddast)
-        runs the manager callback — the paper's idle-thread philosophy."""
+        blocked thread keeps working: executes ready tasks and runs the
+        registered idle callbacks — the paper's idle-thread philosophy."""
         parent = getattr(_tls, "current", self._root)
         wid = self._current_wid()
+        self.policy.flush(wid)
         while True:
-            # account for children whose Submit message is still queued
+            # account for children whose Submit is still queued/buffered
             if parent.num_children_alive == 0 and not self._pending_msgs():
+                self.dispatcher.notify_quiescent(wid)
                 return
-            wd = self._pop_ready(wid)
+            wd = self.placement.pop(wid)
             if wd is not None:
                 self._execute(wd, wid)
                 continue
-            if self.mode in ("ddast", "sharded"):
-                self.dispatcher.notify_idle(wid)
-            elif self.mode == "sync":
-                time.sleep(0)                   # busy-wait yield
-            else:
-                time.sleep(1e-5)
+            self.dispatcher.notify_idle(wid)
+            time.sleep(self.policy.idle_sleep_s)
 
     def _current_wid(self) -> int:
-        """This thread's worker id, clamped to this runtime's queues: the
+        """This thread's worker id, clamped to this runtime's slots: the
         TLS is module-global, so a thread that last belonged to a larger
         runtime would otherwise index out of range here."""
         wid = getattr(_tls, "worker_id", self.num_workers)
-        return wid if wid < len(self.worker_queues) else self.num_workers
-
-    def _pending_msgs(self) -> int:
-        n = sum(wq.pending() for wq in self.worker_queues)
-        if self.shard_router is not None:
-            n += self.shard_router.pending()
-        return n
+        return wid if wid <= self.num_workers else self.num_workers
 
     # ------------------------------------------------------------------
     # execution
@@ -305,30 +261,25 @@ class TaskRuntime:
             wd.mark_finished()
             _tls.current, _tls.worker_id = prev_task, prev_wid
         self.stats.tasks_executed += 1
-        if self.mode == "sync":
-            self.satisfy_done(wd)              # direct, under the graph lock
-        elif self.mode == "sharded":
-            self.shard_router.route_done(wd)   # to per-shard mailboxes
-            self._sample_trace()
-        else:
-            self.worker_queues[worker_id].done.push(DoneTaskMessage(wd))
+        self.placement.note_executed(wd, worker_id)
+        self.policy.complete(wd, worker_id)
+        self._sample_trace()
 
     def _worker_loop(self, worker_id: int) -> None:
         _tls.current = self._root
         _tls.worker_id = worker_id
         while not self._stop.is_set():
-            wd = self._pop_ready(worker_id)
+            wd = self.placement.pop(worker_id)
             if wd is not None:
                 self._execute(wd, worker_id)
                 continue
-            if self.mode in ("ddast", "sharded"):
-                self.dispatcher.notify_idle(worker_id)
+            if self.dispatcher.notify_idle(worker_id):
                 self._sample_trace()
-            time.sleep(0)                       # yield (busy-wait analogue)
+            time.sleep(0)                   # yield (busy-wait analogue)
 
-    def _dast_loop(self) -> None:
-        """Centralized manager thread (the authors' previous design [7])."""
+    def _manager_loop(self) -> None:
+        """Dedicated manager thread (the authors' previous design [7]);
+        spawned only when the policy asks for one."""
         while not self._stop.is_set():
-            n = self.ddast.drain_all()
-            if n == 0:
+            if self.policy.drain_all() == 0:
                 time.sleep(1e-6)

@@ -19,10 +19,11 @@ fully in parallel.
 
 Join protocol for a task whose deps span k shards:
 
-  * ``route_submit`` sets ``wd.shard_pending = k`` (the submit latch) and
-    ``wd.shard_done = k`` (the completion latch), then posts one
-    SubmitTaskMessage per shard. k == 0 (no deps) short-circuits to
-    ready.
+  * ``prepare_submit`` sets ``wd.shard_pending = k`` (the submit latch)
+    and ``wd.shard_done = k`` (the completion latch); ``route_submit``
+    then posts one SubmitTaskMessage per shard (or the ShardedPolicy
+    buffers the WD and later posts one ``SubmitBatchMessage`` per shard
+    per batch). k == 0 (no deps) short-circuits to ready.
   * each shard's Submit processing atomically adds
     ``local_pred_edges - 1``; the unique update that reaches 0 marks the
     task ready (all shards inserted, no unsatisfied edge).
@@ -35,6 +36,11 @@ A predecessor recorded via two regions on two different shards yields
 two edges and, symmetrically, two decrements — counts balance, so the
 deduplication the single graph performs globally is only needed (and
 done) within each shard.
+
+Every graph action is priced through the router's
+:class:`~repro.core.engine.charge.CostCharger` — a no-op under real
+threads, a virtual-time clock under the simulator — so both drivers
+share this exact code path.
 """
 from __future__ import annotations
 
@@ -42,12 +48,12 @@ import threading
 from collections import deque
 from typing import Callable, List, Optional, Union
 
-from ..messages import DoneTaskMessage, SubmitTaskMessage
+from ..messages import DoneTaskMessage, SubmitBatchMessage, SubmitTaskMessage
 from ..wd import TaskState, WorkDescriptor
 from .sharded_graph import ShardedDependenceGraph, partition_deps
 from .steal_deque import AtomicCounter
 
-_Message = Union[SubmitTaskMessage, DoneTaskMessage]
+_Message = Union[SubmitTaskMessage, SubmitBatchMessage, DoneTaskMessage]
 
 
 class ShardMailbox:
@@ -89,21 +95,26 @@ class ShardRouter:
     protocol when managers process them."""
 
     def __init__(self, graph: ShardedDependenceGraph,
-                 on_ready: Callable[[WorkDescriptor], None]) -> None:
+                 on_ready: Callable[[WorkDescriptor], None],
+                 charge=None) -> None:
+        from ..engine.charge import CostCharger
         self.graph = graph
         self.on_ready = on_ready
+        self.charge = charge if charge is not None else CostCharger()
         self.mailboxes: List[ShardMailbox] = [
             ShardMailbox(i) for i in range(graph.num_shards)]
 
     # -- producer side (any worker thread) -----------------------------
-    def route_submit(self, wd: WorkDescriptor) -> None:
-        # Partition the deps once; shards read wd.shard_parts on the hot
-        # path instead of re-hashing regions under their lock.
+    def prepare_submit(self, wd: WorkDescriptor) -> bool:
+        """Partition the deps once (shards read ``wd.shard_parts`` on the
+        hot path instead of re-hashing regions under their lock),
+        initialize both join latches, and record graph occupancy. Both
+        latches MUST be set before the first message is visible to a
+        manager. Returns True for a dependence-free task, which is made
+        ready immediately and needs no Submit messages."""
         parts = partition_deps(wd, self.graph.num_shards)
         wd.shard_parts = parts
         k = len(parts)
-        # Both latches MUST be initialized before the first message is
-        # visible to a manager.
         wd.shard_pending = AtomicCounter(k)
         wd.shard_done = AtomicCounter(k)
         wd.state = TaskState.SUBMITTED
@@ -111,13 +122,29 @@ class ShardRouter:
         if k == 0:                       # dependence-free: ready now
             wd.mark_ready()
             self.on_ready(wd)
+            return True
+        return False
+
+    def route_submit(self, wd: WorkDescriptor) -> None:
+        if self.prepare_submit(wd):
             return
         msg = SubmitTaskMessage(wd)
-        for s in parts:
+        for s in wd.shard_parts:
             self.mailboxes[s].push(msg)
 
+    def push_batch(self, wds: List[WorkDescriptor]) -> None:
+        """Ship already-prepared WDs (see ``prepare_submit``) as one
+        SubmitBatchMessage per shard touched by the batch, preserving the
+        producer's creation order within each entry."""
+        per_shard = {}
+        for wd in wds:
+            for s in wd.shard_parts:
+                per_shard.setdefault(s, []).append(wd)
+        for s, group in per_shard.items():
+            self.mailboxes[s].push(SubmitBatchMessage(group))
+
     def route_done(self, wd: WorkDescriptor) -> None:
-        parts = wd.shard_parts            # cached by route_submit
+        parts = wd.shard_parts            # cached by prepare_submit
         if not parts:                     # never entered any shard
             self.graph.task_left()
             wd.mark_completed()
@@ -127,19 +154,46 @@ class ShardRouter:
             self.mailboxes[s].push(msg)
 
     # -- consumer side (the claiming manager) --------------------------
+    def _submit_local(self, shard, wd: WorkDescriptor) -> bool:
+        """Insert one shard portion; returns True if the join latch hit
+        zero (caller marks ready). Must hold ``shard.lock``."""
+        local_preds = shard.submit_local(wd)
+        # +local edges, -1 for this shard's latch unit
+        return wd.shard_pending.add(local_preds - 1) == 0
+
     def process(self, shard_index: int, msg: _Message) -> None:
-        """Apply one message to one shard. Caller must hold the shard's
-        mailbox claim (single manager per shard)."""
+        """Apply one mailbox entry to one shard. Caller must hold the
+        shard's mailbox claim (single manager per shard)."""
         shard = self.graph.shards[shard_index]
-        wd = msg.wd
-        if type(msg) is SubmitTaskMessage:
+        self.charge.message()
+        if type(msg) is SubmitBatchMessage:
+            self.charge.submit_batch_cs(
+                ("shard", shard_index),
+                [(len(wd.shard_parts[shard_index]), len(wd.shard_parts))
+                 for wd in msg.wds])
+            newly = []
             with shard.lock:
-                local_preds = shard.submit_local(wd)
-            # +local edges, -1 for this shard's latch unit
-            if wd.shard_pending.add(local_preds - 1) == 0:
+                for wd in msg.wds:
+                    if self._submit_local(shard, wd):
+                        newly.append(wd)
+            for wd in newly:
+                wd.mark_ready()
+                self.on_ready(wd)
+        elif type(msg) is SubmitTaskMessage:
+            wd = msg.wd
+            self.charge.submit_portion_cs(
+                ("shard", shard_index),
+                len(wd.shard_parts[shard_index]), len(wd.shard_parts))
+            with shard.lock:
+                ready = self._submit_local(shard, wd)
+            if ready:
                 wd.mark_ready()
                 self.on_ready(wd)
         else:
+            wd = msg.wd
+            self.charge.done_portion_cs(
+                ("shard", shard_index),
+                len(wd.shard_parts[shard_index]), len(wd.shard_parts))
             with shard.lock:
                 succs = shard.complete_local(wd)
             for s in succs:
@@ -152,8 +206,8 @@ class ShardRouter:
         self.mailboxes[shard_index].messages_processed += 1
 
     def drain_shard(self, shard_index: int, max_ops: int) -> int:
-        """Claim one shard and process up to ``max_ops`` messages.
-        Returns messages processed (0 if the shard was already claimed)."""
+        """Claim one shard and process up to ``max_ops`` mailbox entries.
+        Returns entries processed (0 if the shard was already claimed)."""
         mb = self.mailboxes[shard_index]
         if not mb.try_claim():
             return 0

@@ -1,42 +1,52 @@
 """Deterministic discrete-event simulator of the task runtime.
 
 This container exposes ONE physical core, so the paper's headline results
-(speedup vs. 16-64 worker threads, Figs 9-11) cannot be measured with real
-threads. The simulator reproduces them in *virtual time*: N virtual cores,
-task durations in microseconds, critical sections serialized on virtual
-locks, and the three runtime organizations:
+(speedup vs. 16-64 worker threads, Figs 9-11) cannot be measured with
+real threads. The simulator reproduces them in *virtual time*: N virtual
+cores, task durations in microseconds, critical sections serialized on
+virtual locks.
 
-  sync    Nanos++ baseline — graph mutated by workers under a global lock,
-  dast    centralized manager thread [7] (P cores = P-1 workers + 1 manager),
-  ddast   this paper — idle cores run the DDAST callback (Listing 2),
-  sharded the core.shards extension — the graph is partitioned by region
-          hash into S shards, each with its own virtual lock and mailbox;
-          idle cores claim whole shards. A task spanning k shards splits
-          its critical section k ways (base cost divided across portions,
-          per-dep cost charged where the dep lives), mirroring the real
-          runtime's join-latch protocol; lock waits are summed per shard.
+Since the unified dependence-policy engine (``core.engine``), the
+simulator does NOT re-implement the dependence protocol: it drives the
+*same* ``DependencePolicy`` objects the threaded ``TaskRuntime`` uses
+(``SyncPolicy`` / ``DastPolicy`` / ``DdastPolicy`` / ``ShardedPolicy``
+over the real ``DependenceGraph`` / ``ShardedDependenceGraph`` /
+``ShardRouter`` structures), installing a
+:class:`~repro.core.engine.charge.SimCharger` so every protocol step is
+priced in virtual time: critical sections serialize on one
+:class:`~repro.core.engine.charge.VirtualLock` per lock key
+(FIFO-handover approximation), every mailbox entry costs one
+``msg_overhead`` (a Submit *batch* therefore costs one, which is the
+point of batching), and sharded portions cost
+``submit_cs / k + portion_overhead`` each. Message counts and dependence
+orderings are therefore identical to the threaded runtime by
+construction, not by parallel maintenance.
 
-Cost constants default to values calibrated from the real threaded runtime
-on this machine (see benchmarks/bench_contention.py) and can be overridden.
-The cache-pollution effect the paper measures (§6.1: task bodies ~33 %
-faster under DDAST because workers stop touching runtime structures
-between tasks) is modeled with a per-core pollution flag set by graph
-operations and applied as a duration multiplier to the next task executed
-by that core.
+Cost constants default to values calibrated from the real threaded
+runtime on this machine (see ``benchmarks/bench_contention.py``, whose
+``--calibrate`` flag measures ``portion_overhead``) and can be
+overridden. The cache-pollution effect the paper measures (§6.1: task
+bodies ~33 % faster under DDAST because workers stop touching runtime
+structures between tasks) is modeled by the charger: a virtual-lock
+acquisition flags the acting core, and the next task body it executes is
+charged a duration multiplier.
 
 Everything is deterministic: no wall clock, no randomness — identical
 inputs give identical makespans (required for hypothesis-based testing).
+One approximation is accepted relative to a fully causal event model:
+state produced while a core's local clock runs ahead (inside a lock
+wait) becomes visible to other cores at their next event rather than at
+the exact virtual instant; waits themselves are always charged in full.
 """
 from __future__ import annotations
 
 import heapq
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .ddast import DDASTParams
-from .shards import stable_region_hash
-from .wd import DepMode
+from .engine import SimCharger, make_placement, make_policy
+from .wd import DepMode, TaskState, WorkDescriptor
 
 # ---------------------------------------------------------------------------
 
@@ -63,9 +73,12 @@ class SimCosts:
     submit_cs_dep: float = 0.8    # ... plus this per declared dependence
     done_cs: float = 1.0       # graph completion critical section (base)
     done_cs_dep: float = 0.5   # ... plus this per dependence scrubbed
-    msg_overhead: float = 0.25  # manager pop+dispatch per message
+    msg_overhead: float = 0.25  # manager pop+dispatch per mailbox entry
+    portion_overhead: float = 0.35  # fixed cost per shard portion (latch
+    #   arithmetic + per-shard dispatch; measured by
+    #   bench_contention.py --calibrate, replacing the idealized
+    #   submit_cs / k split)
     lock_overhead: float = 0.12  # uncontended acquire/release
-    idle_poll: float = 0.5     # idle re-poll period when nothing to do
     pollution: float = 1.25    # duration multiplier after graph ops (§6.1)
 
 
@@ -78,7 +91,9 @@ class SimResult:
     lock_acquisitions: int = 0
     messages: int = 0
     max_in_graph: int = 0
+    total_edges: int = 0
     trace: List[Tuple[float, int, int]] = field(default_factory=list)
+    exec_order: List[str] = field(default_factory=list)  # task labels
 
     @property
     def speedup(self) -> float:
@@ -88,557 +103,218 @@ class SimResult:
 # ---------------------------------------------------------------------------
 
 
-class _Task:
-    __slots__ = ("spec", "tid", "preds", "succs", "state", "parent",
-                 "pending_children", "shard_ids", "shard_parts",
-                 "done_pending")
-
-    def __init__(self, spec: SimTaskSpec, tid: int, parent: Optional["_Task"]):
-        self.spec = spec
-        self.tid = tid
-        self.preds = 0
-        self.succs: List["_Task"] = []
-        self.state = "created"
-        self.parent = parent
-        self.pending_children = 0
-        self.shard_ids: Tuple[int, ...] = ()   # sharded mode only
-        self.shard_parts: Dict[int, list] = {}  # shard -> local deps
-        self.done_pending = 0                  # sharded mode only
-
-
-def _reg_collect_and_register(regions: Dict[Any, Tuple[Optional[_Task],
-                                                       List[_Task]]],
-                              task: _Task, deps) -> set:
-    """The region dependence rules (same as depgraph.DependenceGraph):
-    collect RAW/WAW/WAR predecessors of `task` from `regions`, then
-    register it as last-writer/reader. Shared by the global virtual
-    graph and the per-shard region maps so the rules live once."""
-    preds = set()
-    for region, mode in deps:
-        lw, readers = regions.get(region, (None, []))
-        if mode.reads and lw is not None:
-            preds.add(lw)
-        if mode.writes:
-            if lw is not None:
-                preds.add(lw)
-            preds.update(readers)
-        if mode.writes:
-            regions[region] = (task, [])
-        elif mode.reads:
-            regions[region] = (lw, readers + [task])
-    preds.discard(task)
-    return preds
-
-
-def _reg_scrub(regions: Dict[Any, Tuple[Optional[_Task], List[_Task]]],
-               task: _Task, deps) -> None:
-    """Remove a completed `task` from the region records (shared by the
-    global virtual graph and the per-shard region maps)."""
-    for region, mode in deps:
-        ent = regions.get(region)
-        if ent is None:
-            continue
-        lw, readers = ent
-        if lw is task:
-            lw = None
-        if mode.reads and task in readers:
-            readers = [r for r in readers if r is not task]
-        if lw is None and not readers:
-            regions.pop(region, None)
-        else:
-            regions[region] = (lw, readers)
-
-
-class _VLock:
-    """Virtual lock: serializes critical sections in virtual time
-    (FIFO-handover approximation: acquirer waits until `free_at`)."""
-    __slots__ = ("free_at", "wait_us", "acquisitions")
-
-    def __init__(self) -> None:
-        self.free_at = 0.0
-        self.wait_us = 0.0
-        self.acquisitions = 0
-
-    def acquire(self, t: float, hold: float, overhead: float) -> float:
-        start = max(t, self.free_at)
-        self.wait_us += start - t
-        self.acquisitions += 1
-        end = start + hold + overhead
-        self.free_at = end
-        return end
-
-
-class _Graph:
-    """Virtual-time dependence graph — same rules as depgraph.DependenceGraph."""
-
-    def __init__(self) -> None:
-        self._regions: Dict[Any, Tuple[Optional[_Task], List[_Task]]] = {}
-        self.in_graph = 0
-        self.max_in_graph = 0
-
-    def submit(self, task: _Task) -> bool:
-        preds = _reg_collect_and_register(self._regions, task,
-                                          task.spec.deps)
-        live = [p for p in preds if p.state != "completed"]
-        task.preds = len(live)
-        for p in live:
-            p.succs.append(task)
-        self.in_graph += 1
-        self.max_in_graph = max(self.max_in_graph, self.in_graph)
-        task.state = "submitted"
-        if task.preds == 0:
-            task.state = "ready"
-            return True
-        return False
-
-    def complete(self, task: _Task) -> List[_Task]:
-        newly = []
-        for s in task.succs:
-            s.preds -= 1
-            if s.preds == 0 and s.state == "submitted":
-                s.state = "ready"
-                newly.append(s)
-        task.succs = []
-        _reg_scrub(self._regions, task, task.spec.deps)
-        self.in_graph -= 1
-        task.state = "completed"
-        return newly
-
-
-# ---------------------------------------------------------------------------
-
-
 class RuntimeSimulator:
-    """Event-driven simulation of `TaskRuntime` on `num_cores` virtual cores.
+    """Event-driven simulation of `TaskRuntime` on `num_cores` virtual
+    cores, driving the shared dependence-policy objects.
 
     Core 0 runs the "main thread" program (creates the top-level tasks,
     then taskwaits, working as a normal worker while waiting) — the same
-    structure as the real runtime and the paper's benchmarks.
+    structure as the real runtime and the paper's benchmarks. Under the
+    ``dast`` policy, core ``num_cores - 1`` is the dedicated manager.
     """
 
     def __init__(self, num_cores: int, mode: str = "ddast",
                  params: Optional[DDASTParams] = None,
                  costs: Optional[SimCosts] = None,
                  trace: bool = False,
-                 num_shards: Optional[int] = None) -> None:
-        assert mode in ("sync", "dast", "ddast", "sharded")
+                 num_shards: Optional[int] = None,
+                 batch_size: Optional[int] = None,
+                 placement: Any = "round_robin") -> None:
+        if mode not in ("sync", "dast", "ddast", "sharded"):
+            raise ValueError("mode must be sync|dast|ddast|sharded")
+        if mode == "dast" and num_cores < 2:
+            # core P-1 is the dedicated manager; with one core the main
+            # program could never run and the result would be silently
+            # empty.
+            raise ValueError("dast needs >= 2 cores (one is the manager)")
+        if num_shards is not None and num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if batch_size is not None and batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
         self.P = num_cores
         self.mode = mode
         self.params = params or DDASTParams()
         self.costs = costs or SimCosts()
         self.trace_enabled = trace
-        if num_shards is not None and num_shards < 1:
-            raise ValueError("num_shards must be >= 1")
         self.num_shards = num_shards
+        self.batch_size = batch_size
+        self.placement_kind = placement
 
     # -- public ---------------------------------------------------------
     def run(self, specs: List[SimTaskSpec]) -> SimResult:
-        c, mode, P, params = self.costs, self.mode, self.P, self.params
-        max_mgr = (params.resolved_max_threads(P) if mode in ("ddast", "sharded")
-                   else (1 if mode == "dast" else 0))
-        dast_core = P - 1 if mode == "dast" else -1
+        P, costs = self.P, self.costs
+        charge = SimCharger(costs)
+        placement = make_placement(self.placement_kind, P)
+        policy = make_policy(
+            self.mode, P,
+            num_workers=P,
+            params=self.params,
+            placement=placement,
+            charge=charge,
+            main_slot=0,
+            num_shards=self.num_shards or P,
+            batch_size=self.batch_size)
+        mgr_core = P - 1 if policy.needs_manager_thread else -1
 
-        graph = _Graph()
-        glock = _VLock()
-        tid_counter = [0]
-        total_tasks = [0]
-        completed = [0]
-        messages = [0]
-        active_mgr = [0]
-        polluted = [False] * P
-        trace: List[Tuple[float, int, int]] = []
-        serial_us = [0.0]
+        root = WorkDescriptor(func=None, label="sim-main")
+        root.state = TaskState.RUNNING
 
-        def count_serial(specs_: Sequence[SimTaskSpec]) -> None:
-            for s in specs_:
-                serial_us[0] += s.dur
-                total_tasks[0] += 1
+        serial_us = 0.0
+        total_tasks = 0
+        stack_count = [list(specs)]
+        while stack_count:
+            for s in stack_count.pop():
+                serial_us += s.dur
+                total_tasks += 1
                 if s.children:
-                    count_serial(s.children)
-        count_serial(specs)
+                    stack_count.append(s.children)
 
-        submit_q: List[List[Tuple[float, _Task]]] = [[] for _ in range(P)]
-        done_q: List[List[Tuple[float, _Task]]] = [[] for _ in range(P)]
-        submit_busy = [False] * P
-        ready: List[Tuple[float, int, _Task]] = []  # heap keyed by avail time
+        trace: List[Tuple[float, int, int]] = []
+        exec_order: List[str] = []
 
-        # ---- sharded-mode state (mirrors core.shards) -----------------
-        S = self.num_shards or P
-        shard_locks = [_VLock() for _ in range(S)]
-        # per-shard FIFO mailbox of (avail_time, kind, task); kind is
-        # "sub" or "done"; deque so the head-first drain is O(1)
-        shard_q: List[deque] = [deque() for _ in range(S)]
-        shard_busy = [False] * S               # one manager per shard
-        shard_regions: List[Dict[Any, Tuple[Optional[_Task], List[_Task]]]] = [
-            {} for _ in range(S)]
-        shard_succs: List[Dict[int, List[_Task]]] = [{} for _ in range(S)]
-        in_graph_s = [0]
-        max_in_graph_s = [0]
-
-        def partition_task(task: _Task) -> None:
-            """Hash each dep's region once; cache shard -> local deps
-            (mirrors shards.partition_deps, same bare-region keying)."""
-            parts: Dict[int, list] = {}
-            for region, m in task.spec.deps:
-                parts.setdefault(stable_region_hash(region) % S,
-                                 []).append((region, m))
-            task.shard_parts = parts
-            task.shard_ids = tuple(parts)
-
-        # events: (time, seq, core, finished_task_or_None). Task completion
-        # must be delivered as an event at its finish time — evaluating it
-        # eagerly at start time would advance the virtual lock's `free_at`
-        # into the future and stall every earlier-timestamped acquirer
-        # (a causality violation).
-        events: List[Tuple[float, int, int, Optional[_Task]]] = []
+        # events: (time, seq, core, kind, wd). Kinds: "step" re-evaluates
+        # the core's state machine; "fin" delivers a task-body completion
+        # at its finish time (evaluating it eagerly at start time would
+        # advance virtual locks into the future and stall every
+        # earlier-timestamped acquirer — a causality violation).
+        events: List[Tuple[float, int, int, str, Optional[WorkDescriptor]]] = []
         seq = [0]
         sleeping: set = set()
+        finished = [False]
+        makespan = [0.0]
 
-        def schedule(t: float, core: int, fin: Optional[_Task] = None) -> None:
-            heapq.heappush(events, (t, seq[0], core, fin))
+        def schedule(t: float, core: int, kind: str = "step",
+                     wd: Optional[WorkDescriptor] = None) -> None:
+            heapq.heappush(events, (t, seq[0], core, kind, wd))
             seq[0] += 1
 
         def wake_all(t: float) -> None:
-            while sleeping:
-                schedule(t, sleeping.pop())
+            for core in sorted(sleeping):
+                schedule(t, core)
+            sleeping.clear()
 
         def sample(t: float) -> None:
             if self.trace_enabled:
-                ig = in_graph_s[0] if mode == "sharded" else graph.in_graph
-                trace.append((t, ig, len(ready)))
+                trace.append((t, policy.in_graph(),
+                              placement.ready_count()))
 
-        def make_task(spec: SimTaskSpec, parent: Optional[_Task]) -> _Task:
-            task = _Task(spec, tid_counter[0], parent)
-            tid_counter[0] += 1
-            if parent is not None:
-                parent.pending_children += 1
-            return task
-
-        # ---- graph operations in virtual time -------------------------
-        def proc_submit(task: _Task, t: float) -> float:
-            hold = c.submit_cs + c.submit_cs_dep * len(task.spec.deps)
-            end = glock.acquire(t, hold, c.lock_overhead)
-            if graph.submit(task):
-                heapq.heappush(ready, (end, task.tid, task))
-            sample(end)
-            wake_all(end)
-            return end
-
-        def proc_done(task: _Task, t: float) -> float:
-            hold = c.done_cs + c.done_cs_dep * len(task.spec.deps)
-            end = glock.acquire(t, hold, c.lock_overhead)
-            for s in graph.complete(task):
-                heapq.heappush(ready, (end, s.tid, s))
-            if task.parent is not None:
-                task.parent.pending_children -= 1
-            completed[0] += 1
-            sample(end)
-            wake_all(end)
-            return end
-
-        # ---- sharded graph operations in virtual time -----------------
-        def proc_submit_shard(task: _Task, s: int, t: float) -> float:
-            local = task.shard_parts[s]
-            hold = (c.submit_cs / len(task.shard_ids)
-                    + c.submit_cs_dep * len(local))
-            end = shard_locks[s].acquire(t, hold, c.lock_overhead)
-            preds = _reg_collect_and_register(shard_regions[s], task, local)
-            for p in preds:
-                shard_succs[s].setdefault(p.tid, []).append(task)
-            # join-latch arithmetic: +local edges, -1 for this shard's
-            # latch unit (task.preds was initialized to len(shard_ids))
-            task.preds += len(preds) - 1
-            if task.preds == 0:
-                task.state = "ready"
-                heapq.heappush(ready, (end, task.tid, task))
-            sample(end)
-            wake_all(end)
-            return end
-
-        def proc_done_shard(task: _Task, s: int, t: float) -> float:
-            local = task.shard_parts[s]
-            hold = (c.done_cs / len(task.shard_ids)
-                    + c.done_cs_dep * len(local))
-            end = shard_locks[s].acquire(t, hold, c.lock_overhead)
-            _reg_scrub(shard_regions[s], task, local)
-            for succ in shard_succs[s].pop(task.tid, []):
-                succ.preds -= 1
-                if succ.preds == 0 and succ.state == "submitted":
-                    succ.state = "ready"
-                    heapq.heappush(ready, (end, succ.tid, succ))
-            task.done_pending -= 1
-            if task.done_pending == 0:          # last shard portion
-                task.state = "completed"
-                in_graph_s[0] -= 1
-                if task.parent is not None:
-                    task.parent.pending_children -= 1
-                completed[0] += 1
-            sample(end)
-            wake_all(end)
-            return end
-
-        def submit_task(core: int, task: _Task, t: float) -> float:
-            if mode == "sync":
-                polluted[core] = True
-                return proc_submit(task, t)
-            if mode == "sharded":
-                partition_task(task)
-                sids = task.shard_ids
-                task.preds = len(sids)          # submit latch
-                task.done_pending = len(sids)
-                task.state = "submitted"
-                in_graph_s[0] += 1
-                max_in_graph_s[0] = max(max_in_graph_s[0], in_graph_s[0])
-                tp = t + c.push
-                if not sids:                    # dependence-free
-                    task.state = "ready"
-                    heapq.heappush(ready, (tp, task.tid, task))
-                else:
-                    for s in sids:
-                        shard_q[s].append((tp, "sub", task))
-                wake_all(tp)
-                return tp
-            submit_q[core].append((t + c.push, task))
-            wake_all(t + c.push)
-            return t + c.push
-
-        def finish_task(core: int, task: _Task, t: float) -> float:
-            task.state = "finished"
-            if mode == "sync":
-                polluted[core] = True
-                return proc_done(task, t)
-            if mode == "sharded":
-                tp = t + c.push
-                if not task.shard_ids:          # never entered any shard
-                    task.state = "completed"
-                    in_graph_s[0] -= 1
-                    if task.parent is not None:
-                        task.parent.pending_children -= 1
-                    completed[0] += 1
-                else:
-                    for s in task.shard_ids:
-                        shard_q[s].append((tp, "done", task))
-                wake_all(tp)
-                return tp
-            done_q[core].append((t + c.push, task))
-            wake_all(t + c.push)
-            return t + c.push
-
-        # ---- DDAST callback (Listing 2) in virtual time ---------------
-        def run_callback(core: int, t: float) -> float:
-            if active_mgr[0] >= max_mgr:
-                return t
-            active_mgr[0] += 1
-            did_work = False
-            spins = params.max_spins
-            while True:
-                total_cnt = 0
-                for w in range(P):
-                    if len(ready) >= params.min_ready_tasks:
-                        break
-                    cnt = 0
-                    if not submit_busy[w]:
-                        submit_busy[w] = True
-                        while (cnt < params.max_ops_thread and submit_q[w]
-                               and submit_q[w][0][0] <= t):
-                            _, task = submit_q[w].pop(0)
-                            t = proc_submit(task, t + c.msg_overhead)
-                            messages[0] += 1
-                            cnt += 1
-                        submit_busy[w] = False
-                    while (cnt < params.max_ops_thread and done_q[w]
-                           and done_q[w][0][0] <= t):
-                        _, task = done_q[w].pop(0)
-                        t = proc_done(task, t + c.msg_overhead)
-                        messages[0] += 1
-                        cnt += 1
-                    total_cnt += cnt
-                if total_cnt:
-                    did_work = True
-                spins = (spins - 1) if total_cnt == 0 else params.max_spins
-                if spins == 0 or len(ready) >= params.min_ready_tasks:
-                    break
-            active_mgr[0] -= 1
-            if did_work:
-                polluted[core] = True
-            return t
-
-        # ---- sharded callback: idle cores claim whole shards ----------
-        def run_callback_sharded(core: int, t: float) -> float:
-            if active_mgr[0] >= max_mgr:
-                return t
-            active_mgr[0] += 1
-            did_work = False
-            spins = params.max_spins
-            while True:
-                total_cnt = 0
-                for off in range(S):
-                    if len(ready) >= params.min_ready_tasks:
-                        break
-                    s = (core + off) % S        # spread managers out
-                    if shard_busy[s]:
-                        continue
-                    shard_busy[s] = True
-                    cnt = 0
-                    while (cnt < params.max_ops_thread and shard_q[s]
-                           and shard_q[s][0][0] <= t):
-                        _, kind, task = shard_q[s].popleft()
-                        proc = (proc_submit_shard if kind == "sub"
-                                else proc_done_shard)
-                        t = proc(task, s, t + c.msg_overhead)
-                        messages[0] += 1
-                        cnt += 1
-                    shard_busy[s] = False
-                    total_cnt += cnt
-                if total_cnt:
-                    did_work = True
-                spins = (spins - 1) if total_cnt == 0 else params.max_spins
-                if spins == 0 or len(ready) >= params.min_ready_tasks:
-                    break
-            active_mgr[0] -= 1
-            if did_work:
-                polluted[core] = True
-            return t
-
-        def drain_dast(t: float) -> float:
-            progress = True
-            t2 = t
-            while progress:
-                progress = False
-                for w in range(P):
-                    while submit_q[w] and submit_q[w][0][0] <= t2:
-                        _, task = submit_q[w].pop(0)
-                        t2 = proc_submit(task, t2 + c.msg_overhead)
-                        messages[0] += 1
-                        progress = True
-                    while done_q[w] and done_q[w][0][0] <= t2:
-                        _, task = done_q[w].pop(0)
-                        t2 = proc_done(task, t2 + c.msg_overhead)
-                        messages[0] += 1
-                        progress = True
-            return t2
-
-        # ---- core state machine ---------------------------------------
-        # progs[core] = stack of creation frames [specs, idx, parent]
+        # progs[core] = stack of creation frames [specs, idx, parent_wd];
+        # parent_wd is None for the top-level (root) program frame.
         progs: Dict[int, List[List[Any]]] = {i: [] for i in range(P)}
         progs[0].append([list(specs), 0, None])
 
-        def earliest_msg() -> Optional[float]:
-            best: Optional[float] = None
-            if mode == "sharded":
-                for s in range(S):
-                    q = shard_q[s]
-                    if q and (best is None or q[0][0] < best):
-                        best = q[0][0]
-                return best
-            for w in range(P):
-                for q in (submit_q[w], done_q[w]):
-                    if q and (best is None or q[0][0] < best):
-                        best = q[0][0]
-            return best
+        def run_worker(core: int) -> bool:
+            """Pop + start one ready task on `core` at charge.now.
+            Returns True if a task was started."""
+            wd = placement.pop(core)
+            if wd is None:
+                return False
+            t = charge.now
+            dur = wd.duration * (costs.pollution
+                                 if core in charge.polluted else 1.0)
+            charge.polluted.discard(core)
+            wd.mark_running()
+            exec_order.append(wd.label)
+            children = getattr(wd, "sim_children", None)
+            if children:
+                # parent body runs for `dur`, then the creation frame
+                # takes over (children created after the body, as in the
+                # threaded apps where the body IS the creation loop).
+                progs[core].append([children, 0, wd])
+                schedule(t + dur, core)
+            else:
+                schedule(t + dur, core, kind="fin", wd=wd)
+            return True
 
         def step_core(core: int, t: float) -> None:
-            if core == dast_core:               # dedicated manager [7]
-                t2 = drain_dast(t)
-                if t2 > t:
-                    schedule(t2, core)
+            charge.begin(core, t)
+            if core == mgr_core:            # dedicated manager [7]
+                n = policy.drain_all()
+                if n:
+                    sample(charge.now)
+                    wake_all(charge.now)
+                    schedule(charge.now, core)
                 else:
-                    nxt = earliest_msg()
-                    if nxt is not None and nxt > t:
-                        schedule(nxt, core)
-                    else:
-                        sleeping.add(core)
+                    sleeping.add(core)
                 return
-            # 1. creation-program work (main thread / nesting parents)
             stack = progs[core]
             if stack:
                 frame = stack[-1]
                 specs_, idx, parent = frame
-                if idx < len(specs_):
+                if idx < len(specs_):       # creation program
                     spec = specs_[idx]
                     frame[1] += 1
-                    task = make_task(spec, parent)
-                    schedule(submit_task(core, task, t + c.create), core)
+                    charge.create()
+                    wd = WorkDescriptor(
+                        func=None, deps=tuple(spec.deps), label=spec.label,
+                        parent=parent if parent is not None else root)
+                    wd.duration = spec.dur
+                    wd.sim_children = spec.children
+                    policy.submit(wd, core)
+                    sample(charge.now)
+                    wake_all(charge.now)
+                    schedule(charge.now, core)
                     return
                 # taskwait phase of this frame
-                pend = (parent.pending_children if parent is not None
-                        else total_tasks[0] - completed[0])
-                if pend == 0:
+                policy.flush(core)
+                waiter = parent if parent is not None else root
+                if waiter.num_children_alive == 0 and not policy.pending():
                     stack.pop()
-                    if parent is not None:
-                        schedule(finish_task(core, parent, t), core)
-                        return
-                    schedule(t, core)  # main program done; loop re-checks
+                    if parent is not None:  # nested parent completes
+                        parent.mark_finished()
+                        placement.note_executed(parent, core)
+                        policy.complete(parent, core)
+                        sample(charge.now)
+                        wake_all(charge.now)
+                        schedule(charge.now, core)
+                    else:                   # main program done
+                        finished[0] = True
+                        makespan[0] = max(makespan[0], charge.now)
                     return
                 # blocked in taskwait: fall through and work
-            # 2. worker behavior
-            if ready and ready[0][0] <= t:
-                task = heapq.heappop(ready)[2]
-                dur = task.spec.dur * (c.pollution if polluted[core] else 1.0)
-                polluted[core] = False
-                if task.spec.children:
-                    task.state = "running"
-                    stack.append([list(task.spec.children), 0, task])
-                    schedule(t + dur, core)     # parent body, then children
-                else:
-                    schedule(t + dur, core, fin=task)   # finish event
+            if run_worker(core):
                 return
-            if ready:                            # ready item not visible yet
-                schedule(ready[0][0], core)
-                return
-            # 3. idle: become a manager (ddast/sharded) or sleep until
-            # state change
-            if mode in ("ddast", "sharded"):
-                cb = run_callback if mode == "ddast" else run_callback_sharded
-                t2 = cb(core, t)
-                if t2 > t:
-                    schedule(t2, core)
-                    return
-                nxt = earliest_msg()
-                if nxt is not None and nxt > t:
-                    schedule(nxt, core)
-                    return
-            sleeping.add(core)
+            # idle: offer cycles to the policy (Listing 2) or sleep
+            n = policy.idle_callback(core) \
+                if policy.uses_idle_managers else 0
+            if n or charge.now > t:
+                sample(charge.now)
+                wake_all(charge.now)
+                schedule(charge.now, core)
+            else:
+                sleeping.add(core)
 
         for i in range(P):
             schedule(0.0, i)
 
-        makespan = 0.0
         guard = 0
-        while events:
-            t, _, core, fin = heapq.heappop(events)
-            if completed[0] >= total_tasks[0] and not progs[0]:
-                makespan = max(makespan, t)
-                break
-            if fin is not None:
-                schedule(finish_task(core, fin, t), core)
+        while events and not finished[0]:
+            t, _, core, kind, wd = heapq.heappop(events)
+            makespan[0] = max(makespan[0], t)
+            if kind == "fin":
+                charge.begin(core, t)
+                wd.mark_finished()
+                placement.note_executed(wd, core)
+                policy.complete(wd, core)
+                sample(charge.now)
+                wake_all(charge.now)
+                schedule(charge.now, core)
             else:
                 step_core(core, t)
-            makespan = max(makespan, t)
             guard += 1
             if guard > 100_000_000:  # pragma: no cover
                 raise RuntimeError("simulator exceeded event budget")
 
-        if mode == "sharded":
-            makespan = max(makespan, *(l.free_at for l in shard_locks))
-            return SimResult(
-                makespan_us=makespan,
-                serial_us=serial_us[0],
-                tasks=total_tasks[0],
-                lock_wait_us=sum(l.wait_us for l in shard_locks),
-                lock_acquisitions=sum(l.acquisitions for l in shard_locks),
-                messages=messages[0],
-                max_in_graph=max_in_graph_s[0],
-                trace=trace,
-            )
-        makespan = max(makespan, glock.free_at)
+        st = policy.stats()
         return SimResult(
-            makespan_us=makespan,
-            serial_us=serial_us[0],
-            tasks=total_tasks[0],
-            lock_wait_us=glock.wait_us,
-            lock_acquisitions=glock.acquisitions,
-            messages=messages[0],
-            max_in_graph=graph.max_in_graph,
+            makespan_us=max(makespan[0], charge.max_free_at()),
+            serial_us=serial_us,
+            tasks=total_tasks,
+            lock_wait_us=charge.lock_wait_us(),
+            lock_acquisitions=charge.lock_acquisitions(),
+            messages=st["messages_processed"],
+            max_in_graph=st["max_in_graph"],
+            total_edges=st["total_edges"],
             trace=trace,
+            exec_order=exec_order,
         )
