@@ -1,0 +1,256 @@
+"""Record-and-replay benchmark: replay vs live iteration cost.
+
+Simulated (virtual-time) comparison over the paper's three app graphs
+(``taskgraph_apps``) submitted for several iterations, live vs with
+``replay=True`` (``engine/replay.py``): iteration 1 records through the
+live policy, every later structurally identical iteration bypasses
+dependence analysis, locks, and mailboxes entirely. The headline
+numbers are the per-iteration makespan / lock-acquisition / message
+deltas (``SimResult.iter_*``). A real-threaded section runs the same
+iteration loop on this host and reports the RuntimeStats deltas between
+taskwaits — lock acquisitions and messages in replay steady state are
+exactly zero there too, by construction, which is deterministic enough
+to gate.
+
+Standalone:
+
+    PYTHONPATH=src python benchmarks/bench_replay.py            # full sweep
+    PYTHONPATH=src python benchmarks/bench_replay.py --smoke    # ~10 s, CI
+    ... [--out BENCH_replay.json]
+
+or as a suite inside ``python -m benchmarks.run --only replay``.
+
+Exit status doubles as the CI gate, on the 8x8 matmul graph over 4
+iterations (the acceptance workload): non-zero when (a) replay
+steady-state iterations perform ANY lock acquisition or process ANY
+mailbox message, or (b) the steady-state replay iteration stops being
+faster than the live steady-state iteration.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import RuntimeSimulator, TaskRuntime  # noqa: E402
+from repro.core.taskgraph_apps import sim_app_specs  # noqa: E402
+from repro.core.wd import DepMode  # noqa: E402
+
+# The gate workload is fixed by the acceptance criterion: 8x8 matmul,
+# 4 iterations — identical in smoke and full runs.
+GATE = {"app": "matmul", "scale": 8, "iters": 4, "workers": 8}
+
+FULL = {
+    "apps": {"matmul": 8, "nbody": 8, "sparselu": 10},
+    "workers": (8, 32),
+    "modes": ("sync", "ddast", "sharded"),
+    "iters": 4,
+    "real_tasks": 300,
+    "real_iters": 4,
+}
+SMOKE = {
+    "apps": {"matmul": 8, "nbody": 4, "sparselu": 8},
+    "workers": (8,),
+    "modes": ("sync", "sharded"),
+    "iters": 4,
+    "real_tasks": 150,
+    "real_iters": 3,
+}
+
+
+def _sim_pair(app: str, scale: int, workers: int, mode: str,
+              iters: int) -> dict:
+    specs = sim_app_specs(app, scale)
+    live = RuntimeSimulator(workers, mode).run(specs, iterations=iters)
+    rep = RuntimeSimulator(workers, mode, replay=True).run(
+        specs, iterations=iters)
+    return {
+        "app": app, "workers": workers, "mode": mode, "iters": iters,
+        "tasks": rep.tasks,
+        "live_makespan_us": round(live.makespan_us, 1),
+        "replay_makespan_us": round(rep.makespan_us, 1),
+        "live_iter_us": [round(x, 1) for x in live.iter_makespans_us],
+        "replay_iter_us": [round(x, 1) for x in rep.iter_makespans_us],
+        "live_messages": live.messages,
+        "replay_messages": rep.messages,
+        "replay_steady_lock_acq": sum(rep.iter_lock_acq[1:]),
+        "replay_steady_messages": sum(rep.iter_messages[1:]),
+        "speedup_vs_live": round(live.makespan_us / rep.makespan_us, 3)
+        if rep.makespan_us else 0.0,
+    }
+
+
+def sim_sweep(cfg: dict) -> list:
+    records = []
+    for app, scale in cfg["apps"].items():
+        for p in cfg["workers"]:
+            for mode in cfg["modes"]:
+                records.append(_sim_pair(app, scale, p, mode,
+                                         cfg["iters"]))
+    return records
+
+
+def real_sweep(cfg: dict) -> list:
+    """Real threads: the spin-task iteration loop with and without
+    replay; per-iteration RuntimeStats deltas (locks/messages are
+    deterministic, wall time informational)."""
+    records = []
+
+    def spin():
+        x = 0.0
+        for i in range(200):
+            x += i * i
+        return x
+
+    tasks, iters = cfg["real_tasks"], cfg["real_iters"]
+    for mode, replay in (("sync", False), ("sync", True),
+                         ("sharded", False), ("sharded", True)):
+        iter_wall, iter_locks, iter_msgs = [], [], []
+        with TaskRuntime(num_workers=4, mode=mode, num_shards=16,
+                         replay=replay) as rt:
+            prev_l = prev_m = 0
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                for i in range(tasks):
+                    rt.task(spin, deps=[((i % 97,), DepMode.INOUT)])
+                rt.taskwait()
+                iter_wall.append(round(time.perf_counter() - t0, 4))
+                st = rt.policy.stats()
+                iter_locks.append(st["lock_acquisitions"] - prev_l)
+                iter_msgs.append(st["messages_processed"] - prev_m)
+                prev_l = st["lock_acquisitions"]
+                prev_m = st["messages_processed"]
+        records.append({
+            "mode": mode, "replay": replay, "tasks": tasks, "iters": iters,
+            "iter_wall_s": iter_wall,
+            "iter_lock_acq": iter_locks,
+            "iter_messages": iter_msgs,
+            "steady_lock_acq": sum(iter_locks[1:]),
+            "steady_messages": sum(iter_msgs[1:]),
+            "replay_iterations": rt.stats.replay_iterations,
+        })
+    return records
+
+
+def acceptance(sim_records: list, real_records: list) -> dict:
+    """The CI gates, on the 8x8 matmul x 4 iteration workload: (a)
+    replay steady-state lock acquisitions AND mailbox messages == 0
+    (simulated and real-threaded), (b) steady-state replay iteration
+    time < live iteration time (simulated — deterministic)."""
+    g = [r for r in sim_records
+         if r["app"] == GATE["app"] and r["workers"] == GATE["workers"]
+         and r["iters"] == GATE["iters"]]
+    out = {"checked": bool(g)}
+    if g:
+        worst_locks = max(r["replay_steady_lock_acq"] for r in g)
+        worst_msgs = max(r["replay_steady_messages"] for r in g)
+        # steady-state per-iteration time: best case excluded, compare
+        # the worst replay iteration against the best live one
+        slow_replay = max(max(r["replay_iter_us"][1:]) for r in g)
+        fast_live = min(min(r["live_iter_us"][1:]) for r in g)
+        out.update({
+            "replay_steady_lock_acq": worst_locks,
+            "replay_steady_messages": worst_msgs,
+            "replay_steady_zero_cost": worst_locks == 0 and worst_msgs == 0,
+            "replay_worst_steady_iter_us": slow_replay,
+            "live_best_steady_iter_us": fast_live,
+            "replay_iter_faster_than_live": slow_replay < fast_live,
+        })
+    real_rep = [r for r in real_records if r["replay"]]
+    out["real_checked"] = bool(real_rep)
+    if real_rep:
+        out["real_steady_lock_acq"] = max(r["steady_lock_acq"]
+                                          for r in real_rep)
+        out["real_steady_messages"] = max(r["steady_messages"]
+                                          for r in real_rep)
+        out["real_steady_zero_cost"] = (out["real_steady_lock_acq"] == 0
+                                        and out["real_steady_messages"]
+                                        == 0)
+    return out
+
+
+def collect(smoke: bool, with_real: bool = True) -> dict:
+    cfg = SMOKE if smoke else FULL
+    t0 = time.time()
+    sim = sim_sweep(cfg)
+    # the gate workload runs regardless of the sweep config
+    if not any(r["app"] == GATE["app"] and r["workers"] == GATE["workers"]
+               for r in sim):
+        sim.append(_sim_pair(GATE["app"], GATE["scale"], GATE["workers"],
+                             "sharded", GATE["iters"]))
+    real = real_sweep(cfg) if with_real else []
+    return {
+        "bench": "replay",
+        "smoke": smoke,
+        "sim": sim,
+        "real": real,
+        "acceptance": acceptance(sim, real),
+        "bench_wall_s": round(time.time() - t0, 2),
+    }
+
+
+def run(csv_rows: list) -> None:
+    """benchmarks.run suite entry point."""
+    out = collect(smoke=True)
+    for r in out["sim"]:
+        tag = f"replay.sim.{r['app']}.p{r['workers']}.{r['mode']}"
+        csv_rows.append((f"{tag}.speedup_vs_live", r["speedup_vs_live"],
+                         f"steady_locks={r['replay_steady_lock_acq']} "
+                         f"steady_msgs={r['replay_steady_messages']}"))
+    for r in out["real"]:
+        tag = (f"replay.real.{r['mode']}"
+               + (".replay" if r["replay"] else ".live"))
+        csv_rows.append((f"{tag}.steady_lock_acq", r["steady_lock_acq"],
+                         f"steady_msgs={r['steady_messages']}"))
+    acc = out["acceptance"]
+    csv_rows.append(("replay.acceptance.steady_zero_cost",
+                     int(acc.get("replay_steady_zero_cost", False)), ""))
+    csv_rows.append(("replay.acceptance.iter_faster_than_live",
+                     int(acc.get("replay_iter_faster_than_live", False)),
+                     ""))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep, same gate workload (~10 s, CI)")
+    ap.add_argument("--no-real", action="store_true",
+                    help="skip the real-threaded section")
+    ap.add_argument("--out", default="BENCH_replay.json",
+                    help="JSON output path")
+    args = ap.parse_args()
+    out = collect(smoke=args.smoke, with_real=not args.no_real)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    acc = out["acceptance"]
+    print(f"wrote {args.out} ({len(out['sim'])} sim + "
+          f"{len(out['real'])} real records, {out['bench_wall_s']}s)")
+    failed = False
+    if acc.get("checked"):
+        print(f"matmul 8x8 @ {GATE['workers']} workers x {GATE['iters']} "
+              f"iters: replay steady locks="
+              f"{acc['replay_steady_lock_acq']} "
+              f"msgs={acc['replay_steady_messages']} -> "
+              f"{'OK' if acc['replay_steady_zero_cost'] else 'REGRESSION'}")
+        failed |= not acc["replay_steady_zero_cost"]
+        print(f"steady iteration time: replay worst "
+              f"{acc['replay_worst_steady_iter_us']}us vs live best "
+              f"{acc['live_best_steady_iter_us']}us -> "
+              f"{'OK' if acc['replay_iter_faster_than_live'] else 'REGRESSION'}")
+        failed |= not acc["replay_iter_faster_than_live"]
+    if acc.get("real_checked"):
+        print(f"real threads: replay steady locks="
+              f"{acc['real_steady_lock_acq']} "
+              f"msgs={acc['real_steady_messages']} -> "
+              f"{'OK' if acc['real_steady_zero_cost'] else 'REGRESSION'}")
+        failed |= not acc["real_steady_zero_cost"]
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

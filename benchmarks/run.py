@@ -11,9 +11,9 @@ import time
 
 sys.path.insert(0, "src")
 
-from benchmarks import (bench_contention, bench_roofline,  # noqa: E402
-                        bench_scalability, bench_shards, bench_traces,
-                        bench_tuning)
+from benchmarks import (bench_contention, bench_replay,  # noqa: E402
+                        bench_roofline, bench_scalability, bench_shards,
+                        bench_traces, bench_tuning)
 
 SUITES = {
     "contention": bench_contention.run,     # §1 motivation + calibration
@@ -22,6 +22,7 @@ SUITES = {
     "traces": bench_traces.run,             # Figs 12-14
     "roofline": bench_roofline.run,         # §Roofline table
     "shards": bench_shards.run,             # sharded manager sweep
+    "replay": bench_replay.run,             # record-and-replay vs live
 }
 
 

@@ -11,10 +11,12 @@ from .ddast import DDASTManager, DDASTParams
 from .depgraph import DependenceGraph
 from .dispatcher import FunctionalityDispatcher
 from .engine import (CostCharger, DastPolicy, DdastPolicy, DependencePolicy,
-                     PlacementPolicy, RoundRobinPlacement, ShardAffinePlacement,
+                     PlacementPolicy, ReplayGraph, ReplayPolicy,
+                     RoundRobinPlacement, ShardAffinePlacement,
                      ShardedPolicy, SimCharger, SyncPolicy, make_placement,
                      make_policy)
-from .messages import DoneTaskMessage, SubmitBatchMessage, SubmitTaskMessage
+from .messages import (DoneBatchMessage, DoneTaskMessage,
+                       SubmitBatchMessage, SubmitTaskMessage)
 from .queues import InstrumentedLock, SPSCQueue, WorkerQueues
 from .runtime import RuntimeStats, TaskRuntime
 from .shards import (AtomicCounter, GraphShard, ShardMailbox, ShardRouter,
@@ -29,10 +31,11 @@ __all__ = [
     "FunctionalityDispatcher",
     "CostCharger", "SimCharger",
     "DependencePolicy", "SyncPolicy", "DastPolicy", "DdastPolicy",
-    "ShardedPolicy", "make_policy",
+    "ShardedPolicy", "ReplayPolicy", "ReplayGraph", "make_policy",
     "PlacementPolicy", "RoundRobinPlacement", "ShardAffinePlacement",
     "make_placement",
-    "DoneTaskMessage", "SubmitBatchMessage", "SubmitTaskMessage",
+    "DoneBatchMessage", "DoneTaskMessage", "SubmitBatchMessage",
+    "SubmitTaskMessage",
     "InstrumentedLock", "SPSCQueue", "WorkerQueues",
     "RuntimeStats", "TaskRuntime",
     "AtomicCounter", "GraphShard", "ShardMailbox", "ShardRouter",

@@ -114,6 +114,13 @@ class DynamicTuner:
         # graph — resize would refuse; don't consume a metric sample.
         if pol.pending() or pol.in_graph():
             return
+        # Never resize under a live record-and-replay recording: the
+        # recording freezes against the structures that exist when it
+        # completes, and a mid-recording partition swap would also skew
+        # the metric sample. (A *frozen* replay is unaffected — its
+        # steady state never touches the shards — so tuning proceeds.)
+        if getattr(pol, "recording_live", False):
+            return
         self.consider_shard_step(pol.stats())
 
     def consider_shard_step(self, stats: dict) -> bool:

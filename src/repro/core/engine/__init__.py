@@ -23,12 +23,14 @@ from .placement import (PlacementPolicy, RoundRobinPlacement,
                         ShardAffinePlacement, make_placement)
 from .policy import (POLICY_NAMES, DastPolicy, DdastPolicy,
                      DependencePolicy, ShardedPolicy, SyncPolicy,
-                     make_policy)
+                     make_policy, mode_uses_shards)
+from .replay import ReplayGraph, ReplayPolicy
 
 __all__ = [
     "CostCharger", "SimCharger", "VirtualLock",
     "PlacementPolicy", "RoundRobinPlacement", "ShardAffinePlacement",
     "make_placement",
     "POLICY_NAMES", "DependencePolicy", "SyncPolicy", "DastPolicy",
-    "DdastPolicy", "ShardedPolicy", "make_policy",
+    "DdastPolicy", "ShardedPolicy", "make_policy", "mode_uses_shards",
+    "ReplayGraph", "ReplayPolicy",
 ]

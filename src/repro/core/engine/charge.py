@@ -61,6 +61,18 @@ class CostCharger:
         """A batched Submit: ``portions`` is one (nlocal, nparts) pair per
         task portion applied under a single lock acquisition."""
 
+    def done_batch_cs(self, key: Hashable,
+                      portions: Sequence[Tuple[int, int]]) -> None:
+        """A batched Done: ``portions`` as in :meth:`submit_batch_cs`."""
+
+    def replay_submit(self) -> None:
+        """One record-and-replay Submit: an O(1) structural-key check +
+        join-latch decrement — no lock, no message."""
+
+    def replay_done(self, nsuccs: int) -> None:
+        """One record-and-replay Done: ``nsuccs`` successor latch
+        decrements — no lock, no message."""
+
 
 class VirtualLock:
     """Serializes critical sections in virtual time (FIFO-handover
@@ -155,6 +167,23 @@ class SimCharger(CostCharger):
         hold = sum(self._portion_hold(c.submit_cs, c.submit_cs_dep, nl, np)
                    for nl, np in portions)
         self._acquire(key, hold)
+
+    def done_batch_cs(self, key: Hashable,
+                      portions: Sequence[Tuple[int, int]]) -> None:
+        c = self.costs
+        hold = sum(self._portion_hold(c.done_cs, c.done_cs_dep, nl, np)
+                   for nl, np in portions)
+        self._acquire(key, hold)
+
+    # Replay steps touch no shared structure: pure local-time cost, no
+    # VirtualLock and — deliberately — no pollution flag, which is how
+    # the simulator models the §6.1 cache win compounding with replay.
+    def replay_submit(self) -> None:
+        self.now += self.costs.replay_submit
+
+    def replay_done(self, nsuccs: int) -> None:
+        self.now += (self.costs.replay_done
+                     + self.costs.replay_dec * nsuccs)
 
     # -- result aggregation ---------------------------------------------
     def lock_wait_us(self) -> float:

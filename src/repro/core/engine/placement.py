@@ -27,7 +27,7 @@ import threading
 from collections import OrderedDict
 from typing import Dict, Hashable, List, Optional
 
-from ..shards import StealDeque
+from ..shards import StealDeque, stable_region_hash
 from ..wd import WorkDescriptor
 
 
@@ -89,28 +89,56 @@ class ShardAffinePlacement(RoundRobinPlacement):
     regions; falls back to the inherited round-robin push when no
     affinity is recorded.
 
-    The affinity map is a bounded LRU (``max_regions`` entries, default
-    4096): unlike the dependence graphs, which scrub a region when its
-    last task completes, affinity is purely a locality hint and would
-    otherwise grow one entry per region ever touched on streaming
-    workloads. Reads and writes take a small lock — eviction mutates the
-    ordered map, so the GIL alone is not enough — which is acceptable
-    because this placement is opt-in and the critical section is two
-    dict operations."""
+    With ``num_shards`` set (the drivers pass their shard count), the
+    map is keyed by SHARD ID — ``stable_region_hash(region) %
+    num_shards``, the same partition function the sharded graph uses —
+    instead of the exact region. That hard-bounds the map at
+    ``num_shards`` entries on region-churning workloads (a streaming app
+    touches unbounded regions but a fixed set of shards) and matches the
+    locality the sharded manager creates anyway: tasks whose regions
+    share a shard already share manager/lock cache lines. Without
+    ``num_shards`` (direct construction) the exact-region keying and the
+    bounded LRU (``max_regions`` entries, default 4096) remain.
 
-    def __init__(self, num_slots: int, max_regions: int = 4096) -> None:
+    Reads and writes take a small lock — eviction mutates the ordered
+    map, so the GIL alone is not enough — which is acceptable because
+    this placement is opt-in and the critical section is two dict
+    operations."""
+
+    def __init__(self, num_slots: int, max_regions: int = 4096,
+                 num_shards: Optional[int] = None) -> None:
         super().__init__(num_slots)
         self._affinity: "OrderedDict[Hashable, int]" = OrderedDict()
         self._max_regions = max(1, max_regions)
+        self._num_shards = num_shards
         self._aff_lock = threading.Lock()
         self.affine_pushes = 0
         self.fallback_pushes = 0
+
+    def _key(self, region: Hashable) -> Hashable:
+        if self._num_shards:
+            return stable_region_hash(region) % self._num_shards
+        return region
+
+    def set_num_shards(self, num_shards: int) -> None:
+        """Re-key after an online shard-count retune
+        (``ShardedPolicy.resize``): old buckets are meaningless under
+        the new modulus, so the hint map is cleared — affinity rebuilds
+        from the next executions, which is the same cold start a resize
+        imposes on the shards themselves."""
+        with self._aff_lock:
+            # exact-region keying (None) is a deliberate construction
+            # choice — a resize must not convert it to shard keying
+            if self._num_shards is not None \
+                    and num_shards != self._num_shards:
+                self._num_shards = num_shards
+                self._affinity.clear()
 
     def preferred_slot(self, wd: WorkDescriptor) -> Optional[int]:
         n = len(self.deques)
         with self._aff_lock:
             for region, _mode in wd.deps:
-                slot = self._affinity.get(region)
+                slot = self._affinity.get(self._key(region))
                 if slot is not None and slot < n:
                     return slot
         return None
@@ -127,8 +155,9 @@ class ShardAffinePlacement(RoundRobinPlacement):
     def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
         with self._aff_lock:
             for region, _mode in wd.deps:
-                self._affinity[region] = slot
-                self._affinity.move_to_end(region)
+                key = self._key(region)
+                self._affinity[key] = slot
+                self._affinity.move_to_end(key)
             while len(self._affinity) > self._max_regions:
                 self._affinity.popitem(last=False)
 
@@ -139,9 +168,12 @@ _PLACEMENTS = {
 }
 
 
-def make_placement(kind, num_slots: int) -> PlacementPolicy:
+def make_placement(kind, num_slots: int,
+                   num_shards: Optional[int] = None) -> PlacementPolicy:
     """``kind`` is a name from ``_PLACEMENTS``, an already-built
-    :class:`PlacementPolicy` (returned as-is), or a class to instantiate."""
+    :class:`PlacementPolicy` (returned as-is), or a class to
+    instantiate. ``num_shards`` (from the driver) switches
+    shard-affine placements to bounded shard-id affinity keying."""
     if isinstance(kind, PlacementPolicy):
         if len(kind.deques) != num_slots:
             raise ValueError(
@@ -149,10 +181,14 @@ def make_placement(kind, num_slots: int) -> PlacementPolicy:
                 f"driver needs {num_slots}")
         return kind
     if isinstance(kind, type) and issubclass(kind, PlacementPolicy):
-        return kind(num_slots)
-    try:
-        cls = _PLACEMENTS[kind]
-    except KeyError:
-        raise ValueError(
-            f"placement must be one of {sorted(_PLACEMENTS)}, got {kind!r}")
+        cls = kind
+    else:
+        try:
+            cls = _PLACEMENTS[kind]
+        except KeyError:
+            raise ValueError(
+                f"placement must be one of {sorted(_PLACEMENTS)}, "
+                f"got {kind!r}")
+    if num_shards and issubclass(cls, ShardAffinePlacement):
+        return cls(num_slots, num_shards=num_shards)
     return cls(num_slots)

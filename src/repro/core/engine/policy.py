@@ -104,6 +104,12 @@ class DependencePolicy:
     def flush(self, slot: int) -> None:
         """Make the slot's buffered submits visible (batching policies)."""
 
+    def notify_quiescent(self, root: bool = True) -> None:
+        """A taskwait on this policy reached quiescence; ``root`` marks
+        the driver's top-level (root-task) taskwait — the boundary the
+        record-and-replay wrapper freezes and validates recordings at.
+        Plain policies have no iteration state: no-op."""
+
     def pending(self) -> int:
         return 0
 
@@ -124,6 +130,18 @@ def _blank_stats() -> Dict[str, object]:
         "shard_messages": [],
         "shard_lock_wait_s": [],
     }
+
+
+def _merge_shard_lists(carried, current):
+    """Element-wise sum of two per-shard counter lists whose lengths may
+    differ across a ``resize`` (shard i's meaning changes with the
+    partition, but the element-wise sum keeps totals exact and per-slot
+    attribution as close as the resize allows)."""
+    if not carried:
+        return list(current)
+    n = max(len(carried), len(current))
+    return [(carried[i] if i < len(carried) else 0)
+            + (current[i] if i < len(current) else 0) for i in range(n)]
 
 
 class _GlobalGraphMixin:
@@ -342,7 +360,13 @@ class ShardedPolicy(_ManagedPolicy):
     graphs + mailboxes, idle workers claim whole shards. With
     ``batch_size`` set, a slot's Submits are buffered and shipped as
     :class:`~repro.core.messages.SubmitBatchMessage`s — one mailbox entry
-    (one ``msg_overhead``) per batch per shard."""
+    (one ``msg_overhead``) per batch per shard — and its Dones are
+    buffered symmetrically into per-slot done buffers shipped as
+    :class:`~repro.core.messages.DoneBatchMessage`s, flushed at the same
+    points the submit buffers flush (capacity, taskwait ``flush``,
+    ``drain_all``) plus whenever the owning slot goes idle (Dones, unlike
+    Submits, gate successors' progress, so an idle owner must not sit on
+    them)."""
 
     name = "sharded"
     uses_idle_managers = True
@@ -360,8 +384,8 @@ class ShardedPolicy(_ManagedPolicy):
         self.router = ShardRouter(self.graph,
                                   on_ready=self.placement.push,
                                   charge=self.charge)
-        # Per-slot submit buffers. The owning slot appends; flush may
-        # additionally be invoked by OTHER threads (drain_all at
+        # Per-slot submit + done buffers. The owning slot appends; flush
+        # may additionally be invoked by OTHER threads (drain_all at
         # taskwait/shutdown edges), so each buffer's read-swap and the
         # subsequent push_batch are serialized by a per-slot lock —
         # otherwise an append could land on an orphaned list and the WD
@@ -370,6 +394,8 @@ class ShardedPolicy(_ManagedPolicy):
         # of one slot cannot interleave their mailbox entries, which
         # would break per-region FIFO order.
         self._buffers: List[List[WorkDescriptor]] = [
+            [] for _ in range(self.num_slots)]
+        self._done_buffers: List[List[WorkDescriptor]] = [
             [] for _ in range(self.num_slots)]
         self._buf_locks = [threading.Lock() for _ in range(self.num_slots)]
         # counters carried across resize() so stats stay cumulative
@@ -388,13 +414,14 @@ class ShardedPolicy(_ManagedPolicy):
             buf = self._buffers[slot]
             buf.append(wd)
             if len(buf) >= self.batch_size:
-                self._flush_locked(slot)
+                self._flush_submits_locked(slot)
 
     def flush(self, slot: int) -> None:
         with self._buf_locks[slot]:
-            self._flush_locked(slot)
+            self._flush_submits_locked(slot)
+            self._flush_dones_locked(slot)
 
-    def _flush_locked(self, slot: int) -> None:
+    def _flush_submits_locked(self, slot: int) -> None:
         buf = self._buffers[slot]
         if not buf:
             return
@@ -402,17 +429,58 @@ class ShardedPolicy(_ManagedPolicy):
         self.charge.push()
         self.router.push_batch(buf)
 
+    def _flush_dones_locked(self, slot: int) -> None:
+        buf = self._done_buffers[slot]
+        if not buf:
+            return
+        self._done_buffers[slot] = []
+        self.charge.push()
+        self.router.push_done_batch(buf)
+
     def complete(self, wd: WorkDescriptor, slot: int) -> None:
-        # A finished body can no longer extend its buffered creations:
-        # flush them before the Done so successors-by-batch can't be
-        # stranded behind an idle worker. (Unbatched mode never buffers,
-        # so skip the per-completion lock acquire entirely.)
+        # (Unbatched mode never buffers, so skip the per-completion lock
+        # acquire entirely.)
         if self.batch_size is not None and self.batch_size > 1:
-            self.flush(slot)
+            with self._buf_locks[slot]:
+                # A finished body can no longer extend its buffered
+                # creations: flush them before the Done so
+                # successors-by-batch can't be stranded behind an idle
+                # worker.
+                self._flush_submits_locked(slot)
+                if wd.shard_parts:
+                    # Done entries dominate high-shard-count mailbox
+                    # traffic once Submits batch: buffer them the same
+                    # way. Order vs. Submits is free either way — a
+                    # Done processed before a later Submit just means
+                    # the region was already scrubbed (the task IS
+                    # completed), exactly the unbatched race.
+                    buf = self._done_buffers[slot]
+                    buf.append(wd)
+                    if len(buf) >= self.batch_size:
+                        self._flush_dones_locked(slot)
+                    return
+        # dependence-free tasks never entered any shard: route_done
+        # completes them inline (no mailbox entry to batch)
         self.charge.push()
         self.router.route_done(wd)
 
     # -- manager side ---------------------------------------------------
+    def idle_callback(self, worker_id: int) -> int:
+        # An idle slot ships its own buffered Dones (and any buffered
+        # Submits) when the ready pool has starved: a buffered Done
+        # gates successor readiness, and nobody else flushes this slot
+        # until a taskwait edge. While ready work remains anywhere the
+        # buffer keeps filling toward a capacity flush (bigger batches);
+        # the moment nothing is runnable, every idle worker flushes, so
+        # progress can never stall on a buffered entry. Deliberately
+        # BEFORE the manager admission gate — liveness must not depend
+        # on winning a manager slot.
+        if self.batch_size is not None and self.batch_size > 1 \
+                and 0 <= worker_id < self.num_slots \
+                and self.placement.ready_count() == 0:
+            self.flush(worker_id)
+        return super().idle_callback(worker_id)
+
     def _drain_once(self, worker_id: int) -> int:
         """One pass over the shard mailboxes: claim each free shard in
         turn (offset by worker id so concurrent managers spread out) and
@@ -438,7 +506,9 @@ class ShardedPolicy(_ManagedPolicy):
         return n
 
     def pending(self) -> int:
-        return self.router.pending() + sum(len(b) for b in self._buffers)
+        return (self.router.pending()
+                + sum(len(b) for b in self._buffers)
+                + sum(len(b) for b in self._done_buffers))
 
     def in_graph(self) -> int:
         return self.graph.in_graph
@@ -464,26 +534,35 @@ class ShardedPolicy(_ManagedPolicy):
                   "total_edges"):
             self._carried[k] = old[k]
         self._carried["max_in_graph"] = old["max_in_graph"]
+        # per-shard counter lists survive the swap too — stats() already
+        # merged any previously-carried lists into `old`, so carrying the
+        # merged lists keeps them cumulative across repeated resizes
+        self._carried["shard_messages"] = old["shard_messages"]
+        self._carried["shard_lock_wait_s"] = old["shard_lock_wait_s"]
         self.num_shards = num_shards
         self.graph = ShardedDependenceGraph(num_shards)
         self.router = ShardRouter(self.graph,
                                   on_ready=self.placement.push,
                                   charge=self.charge)
+        # shard-id-keyed affinity must follow the new partition function
+        rekey = getattr(self.placement, "set_num_shards", None)
+        if rekey is not None:
+            rekey(num_shards)
         return True
 
     def stats(self) -> Dict[str, object]:
         c = self._carried
         st = _blank_stats()
-        st["shard_messages"] = [mb.messages_processed
-                                for mb in self.router.mailboxes]
-        st["shard_lock_wait_s"] = [s.lock.wait_s
-                                   for s in self.graph.shards]
-        st["messages_processed"] = (c["messages_processed"]
-                                    + sum(st["shard_messages"]))
+        cur_msgs = [mb.messages_processed for mb in self.router.mailboxes]
+        cur_waits = [s.lock.wait_s for s in self.graph.shards]
+        st["shard_messages"] = _merge_shard_lists(c["shard_messages"],
+                                                  cur_msgs)
+        st["shard_lock_wait_s"] = _merge_shard_lists(c["shard_lock_wait_s"],
+                                                     cur_waits)
+        st["messages_processed"] = c["messages_processed"] + sum(cur_msgs)
         st["lock_acquisitions"] = c["lock_acquisitions"] + sum(
             s.lock.acquisitions for s in self.graph.shards)
-        st["lock_wait_s"] = (c["lock_wait_s"]
-                             + sum(st["shard_lock_wait_s"]))
+        st["lock_wait_s"] = c["lock_wait_s"] + sum(cur_waits)
         st["max_in_graph"] = max(c["max_in_graph"],
                                  self.graph.max_in_graph)
         st["total_edges"] = c["total_edges"] + self.graph.total_edges
@@ -500,10 +579,29 @@ _POLICIES = {
 POLICY_NAMES = tuple(_POLICIES)
 
 
-def make_policy(mode: str, num_slots: int, **kw) -> DependencePolicy:
+def mode_uses_shards(mode: str) -> bool:
+    """True when ``mode`` resolves to a shard-partitioned policy — the
+    only case a driver should switch shard-affine placement to shard-id
+    affinity keying (outside it there is no shard partition to key by).
+    Keeps that branching in the registry, not in the drivers."""
+    if mode.startswith("replay:"):
+        mode = mode[len("replay:"):]
+    cls = _POLICIES.get(mode)
+    return cls is not None and issubclass(cls, ShardedPolicy)
+
+
+def make_policy(mode: str, num_slots: int, replay: bool = False,
+                **kw) -> DependencePolicy:
     """Build the policy for ``mode``. ``num_shards``/``batch_size`` are
     accepted for every mode and silently dropped where meaningless, so
-    drivers stay free of per-mode branching."""
+    drivers stay free of per-mode branching. With ``replay=True`` (or a
+    ``"replay:<mode>"`` mode string) the policy is wrapped in a
+    :class:`~repro.core.engine.replay.ReplayPolicy`, which records the
+    first iteration's task structure through the live policy and elides
+    dependence analysis on structurally identical re-submissions."""
+    if mode.startswith("replay:"):
+        replay = True
+        mode = mode[len("replay:"):]
     try:
         cls = _POLICIES[mode]
     except KeyError:
@@ -511,4 +609,8 @@ def make_policy(mode: str, num_slots: int, **kw) -> DependencePolicy:
     if not issubclass(cls, ShardedPolicy):
         kw.pop("num_shards", None)
         kw.pop("batch_size", None)
-    return cls(num_slots, **kw)
+    pol = cls(num_slots, **kw)
+    if replay:
+        from .replay import ReplayPolicy
+        pol = ReplayPolicy(pol)
+    return pol

@@ -1,0 +1,474 @@
+"""Taskgraph record-and-replay: elide dependence analysis on repeated
+graph submissions.
+
+The iterative workloads of the paper's §4.2 (matmul epochs, N-Body
+timesteps, repeated sparse-LU factorizations) submit a *structurally
+identical* dependence graph every iteration, yet every Submit/Done pays
+full dependence analysis, mailbox traffic, and lock acquisitions each
+time. Taskgraph (Yu et al., 2212.04771) records the task graph once and
+replays it; Álvarez et al. (2105.07902) replace per-task graph locking
+with precomputed wait-free structures. :class:`ReplayPolicy` brings that
+to every :class:`~repro.core.engine.policy.DependencePolicy`:
+
+  * **record** — iteration 1 runs through the wrapped live policy
+    unchanged while the wrapper records, per structural key (parent
+    nesting position + the task's (region, mode) dependence sequence),
+    the order of submissions within each parent's namespace.
+  * **freeze** — at the first *root* taskwait quiescence the recording
+    is resolved ONCE with the shared dependence rules
+    (:func:`~repro.core.depgraph.collect_preds_and_register` — the same
+    helper every live graph uses, so replay semantics cannot diverge)
+    into an immutable :class:`ReplayGraph`: flat int-indexed successor
+    arrays plus one :class:`_GenLatch` join latch per task, reset by a
+    generation counter instead of re-allocation.
+  * **replay** — subsequent submissions of a structurally identical
+    graph bypass graph mutation, mailboxes, and locks entirely:
+    ``submit`` is an O(1) key check + latch decrement, ``complete``
+    decrements the recorded successors' latches and pushes newly-ready
+    tasks straight into the ``PlacementPolicy``. Zero messages, zero
+    graph-lock acquisitions on the steady-state path.
+  * **invalidate** — the moment a submission diverges from the
+    recording (changed region, changed dep mode, extra task, unknown
+    parent) the wrapper falls back: the already-replayed prefix is
+    self-contained (dependence analysis only looks backwards, so a
+    matching prefix's predecessor edges all lie within the prefix) and
+    is left to finish under replay; diverging tasks are buffered per
+    parent namespace and handed to the live policy for fresh analysis
+    as soon as that namespace's replayed siblings have all completed
+    (at which point an empty region map is exactly the correct state).
+    The stale recording is dropped and the next full iteration
+    re-records. An iteration that submits *fewer* tasks than recorded
+    executes correctly (two-phase latches: a never-submitted task's
+    latch can never reach zero) and invalidates at its quiescence.
+
+The join latch is two-phase: it starts at ``predecessors + 1`` each
+generation; the Submit contributes one decrement (after the WD is
+registered) and each predecessor completion one more, so a completion
+racing ahead of its successor's submission — legal, since different
+parents submit from different threads — can never publish an
+unregistered task.
+
+Per-parent matching (rather than one global submission sequence) is what
+makes replay sound under real threads: a parent's children are created
+by the single thread executing the parent (§3.1), so each namespace's
+submission order is deterministic, while the interleaving *across*
+namespaces is not — and does not matter, because dependences only exist
+between siblings (per-parent graphs everywhere in this runtime).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from ..depgraph import collect_preds_and_register
+from ..shards.steal_deque import AtomicCounter
+from ..wd import TaskState, WorkDescriptor
+from .policy import DependencePolicy
+
+_ROOT = -1
+
+#: ReplayPolicy states (``replay_state`` property).
+RECORDING = "recording"
+REPLAYING = "replaying"
+
+
+class _GenLatch:
+    """Join latch reset by generation counter instead of re-allocation.
+
+    ``dec(gen)`` lazily reinstates ``init`` the first time a new
+    generation touches the latch, then decrements — so one allocation at
+    freeze time serves every replay iteration, and a latch left dirty by
+    a partial iteration (never-submitted task, post-divergence
+    decrements) self-heals on its next use."""
+
+    __slots__ = ("init", "_gen", "_value", "_lock")
+
+    def __init__(self, init: int) -> None:
+        self.init = init
+        self._gen = -1
+        self._value = init
+        self._lock = threading.Lock()
+
+    def dec(self, gen: int) -> int:
+        with self._lock:
+            if self._gen != gen:
+                self._gen = gen
+                self._value = self.init
+            self._value -= 1
+            return self._value
+
+
+class _RecNode:
+    """Identity-only stand-in for a WD during freeze-time analysis."""
+
+    __slots__ = ("sid",)
+
+    def __init__(self, sid: int) -> None:
+        self.sid = sid
+
+
+_DepsKey = Tuple[Tuple[Any, Any], ...]
+
+
+def _deps_key(wd: WorkDescriptor) -> _DepsKey:
+    """Canonical structural key of a task: its (region, mode) sequence.
+    Region objects compare by value (they are dict keys everywhere), so
+    a changed region, changed mode, or reordered dependence list all
+    produce a different key."""
+    return tuple((region, mode) for region, mode in wd.deps)
+
+
+class ReplayGraph:
+    """Immutable resolution of one recorded iteration.
+
+    Flat, int-indexed arrays over structural ids (sids) assigned in
+    recording order: ``succs[sid]`` — successor sids, ``preds[sid]`` —
+    predecessor count, ``parent_sid[sid]`` — the parent's sid (or -1
+    for a root-level task), ``latches[sid]`` — the two-phase join latch
+    (initial value ``preds[sid] + 1``), ``children[psid]`` — the ordered
+    ``(deps_key, sid)`` expectation list replay matches against."""
+
+    __slots__ = ("n", "children", "parent_sid", "succs", "preds",
+                 "latches", "root_ids", "total_edges")
+
+    def __init__(self, children: Dict[int, List[Tuple[_DepsKey, int]]],
+                 parent_sid: List[int], root_ids: Set[int]) -> None:
+        n = len(parent_sid)
+        self.n = n
+        self.children = children
+        self.parent_sid = parent_sid
+        self.root_ids = root_ids
+        self.succs: List[List[int]] = [[] for _ in range(n)]
+        self.preds: List[int] = [0] * n
+        self.total_edges = 0
+        # Resolve each namespace once with the SAME region rules the
+        # live graphs use — the unified engine's single source of
+        # dependence semantics.
+        for kids in children.values():
+            regions: Dict[Any, Any] = {}
+            for key, sid in kids:
+                pset = collect_preds_and_register(regions, _RecNode(sid),
+                                                  key)
+                self.preds[sid] = len(pset)
+                self.total_edges += len(pset)
+                for p in pset:
+                    self.succs[p.sid].append(sid)
+        self.latches = [_GenLatch(self.preds[sid] + 1) for sid in range(n)]
+
+    def child_counts(self) -> List[int]:
+        """Recorded children per namespace, indexed by psid + 1."""
+        counts = [0] * (self.n + 1)
+        for psid, kids in self.children.items():
+            counts[psid + 1] = len(kids)
+        return counts
+
+
+class ReplayPolicy(DependencePolicy):
+    """Record-and-replay wrapper over any live ``DependencePolicy``.
+
+    Protocol calls delegate to the wrapped policy until a recording is
+    frozen; from then on structurally matching submissions run on the
+    :class:`ReplayGraph` alone. See the module docstring for the state
+    machine. Unknown attributes delegate to the wrapped policy, so
+    driver conveniences (``router``, ``worker_queues``, ``resize``, …)
+    keep working."""
+
+    def __init__(self, inner: DependencePolicy) -> None:
+        # deliberately NOT calling super().__init__: the wrapped policy
+        # owns slots/params/placement/charge; we delegate.
+        self.inner = inner
+        self.name = f"replay({inner.name})"
+        self._state = RECORDING
+        # -- recording side (guarded by _rec_lock; slow path) ----------
+        self._rec_lock = threading.Lock()
+        self._rec_keys: List[_DepsKey] = []
+        self._rec_parent: List[int] = []
+        self._rec_children: Dict[int, List[Tuple[_DepsKey, int]]] = {}
+        self._rec_sid_of: Dict[int, int] = {}
+        self._rec_roots: Set[int] = set()
+        # -- frozen side (allocated once at freeze) --------------------
+        self.replay_graph: Optional[ReplayGraph] = None
+        self._gen = 0
+        self._iter_wds: List[Optional[WorkDescriptor]] = []
+        self._iter_sid_of: Dict[int, int] = {}
+        self._iter_counts: List[int] = []       # children seen, by psid+1
+        self._rec_counts: List[int] = []        # children recorded, ditto
+        # replay tasks in flight per namespace (psid + 1) and in total
+        self._outstanding: List[AtomicCounter] = []
+        self._live = AtomicCounter(0)
+        # -- divergence fallback ---------------------------------------
+        self._diverged = False
+        self._div_lock = threading.Lock()
+        self._div_buffers: Dict[int, List[Tuple[WorkDescriptor, int]]] = {}
+        self._div_buffered = 0
+        # -- stats -----------------------------------------------------
+        self.replay_iterations = 0
+        self.replayed_tasks = 0
+        self.invalidations = 0
+        self.recordings = 0
+
+    # ------------------------------------------------------------------
+    # delegation plumbing
+    def __getattr__(self, item: str):
+        return getattr(object.__getattribute__(self, "inner"), item)
+
+    @property
+    def needs_manager_thread(self) -> bool:
+        return self.inner.needs_manager_thread
+
+    @property
+    def uses_idle_managers(self) -> bool:
+        return self.inner.uses_idle_managers
+
+    @property
+    def idle_sleep_s(self) -> float:
+        return self.inner.idle_sleep_s
+
+    @property
+    def callback_entries(self) -> int:
+        return self.inner.callback_entries
+
+    @property
+    def messages_processed(self) -> int:
+        return self.inner.messages_processed
+
+    @property
+    def replay_state(self) -> str:
+        return self._state
+
+    @property
+    def recording_live(self) -> bool:
+        """True while the current iteration is being recorded — global
+        reconfiguration (e.g. ``ShardedPolicy.resize``) must wait, or
+        the recording would freeze against structures that no longer
+        exist."""
+        return self._state == RECORDING and bool(self._rec_keys)
+
+    # ------------------------------------------------------------------
+    # protocol: submit
+    def submit(self, wd: WorkDescriptor, slot: int) -> None:
+        if self._state == RECORDING:
+            self._record_submit(wd, slot)
+        else:
+            self._replay_submit(wd, slot)
+
+    def _record_submit(self, wd: WorkDescriptor, slot: int) -> None:
+        key = _deps_key(wd)
+        pid = wd.parent.wd_id if wd.parent is not None else None
+        with self._rec_lock:
+            sid = len(self._rec_keys)
+            if pid is None:
+                psid = _ROOT
+            else:
+                psid = self._rec_sid_of.get(pid, _ROOT)
+                if psid == _ROOT:
+                    # an unrecorded parent at recording time is the
+                    # driver's root task (everything else quiesced at
+                    # the iteration boundary)
+                    self._rec_roots.add(pid)
+            self._rec_keys.append(key)
+            self._rec_parent.append(psid)
+            self._rec_children.setdefault(psid, []).append((key, sid))
+            self._rec_sid_of[wd.wd_id] = sid
+        self.inner.submit(wd, slot)
+
+    def _replay_submit(self, wd: WorkDescriptor, slot: int) -> None:
+        if self._diverged:
+            self._fallback_submit(wd, slot)
+            return
+        g = self.replay_graph
+        psid = self._parent_sid(wd)
+        if psid is None:                # unknown live parent: structural
+            self._invalidate(wd, slot)  # divergence by definition
+            return
+        idx = self._iter_counts[psid + 1]
+        kids = g.children.get(psid)
+        if kids is None or idx >= len(kids) \
+                or kids[idx][0] != _deps_key(wd):
+            self._invalidate(wd, slot)
+            return
+        sid = kids[idx][1]
+        self._iter_counts[psid + 1] = idx + 1
+        self._iter_wds[sid] = wd
+        self._iter_sid_of[wd.wd_id] = sid
+        self._outstanding[psid + 1].add(1)
+        wd.state = TaskState.SUBMITTED
+        self._live.add(1)
+        self.replayed_tasks += 1
+        self.charge.replay_submit()
+        self._dec(sid)                  # the submit-phase latch unit
+
+    def _parent_sid(self, wd: WorkDescriptor) -> Optional[int]:
+        """The parent's structural id this iteration: its sid if it is a
+        replayed task, -1 if it is the driver root, None if it is a live
+        (non-replayed) task — which cannot happen before divergence."""
+        if wd.parent is None:
+            return _ROOT
+        pid = wd.parent.wd_id
+        sid = self._iter_sid_of.get(pid)
+        if sid is not None:
+            return sid
+        if pid in self.replay_graph.root_ids:
+            return _ROOT
+        return None
+
+    def _dec(self, sid: int) -> None:
+        if self.replay_graph.latches[sid].dec(self._gen) == 0:
+            wd = self._iter_wds[sid]
+            wd.mark_ready()
+            self.placement.push(wd)
+
+    # ------------------------------------------------------------------
+    # protocol: complete
+    def complete(self, wd: WorkDescriptor, slot: int) -> None:
+        sid = self._iter_sid_of.get(wd.wd_id)
+        if sid is None:
+            self.inner.complete(wd, slot)
+            return
+        g = self.replay_graph
+        succs = g.succs[sid]
+        self.charge.replay_done(len(succs))
+        for t in succs:
+            self._dec(t)
+        psid = g.parent_sid[sid]
+        if self._outstanding[psid + 1].add(-1) == 0 and self._diverged:
+            self._flush_bucket(psid)
+        self._live.add(-1)
+        # parent bookkeeping LAST: once the waiter observes zero live
+        # children it may reset iteration state, so all of this task's
+        # replay bookkeeping must already be done.
+        wd.mark_completed()
+
+    # ------------------------------------------------------------------
+    # divergence fallback
+    def _invalidate(self, wd: WorkDescriptor, slot: int) -> None:
+        self.invalidations += 1
+        self._diverged = True
+        self._fallback_submit(wd, slot)
+
+    def _fallback_submit(self, wd: WorkDescriptor, slot: int) -> None:
+        psid = self._parent_sid(wd)
+        if psid is None:
+            # live parent: none of its children were replay-managed, so
+            # its namespace has no replayed predecessors to wait for —
+            # straight to live analysis (still under _div_lock so
+            # per-parent submission order is preserved vs. any flush
+            # running on a completion thread).
+            with self._div_lock:
+                self.inner.submit(wd, slot)
+            return
+        with self._div_lock:
+            if self._outstanding[psid + 1].value == 0 and \
+                    not self._div_buffers.get(psid):
+                # every replayed sibling completed (its region records
+                # are gone from every live structure), so fresh analysis
+                # is correct — submit in creation order, inline.
+                self.inner.submit(wd, slot)
+                return
+            self._div_buffers.setdefault(psid, []).append((wd, slot))
+            self._div_buffered += 1
+
+    def _flush_bucket(self, psid: int) -> None:
+        with self._div_lock:
+            buf = self._div_buffers.pop(psid, None)
+            if not buf:
+                return
+            self._div_buffered -= len(buf)
+            for wd, slot in buf:
+                self.inner.submit(wd, slot)
+
+    # ------------------------------------------------------------------
+    # iteration boundaries
+    def notify_quiescent(self, root: bool = True) -> None:
+        if not root:
+            return
+        if self._state == RECORDING:
+            if self._rec_keys:
+                self._freeze()
+            return
+        # replaying: decide whether the finished iteration kept faith
+        if not self._diverged and not any(self._iter_counts):
+            return                      # empty boundary (e.g. shutdown)
+        if not self._diverged and self._iter_counts == self._rec_counts:
+            self.replay_iterations += 1
+            self._reset_iteration()
+            return
+        # structural divergence (mid-iteration fallback, or fewer tasks
+        # than recorded): drop the recording, re-record next iteration.
+        self.invalidations += 0 if self._diverged else 1
+        self._drop_recording()
+
+    def _freeze(self) -> None:
+        g = ReplayGraph(self._rec_children, self._rec_parent,
+                        self._rec_roots)
+        self.replay_graph = g
+        self._rec_counts = g.child_counts()
+        self._iter_counts = [0] * (g.n + 1)
+        self._iter_wds = [None] * g.n
+        self._outstanding = [AtomicCounter(0) for _ in range(g.n + 1)]
+        self._iter_sid_of = {}
+        self._gen = 0
+        self._state = REPLAYING
+        self.recordings += 1
+        self._reset_recording()
+
+    def _reset_iteration(self) -> None:
+        self._gen += 1
+        self._iter_sid_of.clear()
+        counts = self._iter_counts
+        for i in range(len(counts)):
+            counts[i] = 0
+        # _iter_wds entries are overwritten before any latch can reach
+        # zero next generation (two-phase latch), so no clear needed.
+
+    def _reset_recording(self) -> None:
+        self._rec_keys = []
+        self._rec_parent = []
+        self._rec_children = {}
+        self._rec_sid_of = {}
+        self._rec_roots = set()
+
+    def _drop_recording(self) -> None:
+        self.replay_graph = None
+        self._diverged = False
+        self._div_buffers = {}
+        self._div_buffered = 0
+        self._iter_sid_of = {}
+        self._iter_counts = []
+        self._rec_counts = []
+        self._iter_wds = []
+        self._outstanding = []
+        self._state = RECORDING
+        self._reset_recording()
+
+    # ------------------------------------------------------------------
+    # remaining protocol: delegate, folding in replay-side state
+    def idle_callback(self, worker_id: int) -> int:
+        return self.inner.idle_callback(worker_id)
+
+    def drain_all(self) -> int:
+        return self.inner.drain_all()
+
+    def flush(self, slot: int) -> None:
+        self.inner.flush(slot)
+
+    def pending(self) -> int:
+        return self.inner.pending() + self._div_buffered
+
+    def in_graph(self) -> int:
+        return self.inner.in_graph() + self._live.value
+
+    def stats(self) -> Dict[str, object]:
+        st = dict(self.inner.stats())
+        st["replay"] = {
+            "state": self._state,
+            "recordings": self.recordings,
+            "replay_iterations": self.replay_iterations,
+            "replayed_tasks": self.replayed_tasks,
+            "invalidations": self.invalidations,
+            "recorded_tasks": (self.replay_graph.n
+                               if self.replay_graph is not None else 0),
+            "recorded_edges": (self.replay_graph.total_edges
+                               if self.replay_graph is not None else 0),
+        }
+        return st

@@ -45,3 +45,14 @@ class DoneTaskMessage:
     newly-ready ones scheduled. May be processed concurrently by any
     manager — execution finish order carries no semantics."""
     wd: WorkDescriptor
+
+
+@dataclass
+class DoneBatchMessage:
+    """Batched Done for ``sharded`` mode, symmetric to
+    :class:`SubmitBatchMessage`: the receiving shard scrubs its portion
+    of every WD in ``wds`` under ONE lock acquisition and the whole
+    entry costs one manager pop+dispatch. Legal because Done processing
+    order carries no semantics (see :class:`DoneTaskMessage`) — only the
+    per-WD latch arithmetic must balance, and it is unchanged."""
+    wds: List[WorkDescriptor]

@@ -11,7 +11,15 @@ set plus the sharded extension) live in ``core.engine.policy``:
                   managers through the Functionality Dispatcher.
   * ``sharded`` — beyond the paper: region-hash-partitioned graph shards
                   with per-shard mailboxes; idle workers claim whole
-                  shards; optional Submit batching (``batch_size``).
+                  shards; optional Submit + Done batching
+                  (``batch_size``).
+
+With ``replay=True`` the chosen policy is wrapped in a
+``ReplayPolicy`` (``engine/replay.py``): the first root-taskwait
+iteration records the task structure, and structurally identical
+re-submissions then skip dependence analysis, locks, and mailboxes
+entirely (the Taskgraph record-and-replay optimization for iterative
+workloads).
 
 This module knows nothing about any of that: it owns the threads, the
 thread-local task context, the taskwait protocol, and the stats
@@ -39,7 +47,7 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
 from .ddast import DDASTParams
 from .dispatcher import FunctionalityDispatcher
-from .engine import make_placement, make_policy
+from .engine import make_placement, make_policy, mode_uses_shards
 from .queues import InstrumentedLock
 from .wd import DepMode, TaskState, WorkDescriptor
 
@@ -71,6 +79,10 @@ class RuntimeStats:
     # Per-shard breakdowns (empty outside the sharded policy).
     shard_lock_wait_s: List[float] = field(default_factory=list)
     shard_messages: List[int] = field(default_factory=list)
+    # Record-and-replay counters (zero unless replay=True).
+    replay_iterations: int = 0         # iterations served fully by replay
+    replayed_tasks: int = 0            # submits elided from live analysis
+    replay_invalidations: int = 0      # recordings dropped on divergence
 
 
 # Backward-compatible alias: the lock lives in queues.py so every layer
@@ -92,7 +104,8 @@ class TaskRuntime:
                  manager_eligible: Optional[set] = None,
                  num_shards: Optional[int] = None,
                  batch_size: Optional[int] = None,
-                 placement: Any = "round_robin") -> None:
+                 placement: Any = "round_robin",
+                 replay: bool = False) -> None:
         if mode not in _MODES:
             raise ValueError(f"mode must be one of {_MODES}")
         if num_shards is not None and num_shards < 1:
@@ -104,9 +117,14 @@ class TaskRuntime:
         self.manager_eligible = manager_eligible
         self.num_shards = num_shards or max(2, num_workers)
         self.batch_size = batch_size
+        self.replay = replay
 
         num_slots = num_workers + 1        # +1: the main thread's slot
-        self.placement = make_placement(placement, num_slots)
+        # shard-id affinity keying only makes sense over a shard
+        # partition; other modes keep exact-region keying
+        self.placement = make_placement(
+            placement, num_slots,
+            num_shards=self.num_shards if mode_uses_shards(mode) else None)
         self.policy = make_policy(
             mode, num_slots,
             num_workers=num_workers,
@@ -115,7 +133,8 @@ class TaskRuntime:
             manager_eligible=manager_eligible,
             main_slot=num_workers,
             num_shards=self.num_shards,
-            batch_size=batch_size)
+            batch_size=batch_size,
+            replay=replay)
         self.dispatcher = FunctionalityDispatcher()
         if self.policy.uses_idle_managers:
             self.dispatcher.register("policy", self.policy.callback,
@@ -189,6 +208,11 @@ class TaskRuntime:
         self.stats.total_edges = st["total_edges"]
         self.stats.shard_messages = st["shard_messages"]
         self.stats.shard_lock_wait_s = st["shard_lock_wait_s"]
+        rep = st.get("replay")
+        if rep:
+            self.stats.replay_iterations = rep["replay_iterations"]
+            self.stats.replayed_tasks = rep["replayed_tasks"]
+            self.stats.replay_invalidations = rep["invalidations"]
 
     # ------------------------------------------------------------------
     # ready pool / occupancy probes (delegated)
@@ -231,6 +255,11 @@ class TaskRuntime:
         while True:
             # account for children whose Submit is still queued/buffered
             if parent.num_children_alive == 0 and not self._pending_msgs():
+                # policy first (a replay wrapper freezes/validates its
+                # recording here), then dispatcher callbacks (the tuner
+                # may resize shards — legal only once the policy has
+                # settled its iteration state)
+                self.policy.notify_quiescent(parent is self._root)
                 self.dispatcher.notify_quiescent(wid)
                 return
             wd = self.placement.pop(wid)

@@ -48,12 +48,14 @@ import threading
 from collections import deque
 from typing import Callable, List, Optional, Union
 
-from ..messages import DoneTaskMessage, SubmitBatchMessage, SubmitTaskMessage
+from ..messages import (DoneBatchMessage, DoneTaskMessage,
+                        SubmitBatchMessage, SubmitTaskMessage)
 from ..wd import TaskState, WorkDescriptor
 from .sharded_graph import ShardedDependenceGraph, partition_deps
 from .steal_deque import AtomicCounter
 
-_Message = Union[SubmitTaskMessage, SubmitBatchMessage, DoneTaskMessage]
+_Message = Union[SubmitTaskMessage, SubmitBatchMessage, DoneTaskMessage,
+                 DoneBatchMessage]
 
 
 class ShardMailbox:
@@ -153,6 +155,17 @@ class ShardRouter:
         for s in parts:
             self.mailboxes[s].push(msg)
 
+    def push_done_batch(self, wds: List[WorkDescriptor]) -> None:
+        """Ship finished WDs (each with at least one shard portion) as
+        one DoneBatchMessage per shard touched by the batch — the Done
+        analogue of ``push_batch``."""
+        per_shard = {}
+        for wd in wds:
+            for s in wd.shard_parts:
+                per_shard.setdefault(s, []).append(wd)
+        for s, group in per_shard.items():
+            self.mailboxes[s].push(DoneBatchMessage(group))
+
     # -- consumer side (the claiming manager) --------------------------
     def _submit_local(self, shard, wd: WorkDescriptor) -> bool:
         """Insert one shard portion; returns True if the join latch hit
@@ -189,6 +202,17 @@ class ShardRouter:
             if ready:
                 wd.mark_ready()
                 self.on_ready(wd)
+        elif type(msg) is DoneBatchMessage:
+            self.charge.done_batch_cs(
+                ("shard", shard_index),
+                [(len(wd.shard_parts[shard_index]), len(wd.shard_parts))
+                 for wd in msg.wds])
+            all_succs = []
+            with shard.lock:
+                for wd in msg.wds:
+                    all_succs.append(shard.complete_local(wd))
+            for wd, succs in zip(msg.wds, all_succs):
+                self._finish_done(wd, succs)
         else:
             wd = msg.wd
             self.charge.done_portion_cs(
@@ -196,14 +220,20 @@ class ShardRouter:
                 len(wd.shard_parts[shard_index]), len(wd.shard_parts))
             with shard.lock:
                 succs = shard.complete_local(wd)
-            for s in succs:
-                if s.shard_pending.add(-1) == 0:
-                    s.mark_ready()
-                    self.on_ready(s)
-            if wd.shard_done.add(-1) == 0:
-                self.graph.task_left()
-                wd.mark_completed()
+            self._finish_done(wd, succs)
         self.mailboxes[shard_index].messages_processed += 1
+
+    def _finish_done(self, wd: WorkDescriptor,
+                     succs: List[WorkDescriptor]) -> None:
+        """Latch arithmetic after one shard scrubbed its Done portion of
+        ``wd``: satisfy local successor edges, then retire the portion."""
+        for s in succs:
+            if s.shard_pending.add(-1) == 0:
+                s.mark_ready()
+                self.on_ready(s)
+        if wd.shard_done.add(-1) == 0:
+            self.graph.task_left()
+            wd.mark_completed()
 
     def drain_shard(self, shard_index: int, max_ops: int) -> int:
         """Claim one shard and process up to ``max_ops`` mailbox entries.

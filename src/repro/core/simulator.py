@@ -31,6 +31,13 @@ structures between tasks) is modeled by the charger: a virtual-lock
 acquisition flags the acting core, and the next task body it executes is
 charged a duration multiplier.
 
+``run(specs, iterations=n)`` re-submits the same graph n times with a
+root taskwait between iterations (the paper's epoch loop) and reports
+per-iteration makespan/lock/message deltas; with ``replay=True`` the
+policy is wrapped in the record-and-replay ``ReplayPolicy``, whose
+steady-state iterations are priced as pure latch arithmetic (no
+VirtualLock, no message, no pollution flag).
+
 Everything is deterministic: no wall clock, no randomness — identical
 inputs give identical makespans (required for hypothesis-based testing).
 One approximation is accepted relative to a fully causal event model:
@@ -45,7 +52,8 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .ddast import DDASTParams
-from .engine import SimCharger, make_placement, make_policy
+from .engine import (SimCharger, make_placement, make_policy,
+                     mode_uses_shards)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 # ---------------------------------------------------------------------------
@@ -80,6 +88,14 @@ class SimCosts:
     #   submit_cs / k split)
     lock_overhead: float = 0.12  # uncontended acquire/release
     pollution: float = 1.25    # duration multiplier after graph ops (§6.1)
+    # Record-and-replay steady-state steps (engine/replay.py): a Submit
+    # is a structural-key check + one latch decrement, a Done is one
+    # latch decrement per recorded successor — no lock, no message, and
+    # no pollution flag (the replay path touches no shared runtime
+    # structures, which is how the §6.1 cache win compounds).
+    replay_submit: float = 0.12  # key compare + submit-phase latch dec
+    replay_done: float = 0.05    # completion bookkeeping (fixed part)
+    replay_dec: float = 0.04     # per recorded successor latch dec
 
 
 @dataclass
@@ -94,6 +110,15 @@ class SimResult:
     total_edges: int = 0
     trace: List[Tuple[float, int, int]] = field(default_factory=list)
     exec_order: List[str] = field(default_factory=list)  # task labels
+    # Per-iteration breakdown when run(..., iterations=n): virtual time,
+    # lock acquisitions, and mailbox entries attributable to each
+    # iteration (deltas between root-quiescence boundaries). Under a
+    # frozen replay recording the steady-state entries are 0 locks and
+    # 0 messages — the quantity bench_replay.py gates on.
+    iterations: int = 1
+    iter_makespans_us: List[float] = field(default_factory=list)
+    iter_lock_acq: List[int] = field(default_factory=list)
+    iter_messages: List[int] = field(default_factory=list)
 
     @property
     def speedup(self) -> float:
@@ -119,7 +144,8 @@ class RuntimeSimulator:
                  trace: bool = False,
                  num_shards: Optional[int] = None,
                  batch_size: Optional[int] = None,
-                 placement: Any = "round_robin") -> None:
+                 placement: Any = "round_robin",
+                 replay: bool = False) -> None:
         if mode not in ("sync", "dast", "ddast", "sharded"):
             raise ValueError("mode must be sync|dast|ddast|sharded")
         if mode == "dast" and num_cores < 2:
@@ -139,12 +165,23 @@ class RuntimeSimulator:
         self.num_shards = num_shards
         self.batch_size = batch_size
         self.placement_kind = placement
+        self.replay = replay
 
     # -- public ---------------------------------------------------------
-    def run(self, specs: List[SimTaskSpec]) -> SimResult:
+    def run(self, specs: List[SimTaskSpec],
+            iterations: int = 1) -> SimResult:
+        """Simulate the graph; with ``iterations > 1`` the main program
+        re-submits the same spec graph that many times with a root
+        taskwait between iterations (the paper's epoch/timestep loop) —
+        the shape record-and-replay (``replay=True``) exploits."""
+        if iterations < 1:
+            raise ValueError("iterations must be >= 1")
         P, costs = self.P, self.costs
         charge = SimCharger(costs)
-        placement = make_placement(self.placement_kind, P)
+        placement = make_placement(
+            self.placement_kind, P,
+            num_shards=(self.num_shards or P)
+            if mode_uses_shards(self.mode) else None)
         policy = make_policy(
             self.mode, P,
             num_workers=P,
@@ -153,7 +190,8 @@ class RuntimeSimulator:
             charge=charge,
             main_slot=0,
             num_shards=self.num_shards or P,
-            batch_size=self.batch_size)
+            batch_size=self.batch_size,
+            replay=self.replay)
         mgr_core = P - 1 if policy.needs_manager_thread else -1
 
         root = WorkDescriptor(func=None, label="sim-main")
@@ -168,6 +206,8 @@ class RuntimeSimulator:
                 total_tasks += 1
                 if s.children:
                     stack_count.append(s.children)
+        serial_us *= iterations
+        total_tasks *= iterations
 
         trace: List[Tuple[float, int, int]] = []
         exec_order: List[str] = []
@@ -202,6 +242,24 @@ class RuntimeSimulator:
         # parent_wd is None for the top-level (root) program frame.
         progs: Dict[int, List[List[Any]]] = {i: [] for i in range(P)}
         progs[0].append([list(specs), 0, None])
+
+        # iteration (epoch) bookkeeping: cumulative snapshots taken at
+        # each root quiescence, turned into per-iteration deltas below
+        epoch = [0]
+        iter_marks: List[Tuple[float, int, int]] = []
+
+        def finish_epoch(core: int) -> None:
+            t = max(makespan[0], charge.now)
+            policy.notify_quiescent(True)
+            iter_marks.append((t, charge.lock_acquisitions(),
+                               policy.stats()["messages_processed"]))
+            epoch[0] += 1
+            if epoch[0] < iterations:
+                progs[core].append([list(specs), 0, None])
+                schedule(charge.now, core)
+            else:
+                finished[0] = True
+                makespan[0] = t
 
         def run_worker(core: int) -> bool:
             """Pop + start one ready task on `core` at charge.now.
@@ -261,15 +319,15 @@ class RuntimeSimulator:
                 if waiter.num_children_alive == 0 and not policy.pending():
                     stack.pop()
                     if parent is not None:  # nested parent completes
+                        policy.notify_quiescent(False)
                         parent.mark_finished()
                         placement.note_executed(parent, core)
                         policy.complete(parent, core)
                         sample(charge.now)
                         wake_all(charge.now)
                         schedule(charge.now, core)
-                    else:                   # main program done
-                        finished[0] = True
-                        makespan[0] = max(makespan[0], charge.now)
+                    else:                   # main program done (epoch)
+                        finish_epoch(core)
                     return
                 # blocked in taskwait: fall through and work
             if run_worker(core):
@@ -306,6 +364,13 @@ class RuntimeSimulator:
                 raise RuntimeError("simulator exceeded event budget")
 
         st = policy.stats()
+        iter_mk, iter_la, iter_msg = [], [], []
+        prev = (0.0, 0, 0)
+        for mark in iter_marks:
+            iter_mk.append(mark[0] - prev[0])
+            iter_la.append(mark[1] - prev[1])
+            iter_msg.append(mark[2] - prev[2])
+            prev = mark
         return SimResult(
             makespan_us=max(makespan[0], charge.max_free_at()),
             serial_us=serial_us,
@@ -317,4 +382,8 @@ class RuntimeSimulator:
             total_edges=st["total_edges"],
             trace=trace,
             exec_order=exec_order,
+            iterations=iterations,
+            iter_makespans_us=iter_mk,
+            iter_lock_acq=iter_la,
+            iter_messages=iter_msg,
         )
