@@ -1,0 +1,259 @@
+"""Scheduling-subsystem benchmark: placement policies over replayed
+task graphs.
+
+Simulated (virtual-time) sweep of the placement table — round_robin /
+shard_affine / critical_path, live vs ``replay=True`` — over the paper
+app graphs plus an *imbalanced* sparse-LU (heavy diagonal factorization
+and triangular solves, light updates: the shape where chain-blind ready
+orders leave the critical path waiting behind breadth work). Under
+``critical_path`` the frozen replay graph's bottom levels put the
+longest remaining chain into the priority lane of every two-lane ready
+deque (``core/sched``), so steady-state replay iterations finish no
+later than round-robin replay while still touching zero locks and zero
+mailboxes. A real-threaded section runs the same loop on this host and
+reports the deterministic RuntimeStats deltas.
+
+Standalone:
+
+    PYTHONPATH=src python benchmarks/bench_sched.py            # full sweep
+    PYTHONPATH=src python benchmarks/bench_sched.py --smoke    # ~10 s, CI
+    ... [--out BENCH_sched.json]
+
+or as a suite inside ``python -m benchmarks.run --only sched``.
+
+Exit status doubles as the CI gate, on replayed imbalanced sparse-LU
+(nb=10, 8 workers, 4 iterations, sharded): non-zero when (a) the
+critical_path steady-state replay makespan exceeds the round_robin one,
+or (b) critical_path steady-state iterations perform ANY lock
+acquisition or process ANY mailbox message (simulated or real-threaded
+— the priority lane must not reintroduce a lock).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import RuntimeSimulator, TaskRuntime  # noqa: E402
+from repro.core.taskgraph_apps import (sim_app_specs,  # noqa: E402
+                                       sim_sparselu_specs)
+from repro.core.wd import DepMode  # noqa: E402
+
+PLACEMENTS = ("round_robin", "shard_affine", "critical_path")
+
+# The gate workload: imbalanced sparse-LU — heavy lu0 diagonal chain.
+GATE = {"nb": 10, "workers": 8, "iters": 4, "mode": "sharded"}
+GATE_DURS = dict(dur_lu0=600.0, dur_fwd=150.0, dur_bdiv=150.0,
+                 dur_bmod=60.0)
+
+FULL = {
+    "apps": {"matmul": 8, "sparselu": 10},
+    "workers": (8, 32),
+    "iters": 4,
+    "real_tasks": 200,
+    "real_iters": 4,
+}
+SMOKE = {
+    "apps": {"sparselu": 8},
+    "workers": (8,),
+    "iters": 4,
+    "real_tasks": 120,
+    "real_iters": 3,
+}
+
+
+def _gate_specs():
+    return sim_sparselu_specs(GATE["nb"], **GATE_DURS)
+
+
+def _steady(result) -> float:
+    tail = result.iter_makespans_us[1:]
+    return sum(tail) / len(tail) if tail else result.makespan_us
+
+
+def _sim_record(specs, app: str, workers: int, placement: str,
+                iters: int) -> dict:
+    live = RuntimeSimulator(workers, GATE["mode"],
+                            placement=placement).run(specs,
+                                                     iterations=iters)
+    rep = RuntimeSimulator(workers, GATE["mode"], replay=True,
+                           placement=placement).run(specs,
+                                                    iterations=iters)
+    return {
+        "app": app, "workers": workers, "placement": placement,
+        "iters": iters, "tasks": rep.tasks,
+        "live_makespan_us": round(live.makespan_us, 1),
+        "replay_makespan_us": round(rep.makespan_us, 1),
+        "live_steady_iter_us": round(_steady(live), 1),
+        "replay_steady_iter_us": round(_steady(rep), 1),
+        "replay_steady_lock_acq": sum(rep.iter_lock_acq[1:]),
+        "replay_steady_messages": sum(rep.iter_messages[1:]),
+    }
+
+
+def sim_sweep(cfg: dict) -> list:
+    records = []
+    for app, scale in cfg["apps"].items():
+        specs = sim_app_specs(app, scale)
+        for p in cfg["workers"]:
+            for placement in PLACEMENTS:
+                records.append(_sim_record(specs, app, p, placement,
+                                           cfg["iters"]))
+    # the gate workload always runs, at every placement
+    for placement in PLACEMENTS:
+        records.append(_sim_record(_gate_specs(), "sparselu-imbalanced",
+                                   GATE["workers"], placement,
+                                   GATE["iters"]))
+    return records
+
+
+def real_sweep(cfg: dict) -> list:
+    """Real threads: chained spin tasks under each placement with
+    replay; steady-state lock/message deltas are deterministic."""
+    records = []
+
+    def spin():
+        x = 0.0
+        for i in range(200):
+            x += i * i
+        return x
+
+    tasks, iters = cfg["real_tasks"], cfg["real_iters"]
+    for placement in PLACEMENTS:
+        iter_wall, iter_locks, iter_msgs = [], [], []
+        with TaskRuntime(num_workers=4, mode=GATE["mode"], num_shards=8,
+                         replay=True, placement=placement) as rt:
+            prev_l = prev_m = 0
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                for i in range(tasks):
+                    rt.task(spin, deps=[((i % 31,), DepMode.INOUT)])
+                rt.taskwait()
+                iter_wall.append(round(time.perf_counter() - t0, 4))
+                st = rt.policy.stats()
+                iter_locks.append(st["lock_acquisitions"] - prev_l)
+                iter_msgs.append(st["messages_processed"] - prev_m)
+                prev_l = st["lock_acquisitions"]
+                prev_m = st["messages_processed"]
+        records.append({
+            "placement": placement, "tasks": tasks, "iters": iters,
+            "iter_wall_s": iter_wall,
+            "steady_lock_acq": sum(iter_locks[1:]),
+            "steady_messages": sum(iter_msgs[1:]),
+            "replay_iterations": rt.stats.replay_iterations,
+            "priority_pushes": getattr(rt.placement, "priority_pushes",
+                                       0),
+        })
+    return records
+
+
+def acceptance(sim_records: list, real_records: list) -> dict:
+    """The CI gates on replayed imbalanced sparse-LU: (a) critical_path
+    steady-state makespan <= round_robin's, (b) critical_path steady
+    state costs 0 locks and 0 messages (simulated and real-threaded)."""
+    g = {r["placement"]: r for r in sim_records
+         if r["app"] == "sparselu-imbalanced"}
+    out = {"checked": "critical_path" in g and "round_robin" in g}
+    if out["checked"]:
+        cp, rr = g["critical_path"], g["round_robin"]
+        out.update({
+            "critical_path_steady_iter_us": cp["replay_steady_iter_us"],
+            "round_robin_steady_iter_us": rr["replay_steady_iter_us"],
+            "critical_path_not_slower":
+                cp["replay_steady_iter_us"] <= rr["replay_steady_iter_us"],
+            "replay_steady_lock_acq": cp["replay_steady_lock_acq"],
+            "replay_steady_messages": cp["replay_steady_messages"],
+            "replay_steady_zero_cost":
+                cp["replay_steady_lock_acq"] == 0
+                and cp["replay_steady_messages"] == 0,
+        })
+    cp_real = [r for r in real_records
+               if r["placement"] == "critical_path"]
+    out["real_checked"] = bool(cp_real)
+    if cp_real:
+        out["real_steady_lock_acq"] = max(r["steady_lock_acq"]
+                                          for r in cp_real)
+        out["real_steady_messages"] = max(r["steady_messages"]
+                                          for r in cp_real)
+        out["real_steady_zero_cost"] = (
+            out["real_steady_lock_acq"] == 0
+            and out["real_steady_messages"] == 0)
+    return out
+
+
+def collect(smoke: bool, with_real: bool = True) -> dict:
+    cfg = SMOKE if smoke else FULL
+    t0 = time.time()
+    sim = sim_sweep(cfg)
+    real = real_sweep(cfg) if with_real else []
+    return {
+        "bench": "sched",
+        "smoke": smoke,
+        "sim": sim,
+        "real": real,
+        "acceptance": acceptance(sim, real),
+        "bench_wall_s": round(time.time() - t0, 2),
+    }
+
+
+def run(csv_rows: list) -> None:
+    """benchmarks.run suite entry point."""
+    out = collect(smoke=True)
+    for r in out["sim"]:
+        tag = f"sched.sim.{r['app']}.p{r['workers']}.{r['placement']}"
+        csv_rows.append((f"{tag}.replay_steady_iter_us",
+                         r["replay_steady_iter_us"],
+                         f"live={r['live_steady_iter_us']} "
+                         f"locks={r['replay_steady_lock_acq']} "
+                         f"msgs={r['replay_steady_messages']}"))
+    acc = out["acceptance"]
+    csv_rows.append(("sched.acceptance.critical_path_not_slower",
+                     int(acc.get("critical_path_not_slower", False)), ""))
+    csv_rows.append(("sched.acceptance.steady_zero_cost",
+                     int(acc.get("replay_steady_zero_cost", False)), ""))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep, same gate workload (~10 s, CI)")
+    ap.add_argument("--no-real", action="store_true",
+                    help="skip the real-threaded section")
+    ap.add_argument("--out", default="BENCH_sched.json",
+                    help="JSON output path")
+    args = ap.parse_args()
+    out = collect(smoke=args.smoke, with_real=not args.no_real)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    acc = out["acceptance"]
+    print(f"wrote {args.out} ({len(out['sim'])} sim + "
+          f"{len(out['real'])} real records, {out['bench_wall_s']}s)")
+    failed = False
+    if acc.get("checked"):
+        print(f"imbalanced sparse-LU nb={GATE['nb']} @ {GATE['workers']} "
+              f"workers x {GATE['iters']} iters, replay steady iter: "
+              f"critical_path {acc['critical_path_steady_iter_us']}us vs "
+              f"round_robin {acc['round_robin_steady_iter_us']}us -> "
+              f"{'OK' if acc['critical_path_not_slower'] else 'REGRESSION'}")
+        failed |= not acc["critical_path_not_slower"]
+        print(f"critical_path steady locks="
+              f"{acc['replay_steady_lock_acq']} "
+              f"msgs={acc['replay_steady_messages']} -> "
+              f"{'OK' if acc['replay_steady_zero_cost'] else 'REGRESSION'}")
+        failed |= not acc["replay_steady_zero_cost"]
+    if acc.get("real_checked"):
+        print(f"real threads (critical_path): steady locks="
+              f"{acc['real_steady_lock_acq']} "
+              f"msgs={acc['real_steady_messages']} -> "
+              f"{'OK' if acc['real_steady_zero_cost'] else 'REGRESSION'}")
+        failed |= not acc["real_steady_zero_cost"]
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

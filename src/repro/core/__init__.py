@@ -10,11 +10,12 @@ from .autotune import DynamicTuner, TunerConfig
 from .ddast import DDASTManager, DDASTParams
 from .depgraph import DependenceGraph
 from .dispatcher import FunctionalityDispatcher
-from .engine import (CostCharger, DastPolicy, DdastPolicy, DependencePolicy,
-                     PlacementPolicy, ReplayGraph, ReplayPolicy,
-                     RoundRobinPlacement, ShardAffinePlacement,
-                     ShardedPolicy, SimCharger, SyncPolicy, make_placement,
-                     make_policy)
+from .engine import (CostCharger, CriticalPathPlacement, DastPolicy,
+                     DdastPolicy, DependencePolicy, PlacementPolicy,
+                     ReplayGraph, ReplayPolicy, RoundRobinPlacement,
+                     ShardAffinePlacement, ShardedPolicy, SimCharger,
+                     SyncPolicy, make_placement, make_policy)
+from .sched import bottom_levels, list_schedule, quantize_bands
 from .messages import (DoneBatchMessage, DoneTaskMessage,
                        SubmitBatchMessage, SubmitTaskMessage)
 from .queues import InstrumentedLock, SPSCQueue, WorkerQueues
@@ -33,7 +34,8 @@ __all__ = [
     "DependencePolicy", "SyncPolicy", "DastPolicy", "DdastPolicy",
     "ShardedPolicy", "ReplayPolicy", "ReplayGraph", "make_policy",
     "PlacementPolicy", "RoundRobinPlacement", "ShardAffinePlacement",
-    "make_placement",
+    "CriticalPathPlacement", "make_placement",
+    "bottom_levels", "list_schedule", "quantize_bands",
     "DoneBatchMessage", "DoneTaskMessage", "SubmitBatchMessage",
     "SubmitTaskMessage",
     "InstrumentedLock", "SPSCQueue", "WorkerQueues",

@@ -19,18 +19,21 @@ virtual-time ``RuntimeSimulator``:
                                          ShardRouter mailboxes)
 """
 from .charge import CostCharger, SimCharger, VirtualLock
-from .placement import (PlacementPolicy, RoundRobinPlacement,
+from .placement import (PLACEMENT_NAMES, CriticalPathPlacement,
+                        PlacementPolicy, RoundRobinPlacement,
                         ShardAffinePlacement, make_placement)
 from .policy import (POLICY_NAMES, DastPolicy, DdastPolicy,
                      DependencePolicy, ShardedPolicy, SyncPolicy,
-                     make_policy, mode_uses_shards)
+                     make_policy, mode_needs_manager_thread,
+                     mode_uses_shards)
 from .replay import ReplayGraph, ReplayPolicy
 
 __all__ = [
     "CostCharger", "SimCharger", "VirtualLock",
-    "PlacementPolicy", "RoundRobinPlacement", "ShardAffinePlacement",
-    "make_placement",
+    "PLACEMENT_NAMES", "PlacementPolicy", "RoundRobinPlacement",
+    "ShardAffinePlacement", "CriticalPathPlacement", "make_placement",
     "POLICY_NAMES", "DependencePolicy", "SyncPolicy", "DastPolicy",
     "DdastPolicy", "ShardedPolicy", "make_policy", "mode_uses_shards",
+    "mode_needs_manager_thread",
     "ReplayGraph", "ReplayPolicy",
 ]

@@ -73,6 +73,14 @@ class CostCharger:
         """One record-and-replay Done: ``nsuccs`` successor latch
         decrements — no lock, no message."""
 
+    def prio_push(self) -> None:
+        """One push into a ready deque's priority lane (critical-path
+        replay placement) — a single banded deque append, no lock."""
+
+    def prio_pop(self) -> None:
+        """The pop-side band scan while replay priorities are active —
+        no lock."""
+
 
 class VirtualLock:
     """Serializes critical sections in virtual time (FIFO-handover
@@ -184,6 +192,15 @@ class SimCharger(CostCharger):
     def replay_done(self, nsuccs: int) -> None:
         self.now += (self.costs.replay_done
                      + self.costs.replay_dec * nsuccs)
+
+    # Priority-lane traffic (critical-path placement): banded deque
+    # appends and the pop-side band scan — local-time only, no
+    # VirtualLock, no pollution flag (the lane is lock-free by design).
+    def prio_push(self) -> None:
+        self.now += self.costs.prio_push
+
+    def prio_pop(self) -> None:
+        self.now += self.costs.prio_pop
 
     # -- result aggregation ---------------------------------------------
     def lock_wait_us(self) -> float:

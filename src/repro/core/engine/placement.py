@@ -1,194 +1,12 @@
-"""Placement policies: who gets a newly-ready task.
+"""Back-compat shim: placement policies moved into the unified
+scheduling subsystem (:mod:`repro.core.sched.placement`), next to the
+DAG core that powers ``CriticalPathPlacement``. Import from
+``repro.core.sched`` in new code."""
+from ..sched.placement import (PLACEMENT_NAMES, CriticalPathPlacement,
+                               PlacementPolicy, RoundRobinPlacement,
+                               ShardAffinePlacement, make_placement)
 
-The Distributed Breadth-First ready pool (paper §4, point 4) is one
-lock-free :class:`~repro.core.shards.StealDeque` per worker slot: the
-owner pops LIFO from the hot end, thieves steal FIFO from the cold end.
-The :class:`PlacementPolicy` owns those deques and decides which deque a
-ready task lands on; it is mode-agnostic — every
-:class:`~repro.core.engine.policy.DependencePolicy` pushes through it and
-both drivers (threads and simulator) pop through it.
-
-Two implementations:
-
-  * :class:`RoundRobinPlacement` — the historical default: spread ready
-    tasks evenly; the unguarded cursor update is a benign race (any value
-    it yields is a valid target index).
-  * :class:`ShardAffinePlacement` — the ROADMAP follow-up: push a ready
-    task onto the deque of the worker that last *executed* a task
-    touching one of its regions (cache locality: the region's blocks are
-    warm in that core's cache). Falls back to round-robin when no
-    affinity is known yet. The affinity map is updated by the driver via
-    :meth:`note_executed`; dict reads/writes are atomic under the GIL and
-    a stale entry only costs locality, never correctness.
-"""
-from __future__ import annotations
-
-import threading
-from collections import OrderedDict
-from typing import Dict, Hashable, List, Optional
-
-from ..shards import StealDeque, stable_region_hash
-from ..wd import WorkDescriptor
-
-
-class PlacementPolicy:
-    """Owns the per-slot ready deques; subclasses choose the target."""
-
-    def __init__(self, num_slots: int) -> None:
-        if num_slots < 1:
-            raise ValueError("num_slots must be >= 1")
-        self.deques: List[StealDeque] = [StealDeque()
-                                         for _ in range(num_slots)]
-
-    # -- protocol -------------------------------------------------------
-    def push(self, wd: WorkDescriptor) -> None:
-        raise NotImplementedError
-
-    def pop(self, slot: int) -> Optional[WorkDescriptor]:
-        """Own deque first (LIFO end), then steal around the ring
-        (FIFO end, O(1) per attempt)."""
-        wd = self.deques[slot].pop()
-        if wd is not None:
-            return wd
-        n = len(self.deques)
-        for off in range(1, n):
-            wd = self.deques[(slot + off) % n].steal()
-            if wd is not None:
-                return wd
-        return None
-
-    def ready_count(self) -> int:
-        return sum(len(d) for d in self.deques)
-
-    def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
-        """Driver hook after a task body ran on ``slot``. Default: no
-        bookkeeping."""
-
-    def stats(self) -> Dict[str, int]:
-        return {
-            "pushed": sum(d.pushed for d in self.deques),
-            "popped": sum(d.popped for d in self.deques),
-            "stolen": sum(d.stolen for d in self.deques),
-        }
-
-
-class RoundRobinPlacement(PlacementPolicy):
-    """Spread ready tasks evenly across the slots (historical default)."""
-
-    def __init__(self, num_slots: int) -> None:
-        super().__init__(num_slots)
-        self._rr = 0
-
-    def push(self, wd: WorkDescriptor) -> None:
-        self.deques[self._rr].push(wd)
-        self._rr = (self._rr + 1) % len(self.deques)
-
-
-class ShardAffinePlacement(RoundRobinPlacement):
-    """Prefer the deque of the worker that last touched the task's
-    regions; falls back to the inherited round-robin push when no
-    affinity is recorded.
-
-    With ``num_shards`` set (the drivers pass their shard count), the
-    map is keyed by SHARD ID — ``stable_region_hash(region) %
-    num_shards``, the same partition function the sharded graph uses —
-    instead of the exact region. That hard-bounds the map at
-    ``num_shards`` entries on region-churning workloads (a streaming app
-    touches unbounded regions but a fixed set of shards) and matches the
-    locality the sharded manager creates anyway: tasks whose regions
-    share a shard already share manager/lock cache lines. Without
-    ``num_shards`` (direct construction) the exact-region keying and the
-    bounded LRU (``max_regions`` entries, default 4096) remain.
-
-    Reads and writes take a small lock — eviction mutates the ordered
-    map, so the GIL alone is not enough — which is acceptable because
-    this placement is opt-in and the critical section is two dict
-    operations."""
-
-    def __init__(self, num_slots: int, max_regions: int = 4096,
-                 num_shards: Optional[int] = None) -> None:
-        super().__init__(num_slots)
-        self._affinity: "OrderedDict[Hashable, int]" = OrderedDict()
-        self._max_regions = max(1, max_regions)
-        self._num_shards = num_shards
-        self._aff_lock = threading.Lock()
-        self.affine_pushes = 0
-        self.fallback_pushes = 0
-
-    def _key(self, region: Hashable) -> Hashable:
-        if self._num_shards:
-            return stable_region_hash(region) % self._num_shards
-        return region
-
-    def set_num_shards(self, num_shards: int) -> None:
-        """Re-key after an online shard-count retune
-        (``ShardedPolicy.resize``): old buckets are meaningless under
-        the new modulus, so the hint map is cleared — affinity rebuilds
-        from the next executions, which is the same cold start a resize
-        imposes on the shards themselves."""
-        with self._aff_lock:
-            # exact-region keying (None) is a deliberate construction
-            # choice — a resize must not convert it to shard keying
-            if self._num_shards is not None \
-                    and num_shards != self._num_shards:
-                self._num_shards = num_shards
-                self._affinity.clear()
-
-    def preferred_slot(self, wd: WorkDescriptor) -> Optional[int]:
-        n = len(self.deques)
-        with self._aff_lock:
-            for region, _mode in wd.deps:
-                slot = self._affinity.get(self._key(region))
-                if slot is not None and slot < n:
-                    return slot
-        return None
-
-    def push(self, wd: WorkDescriptor) -> None:
-        slot = self.preferred_slot(wd)
-        if slot is None:
-            self.fallback_pushes += 1
-            super().push(wd)            # inherited round-robin spread
-            return
-        self.affine_pushes += 1
-        self.deques[slot].push(wd)
-
-    def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
-        with self._aff_lock:
-            for region, _mode in wd.deps:
-                key = self._key(region)
-                self._affinity[key] = slot
-                self._affinity.move_to_end(key)
-            while len(self._affinity) > self._max_regions:
-                self._affinity.popitem(last=False)
-
-
-_PLACEMENTS = {
-    "round_robin": RoundRobinPlacement,
-    "shard_affine": ShardAffinePlacement,
-}
-
-
-def make_placement(kind, num_slots: int,
-                   num_shards: Optional[int] = None) -> PlacementPolicy:
-    """``kind`` is a name from ``_PLACEMENTS``, an already-built
-    :class:`PlacementPolicy` (returned as-is), or a class to
-    instantiate. ``num_shards`` (from the driver) switches
-    shard-affine placements to bounded shard-id affinity keying."""
-    if isinstance(kind, PlacementPolicy):
-        if len(kind.deques) != num_slots:
-            raise ValueError(
-                f"placement instance has {len(kind.deques)} deques, "
-                f"driver needs {num_slots}")
-        return kind
-    if isinstance(kind, type) and issubclass(kind, PlacementPolicy):
-        cls = kind
-    else:
-        try:
-            cls = _PLACEMENTS[kind]
-        except KeyError:
-            raise ValueError(
-                f"placement must be one of {sorted(_PLACEMENTS)}, "
-                f"got {kind!r}")
-    if num_shards and issubclass(cls, ShardAffinePlacement):
-        return cls(num_slots, num_shards=num_shards)
-    return cls(num_slots)
+__all__ = [
+    "PLACEMENT_NAMES", "PlacementPolicy", "RoundRobinPlacement",
+    "ShardAffinePlacement", "CriticalPathPlacement", "make_placement",
+]

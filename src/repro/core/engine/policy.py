@@ -73,6 +73,9 @@ class DependencePolicy:
         self.params = params or DDASTParams()
         self.placement = placement or RoundRobinPlacement(num_slots)
         self.charge = charge or CostCharger()
+        # placements charge their priority-lane traffic through the same
+        # adapter the policy uses (no-op on threads, priced in the sim)
+        self.placement.charge = self.charge
         # big.LITTLE support (paper §8): restrict which workers may become
         # manager threads (None = any). The main slot is always eligible
         # so taskwait drains.
@@ -588,6 +591,20 @@ def mode_uses_shards(mode: str) -> bool:
         mode = mode[len("replay:"):]
     cls = _POLICIES.get(mode)
     return cls is not None and issubclass(cls, ShardedPolicy)
+
+
+def mode_needs_manager_thread(mode: str) -> bool:
+    """True when ``mode`` resolves to a policy that requires a dedicated
+    manager (dast) — drivers use this for constructor-time validation
+    (e.g. the simulator needs >= 2 cores for it) without per-mode
+    branching of their own."""
+    if mode.startswith("replay:"):
+        mode = mode[len("replay:"):]
+    try:
+        cls = _POLICIES[mode]
+    except KeyError:
+        raise ValueError(f"mode must be one of {POLICY_NAMES}")
+    return cls.needs_manager_thread
 
 
 def make_policy(mode: str, num_slots: int, replay: bool = False,

@@ -27,6 +27,17 @@ to every :class:`~repro.core.engine.policy.DependencePolicy`:
     decrements the recorded successors' latches and pushes newly-ready
     tasks straight into the ``PlacementPolicy``. Zero messages, zero
     graph-lock acquisitions on the steady-state path.
+  * **prioritize** — at freeze time the wrapper also publishes
+    scheduling knowledge to the
+    :class:`~repro.core.sched.placement.PlacementPolicy`: per-task
+    bottom levels (:func:`~repro.core.sched.dag.bottom_levels` over the
+    frozen successor arrays, weighted by the per-task execution-time
+    EMAs recorded through the drivers, default 1.0), so a
+    critical-path-aware placement can start the longest remaining chain
+    first. The EMAs keep updating during replay and the priorities are
+    refreshed at each successful iteration boundary (a root-quiescent
+    point). Placements that don't want priorities
+    (``wants_replay_priorities`` False) skip the computation entirely.
   * **invalidate** — the moment a submission diverges from the
     recording (changed region, changed dep mode, extra task, unknown
     parent) the wrapper falls back: the already-replayed prefix is
@@ -36,10 +47,24 @@ to every :class:`~repro.core.engine.policy.DependencePolicy`:
     parent namespace and handed to the live policy for fresh analysis
     as soon as that namespace's replayed siblings have all completed
     (at which point an empty region map is exactly the correct state).
-    The stale recording is dropped and the next full iteration
-    re-records. An iteration that submits *fewer* tasks than recorded
-    executes correctly (two-phase latches: a never-submitted task's
-    latch can never reach zero) and invalidates at its quiescence.
+    The stale recording is *retired into the recording cache* (below),
+    not dropped, and the next full iteration re-records. An iteration
+    that submits *fewer* tasks than recorded executes correctly
+    (two-phase latches: a never-submitted task's latch can never reach
+    zero) and invalidates at its quiescence.
+  * **multi-recording cache** — frozen graphs are kept in a small LRU
+    cache (default 4) keyed by an order-canonical signature of the
+    per-parent structural key sequences. Two paths consult it: (a) a
+    fresh recording whose signature matches a cached graph reuses it at
+    freeze time (no re-resolution, cost EMAs retained); (b) when the
+    FIRST submission of an iteration fails to open the active recording
+    — nothing replayed yet, so switching is trivially safe — the
+    wrapper redispatches to a cached recording whose root namespace
+    starts with that key. A/B alternating iteration patterns therefore
+    replay both structures instead of re-recording on every switch;
+    only structures that diverge mid-iteration still pay a live
+    re-record per switch (their shared prefix makes a cold dispatch
+    impossible).
 
 The join latch is two-phase: it starts at ``predecessors + 1`` each
 generation; the Submit contributes one decrement (after the WD is
@@ -58,14 +83,19 @@ between siblings (per-parent graphs everywhere in this runtime).
 from __future__ import annotations
 
 import threading
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from ..depgraph import collect_preds_and_register
+from ..sched.dag import bottom_levels
 from ..shards.steal_deque import AtomicCounter
 from ..wd import TaskState, WorkDescriptor
 from .policy import DependencePolicy
 
 _ROOT = -1
+
+#: EMA factor for per-task execution-time tracking during replay.
+_COST_EMA = 0.25
 
 #: ReplayPolicy states (``replay_state`` property).
 RECORDING = "recording"
@@ -118,6 +148,45 @@ def _deps_key(wd: WorkDescriptor) -> _DepsKey:
     return tuple((region, mode) for region, mode in wd.deps)
 
 
+def _task_cost(wd: WorkDescriptor) -> Optional[float]:
+    """The task's measured cost: real body time (threaded driver's
+    ``exec_dur``, seconds) or virtual duration (simulator, µs) — only
+    relative magnitude matters and the two never mix within a run.
+    ``None`` when no measurement exists (the bottom-level fallback is a
+    unit cost, i.e. chain length)."""
+    c = getattr(wd, "exec_dur", None)
+    if c is None:
+        c = wd.duration
+    return c
+
+
+def _canonical_signature(
+        children: Dict[int, List[Tuple[_DepsKey, int]]]) -> Tuple:
+    """Order-canonical signature of a recording: each namespace's key
+    sequence, tagged by the canonical index of the task heading it,
+    enumerated in BFS order from the root namespace. Canonical indices
+    are assigned in that same traversal, so the signature is invariant
+    to the cross-namespace submission interleaving (which varies run to
+    run under real threads) while distinguishing any structural change —
+    exactly the equality the multi-recording cache needs."""
+    canon: Dict[int, int] = {}
+    items: List[Tuple[int, Tuple[_DepsKey, ...]]] = []
+    queue: List[int] = [_ROOT]
+    qi = 0
+    while qi < len(queue):
+        psid = queue[qi]
+        qi += 1
+        kids = children.get(psid)
+        if not kids:
+            continue
+        for _key, sid in kids:
+            canon[sid] = len(canon)
+            queue.append(sid)
+        items.append((_ROOT if psid == _ROOT else canon[psid],
+                      tuple(k for k, _ in kids)))
+    return tuple(items)
+
+
 class ReplayGraph:
     """Immutable resolution of one recorded iteration.
 
@@ -129,15 +198,23 @@ class ReplayGraph:
     ``(deps_key, sid)`` expectation list replay matches against."""
 
     __slots__ = ("n", "children", "parent_sid", "succs", "preds",
-                 "latches", "root_ids", "total_edges")
+                 "latches", "root_ids", "total_edges", "costs",
+                 "signature")
 
     def __init__(self, children: Dict[int, List[Tuple[_DepsKey, int]]],
-                 parent_sid: List[int], root_ids: Set[int]) -> None:
+                 parent_sid: List[int], root_ids: Set[int],
+                 costs: Optional[Dict[int, float]] = None) -> None:
         n = len(parent_sid)
         self.n = n
         self.children = children
         self.parent_sid = parent_sid
         self.root_ids = root_ids
+        # Per-task cost estimates (EMA-updated during replay) feeding the
+        # critical-path placement's bottom levels; 1.0 (chain length)
+        # until a measurement exists.
+        self.costs: List[float] = [
+            float((costs or {}).get(sid, 1.0)) for sid in range(n)]
+        self.signature: Optional[Tuple] = None
         self.succs: List[List[int]] = [[] for _ in range(n)]
         self.preds: List[int] = [0] * n
         self.total_edges = 0
@@ -186,6 +263,7 @@ class ReplayPolicy(DependencePolicy):
         self._rec_children: Dict[int, List[Tuple[_DepsKey, int]]] = {}
         self._rec_sid_of: Dict[int, int] = {}
         self._rec_roots: Set[int] = set()
+        self._rec_costs: Dict[int, float] = {}
         # -- frozen side (allocated once at freeze) --------------------
         self.replay_graph: Optional[ReplayGraph] = None
         self._gen = 0
@@ -193,9 +271,13 @@ class ReplayPolicy(DependencePolicy):
         self._iter_sid_of: Dict[int, int] = {}
         self._iter_counts: List[int] = []       # children seen, by psid+1
         self._rec_counts: List[int] = []        # children recorded, ditto
+        self._iter_started = False              # any task matched yet?
         # replay tasks in flight per namespace (psid + 1) and in total
         self._outstanding: List[AtomicCounter] = []
         self._live = AtomicCounter(0)
+        # -- multi-recording cache (signature -> frozen graph, LRU) ----
+        self.cache_size = 4
+        self._cache: "OrderedDict[Tuple, ReplayGraph]" = OrderedDict()
         # -- divergence fallback ---------------------------------------
         self._diverged = False
         self._div_lock = threading.Lock()
@@ -206,6 +288,7 @@ class ReplayPolicy(DependencePolicy):
         self.replayed_tasks = 0
         self.invalidations = 0
         self.recordings = 0
+        self.replay_cache_hits = 0
 
     # ------------------------------------------------------------------
     # delegation plumbing
@@ -285,8 +368,12 @@ class ReplayPolicy(DependencePolicy):
         kids = g.children.get(psid)
         if kids is None or idx >= len(kids) \
                 or kids[idx][0] != _deps_key(wd):
+            if not self._iter_started and psid == _ROOT \
+                    and self._redispatch(wd, slot):
+                return                  # switched recording / re-recording
             self._invalidate(wd, slot)
             return
+        self._iter_started = True
         sid = kids[idx][1]
         self._iter_counts[psid + 1] = idx + 1
         self._iter_wds[sid] = wd
@@ -297,6 +384,36 @@ class ReplayPolicy(DependencePolicy):
         self.replayed_tasks += 1
         self.charge.replay_submit()
         self._dec(sid)                  # the submit-phase latch unit
+
+    def _redispatch(self, wd: WorkDescriptor, slot: int) -> bool:
+        """The iteration's FIRST submission does not open the active
+        recording. Nothing has been replayed yet, so two safe moves
+        exist: switch to a cached recording this submission does open
+        (the A/B alternating pattern), or start recording a brand-new
+        structure from scratch. Runs race-free: the first root-level
+        submission comes from the only thread with runnable work."""
+        key = _deps_key(wd)
+        for sig in reversed(self._cache):       # MRU first
+            g = self._cache[sig]
+            if g is self.replay_graph:
+                continue
+            kids = g.children.get(_ROOT)
+            if kids and kids[0][0] == key:
+                if wd.parent is not None:
+                    # proven to be the driver root by the active graph's
+                    # match of psid == _ROOT above
+                    g.root_ids.add(wd.parent.wd_id)
+                self.replay_cache_hits += 1
+                self._activate_graph(g)
+                self._iter_started = True
+                self._replay_submit(wd, slot)   # re-match: idx 0 fits
+                return True
+        # no cached structure starts with this task: re-record. The
+        # active graph stays cached (the old structure may come back).
+        self.invalidations += 1
+        self._retire_active()
+        self._record_submit(wd, slot)
+        return True
 
     def _parent_sid(self, wd: WorkDescriptor) -> Optional[int]:
         """The parent's structural id this iteration: its sid if it is a
@@ -316,16 +433,25 @@ class ReplayPolicy(DependencePolicy):
         if self.replay_graph.latches[sid].dec(self._gen) == 0:
             wd = self._iter_wds[sid]
             wd.mark_ready()
-            self.placement.push(wd)
+            self.placement.push_replay(wd, sid)
 
     # ------------------------------------------------------------------
     # protocol: complete
     def complete(self, wd: WorkDescriptor, slot: int) -> None:
         sid = self._iter_sid_of.get(wd.wd_id)
         if sid is None:
+            if self._state == RECORDING:
+                rsid = self._rec_sid_of.get(wd.wd_id)
+                if rsid is not None:
+                    c = _task_cost(wd)
+                    if c is not None:
+                        self._rec_costs[rsid] = c
             self.inner.complete(wd, slot)
             return
         g = self.replay_graph
+        c = _task_cost(wd)
+        if c is not None:               # cost EMA feeds the priorities
+            g.costs[sid] += _COST_EMA * (c - g.costs[sid])
         succs = g.succs[sid]
         self.charge.replay_done(len(succs))
         for t in succs:
@@ -387,34 +513,74 @@ class ReplayPolicy(DependencePolicy):
                 self._freeze()
             return
         # replaying: decide whether the finished iteration kept faith
-        if not self._diverged and not any(self._iter_counts):
+        if not self._diverged and not self._iter_started:
             return                      # empty boundary (e.g. shutdown)
         if not self._diverged and self._iter_counts == self._rec_counts:
             self.replay_iterations += 1
             self._reset_iteration()
+            self._publish_priorities()  # refresh bands from the EMAs
             return
         # structural divergence (mid-iteration fallback, or fewer tasks
-        # than recorded): drop the recording, re-record next iteration.
+        # than recorded): retire the recording into the cache and
+        # re-record next iteration (freeze will reuse a cached graph if
+        # the new structure has been seen before).
         self.invalidations += 0 if self._diverged else 1
-        self._drop_recording()
+        self._retire_active()
 
     def _freeze(self) -> None:
-        g = ReplayGraph(self._rec_children, self._rec_parent,
-                        self._rec_roots)
+        sig = _canonical_signature(self._rec_children)
+        g = self._cache.get(sig)
+        if g is not None:
+            # structurally identical to a cached recording: reuse its
+            # resolved graph (and its warmer cost EMAs) outright
+            self.replay_cache_hits += 1
+            g.root_ids |= self._rec_roots
+        else:
+            g = ReplayGraph(self._rec_children, self._rec_parent,
+                            self._rec_roots, self._rec_costs)
+            g.signature = sig
+            self.recordings += 1
+            self._cache[sig] = g
+            while len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
+        self._activate_graph(g)
+        self._reset_recording()
+
+    def _activate_graph(self, g: ReplayGraph) -> None:
+        """Make ``g`` the active frozen recording (from a fresh freeze, a
+        freeze-time cache hit, or a first-submission redispatch — all
+        root-quiescent points). The shared generation counter keeps
+        monotonically increasing across activations so a graph's latches
+        always see a fresh generation when it comes back."""
         self.replay_graph = g
         self._rec_counts = g.child_counts()
         self._iter_counts = [0] * (g.n + 1)
         self._iter_wds = [None] * g.n
         self._outstanding = [AtomicCounter(0) for _ in range(g.n + 1)]
         self._iter_sid_of = {}
-        self._gen = 0
+        self._gen += 1
+        self._iter_started = False
         self._state = REPLAYING
-        self.recordings += 1
-        self._reset_recording()
+        if g.signature in self._cache:
+            self._cache.move_to_end(g.signature)
+        self._publish_priorities()
+
+    def _publish_priorities(self) -> None:
+        """Hand the active graph's bottom levels (over the recorded
+        successor arrays, weighted by the cost EMAs) to the placement —
+        skipped entirely unless the placement asks for them."""
+        if not getattr(self.placement, "wants_replay_priorities", False):
+            return
+        g = self.replay_graph
+        if g is None:
+            return
+        self.placement.set_replay_priorities(
+            bottom_levels(g.succs, g.costs))
 
     def _reset_iteration(self) -> None:
         self._gen += 1
         self._iter_sid_of.clear()
+        self._iter_started = False
         counts = self._iter_counts
         for i in range(len(counts)):
             counts[i] = 0
@@ -427,8 +593,14 @@ class ReplayPolicy(DependencePolicy):
         self._rec_children = {}
         self._rec_sid_of = {}
         self._rec_roots = set()
+        self._rec_costs = {}
 
-    def _drop_recording(self) -> None:
+    def _retire_active(self) -> None:
+        """The active recording failed this iteration's structure: keep
+        it in the cache (alternating patterns come back to it), clear
+        the live replay state, and return to RECORDING."""
+        if getattr(self.placement, "wants_replay_priorities", False):
+            self.placement.clear_replay_priorities()
         self.replay_graph = None
         self._diverged = False
         self._div_buffers = {}
@@ -438,6 +610,7 @@ class ReplayPolicy(DependencePolicy):
         self._rec_counts = []
         self._iter_wds = []
         self._outstanding = []
+        self._iter_started = False
         self._state = RECORDING
         self._reset_recording()
 
@@ -466,6 +639,8 @@ class ReplayPolicy(DependencePolicy):
             "replay_iterations": self.replay_iterations,
             "replayed_tasks": self.replayed_tasks,
             "invalidations": self.invalidations,
+            "cache_hits": self.replay_cache_hits,
+            "cached_recordings": len(self._cache),
             "recorded_tasks": (self.replay_graph.n
                                if self.replay_graph is not None else 0),
             "recorded_edges": (self.replay_graph.total_edges

@@ -29,9 +29,12 @@ virtual time, so sim-vs-real protocol divergence is structurally
 impossible.
 
 Scheduling is Distributed Breadth-First (paper §4, point 4): one ready
-deque per worker with work stealing — lock-free ``StealDeque``s (owner
-LIFO pop, thief FIFO steal) owned by the ``PlacementPolicy``
-(round-robin by default, shard-affine with ``placement="shard_affine"``).
+deque per worker with work stealing — lock-free two-lane ``StealDeque``s
+(owner LIFO pop, thief FIFO steal, plus a banded priority lane) owned by
+the ``PlacementPolicy`` from the scheduling subsystem (``core.sched``):
+round-robin by default, shard-affine with ``placement="shard_affine"``,
+and critical-path-over-frozen-replay-graphs with
+``placement="critical_path"`` (+ ``replay=True``).
 
 The runtime is instrumented with exactly the quantities the paper plots:
 graph-lock wait time (per-shard waits summed under the sharded policy),
@@ -82,7 +85,8 @@ class RuntimeStats:
     # Record-and-replay counters (zero unless replay=True).
     replay_iterations: int = 0         # iterations served fully by replay
     replayed_tasks: int = 0            # submits elided from live analysis
-    replay_invalidations: int = 0      # recordings dropped on divergence
+    replay_invalidations: int = 0      # recordings retired on divergence
+    replay_cache_hits: int = 0         # recordings reused from the cache
 
 
 # Backward-compatible alias: the lock lives in queues.py so every layer
@@ -213,6 +217,7 @@ class TaskRuntime:
             self.stats.replay_iterations = rep["replay_iterations"]
             self.stats.replayed_tasks = rep["replayed_tasks"]
             self.stats.replay_invalidations = rep["invalidations"]
+            self.stats.replay_cache_hits = rep["cache_hits"]
 
     # ------------------------------------------------------------------
     # ready pool / occupancy probes (delegated)
@@ -283,10 +288,13 @@ class TaskRuntime:
         prev_wid = getattr(_tls, "worker_id", self.num_workers)
         _tls.current, _tls.worker_id = wd, worker_id
         wd.mark_running()
+        t0 = time.perf_counter()
         try:
             if wd.func is not None:
                 wd.result = wd.func(*wd.args)
         finally:
+            # measured body time feeds the replay scheduler's cost EMA
+            wd.exec_dur = time.perf_counter() - t0
             wd.mark_finished()
             _tls.current, _tls.worker_id = prev_task, prev_wid
         self.stats.tasks_executed += 1

@@ -1,0 +1,350 @@
+"""Placement policies: who gets a newly-ready task, and in what lane.
+
+The Distributed Breadth-First ready pool (paper §4, point 4) is one
+lock-free :class:`~repro.core.shards.StealDeque` per worker slot: the
+owner pops LIFO from the hot end, thieves steal FIFO from the cold end.
+The :class:`PlacementPolicy` owns those deques and decides which deque a
+ready task lands on; it is mode-agnostic — every
+:class:`~repro.core.engine.policy.DependencePolicy` pushes through it and
+both drivers (threads and simulator) pop through it.
+
+Three implementations:
+
+  * :class:`RoundRobinPlacement` — the historical default: spread ready
+    tasks evenly; the unguarded cursor update is a benign race (any value
+    it yields is a valid target index).
+  * :class:`ShardAffinePlacement` — push a ready task onto the deque of
+    the worker that last *executed* a task touching one of its regions
+    (cache locality: the region's blocks are warm in that core's cache).
+    Falls back to round-robin when no affinity is known yet, and skips
+    affinity when the preferred deque is far above the ring-average load
+    (a hot region must not pile the whole graph onto one slot). The
+    affinity map is updated by the driver via :meth:`note_executed`.
+  * :class:`CriticalPathPlacement` — the replay-aware scheduler: while a
+    frozen :class:`~repro.core.engine.replay.ReplayGraph` is active, the
+    :class:`~repro.core.engine.replay.ReplayPolicy` publishes per-task
+    bottom levels (critical-path priorities computed ONCE at freeze time
+    from the frozen successor arrays and the recorded per-task cost
+    EMAs, :func:`~repro.core.sched.dag.bottom_levels`) through
+    :meth:`set_replay_priorities`; ready tasks are then pushed into the
+    priority lane of the two-lane deques so the longest remaining chain
+    is always started first. Outside replay (live iterations, divergence
+    suffixes, non-replay runtimes) it degrades to the inherited
+    shard-affine/round-robin behavior. The priority lane is banded
+    GIL-atomic deques (see :class:`~repro.core.shards.StealDeque`), so
+    it reintroduces no lock, global or otherwise.
+
+Placements charge their priority-lane traffic through ``self.charge`` —
+a no-op for the threaded driver; the simulator's
+:class:`~repro.core.engine.charge.SimCharger` prices each priority push
+and each pop-side band scan in virtual time.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Hashable, List, Optional, Sequence
+
+from ..shards import StealDeque, stable_region_hash
+from ..wd import WorkDescriptor
+from .dag import quantize_bands
+
+
+class _NullCharger:
+    """Stand-in until a DependencePolicy wires its real CostCharger in
+    (placements must not import the engine package: the engine imports
+    this module)."""
+
+    __slots__ = ()
+
+    def prio_push(self) -> None:
+        pass
+
+    def prio_pop(self) -> None:
+        pass
+
+
+_NO_CHARGE = _NullCharger()
+
+
+class PlacementPolicy:
+    """Owns the per-slot ready deques; subclasses choose the target."""
+
+    #: True when the placement consumes replay-time priorities — the
+    #: replay wrapper only computes bottom levels for placements that
+    #: want them.
+    wants_replay_priorities = False
+
+    def __init__(self, num_slots: int) -> None:
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.deques: List[StealDeque] = [StealDeque()
+                                         for _ in range(num_slots)]
+        self.charge = _NO_CHARGE
+
+    # -- protocol -------------------------------------------------------
+    def push(self, wd: WorkDescriptor) -> None:
+        raise NotImplementedError
+
+    def push_replay(self, wd: WorkDescriptor, sid: int) -> None:
+        """A replayed task became ready; ``sid`` is its structural id in
+        the active :class:`~repro.core.engine.replay.ReplayGraph`.
+        Default: ignore the id, place like any other task."""
+        self.push(wd)
+
+    def pop(self, slot: int) -> Optional[WorkDescriptor]:
+        """Own deque first (priority bands, then the LIFO end), then
+        steal around the ring (FIFO end, O(1) per attempt)."""
+        wd = self.deques[slot].pop()
+        if wd is not None:
+            return wd
+        n = len(self.deques)
+        for off in range(1, n):
+            wd = self.deques[(slot + off) % n].steal()
+            if wd is not None:
+                return wd
+        return None
+
+    def ready_count(self) -> int:
+        return sum(len(d) for d in self.deques)
+
+    def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
+        """Driver hook after a task body ran on ``slot``. Default: no
+        bookkeeping."""
+
+    # -- replay-priority hooks (no-ops outside CriticalPathPlacement) ---
+    def set_replay_priorities(self, levels: Sequence[float]) -> None:
+        """Freeze-time hook: per-sid bottom levels of the active replay
+        graph."""
+
+    def clear_replay_priorities(self) -> None:
+        """The active recording was retired; drop priority state."""
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "pushed": sum(d.pushed for d in self.deques),
+            "popped": sum(d.popped for d in self.deques),
+            "stolen": sum(d.stolen for d in self.deques),
+        }
+
+
+class RoundRobinPlacement(PlacementPolicy):
+    """Spread ready tasks evenly across the slots (historical default)."""
+
+    def __init__(self, num_slots: int) -> None:
+        super().__init__(num_slots)
+        self._rr = 0
+
+    def push(self, wd: WorkDescriptor) -> None:
+        self.deques[self._rr].push(wd)
+        self._rr = (self._rr + 1) % len(self.deques)
+
+
+class ShardAffinePlacement(RoundRobinPlacement):
+    """Prefer the deque of the worker that last touched the task's
+    regions; falls back to the inherited round-robin push when no
+    affinity is recorded.
+
+    With ``num_shards`` set (the drivers pass their shard count), the
+    map is keyed by SHARD ID — ``stable_region_hash(region) %
+    num_shards``, the same partition function the sharded graph uses —
+    instead of the exact region. That hard-bounds the map at
+    ``num_shards`` entries on region-churning workloads (a streaming app
+    touches unbounded regions but a fixed set of shards) and matches the
+    locality the sharded manager creates anyway: tasks whose regions
+    share a shard already share manager/lock cache lines. Without
+    ``num_shards`` (direct construction) the exact-region keying and the
+    bounded LRU (``max_regions`` entries, default 4096) remain.
+
+    Affinity additionally yields to load: when the preferred deque's
+    normal lane is already more than twice the average of the other
+    slots' lanes (and non-trivially long — see ``_LOAD_CAP_MIN``), the
+    push falls back to round-robin.
+    Without the cap a single hot region (e.g. the sparse-LU diagonal
+    block) funnels every dependent task onto one slot while the other
+    workers burn cycles stealing one task at a time from its cold end.
+
+    Reads and writes of the affinity map take a small lock — eviction
+    mutates the ordered map, so the GIL alone is not enough — which is
+    acceptable because this placement is opt-in and the critical section
+    is two dict operations."""
+
+    #: below this target-deque length the load cap never triggers (a cap
+    #: on near-empty deques would just add noise to the affinity win)
+    _LOAD_CAP_MIN = 4
+
+    def __init__(self, num_slots: int, max_regions: int = 4096,
+                 num_shards: Optional[int] = None) -> None:
+        super().__init__(num_slots)
+        self._affinity: "OrderedDict[Hashable, int]" = OrderedDict()
+        self._max_regions = max(1, max_regions)
+        self._num_shards = num_shards
+        self._aff_lock = threading.Lock()
+        self.affine_pushes = 0
+        self.fallback_pushes = 0
+        self.load_cap_skips = 0
+
+    def _key(self, region: Hashable) -> Hashable:
+        if self._num_shards:
+            return stable_region_hash(region) % self._num_shards
+        return region
+
+    def set_num_shards(self, num_shards: int) -> None:
+        """Re-key after an online shard-count retune
+        (``ShardedPolicy.resize``): old buckets are meaningless under
+        the new modulus, so the hint map is cleared — affinity rebuilds
+        from the next executions, which is the same cold start a resize
+        imposes on the shards themselves."""
+        with self._aff_lock:
+            # exact-region keying (None) is a deliberate construction
+            # choice — a resize must not convert it to shard keying
+            if self._num_shards is not None \
+                    and num_shards != self._num_shards:
+                self._num_shards = num_shards
+                self._affinity.clear()
+
+    def preferred_slot(self, wd: WorkDescriptor) -> Optional[int]:
+        n = len(self.deques)
+        slot = None
+        with self._aff_lock:
+            for region, _mode in wd.deps:
+                s = self._affinity.get(self._key(region))
+                if s is not None and s < n:
+                    slot = s
+                    break
+        if slot is None:
+            return None
+        # Load cap over the NORMAL lanes only (lane_len is O(1); banded
+        # priority work is drained from any deque highest-first, so it
+        # never pins to the owner): yield affinity when the target lane
+        # is more than twice the average of the OTHER slots' lanes.
+        qlen = self.deques[slot].lane_len
+        if qlen >= self._LOAD_CAP_MIN and n > 1:
+            rest = sum(d.lane_len for d in self.deques) - qlen
+            if qlen * (n - 1) > 2 * rest:
+                self.load_cap_skips += 1
+                return None
+        return slot
+
+    def push(self, wd: WorkDescriptor) -> None:
+        slot = self.preferred_slot(wd)
+        if slot is None:
+            self.fallback_pushes += 1
+            super().push(wd)            # inherited round-robin spread
+            return
+        self.affine_pushes += 1
+        self.deques[slot].push(wd)
+
+    def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
+        with self._aff_lock:
+            for region, _mode in wd.deps:
+                key = self._key(region)
+                self._affinity[key] = slot
+                self._affinity.move_to_end(key)
+            while len(self._affinity) > self._max_regions:
+                self._affinity.popitem(last=False)
+
+
+class CriticalPathPlacement(ShardAffinePlacement):
+    """Critical-path-aware placement over frozen replay graphs.
+
+    While the record-and-replay wrapper has an active frozen recording it
+    publishes each task's bottom level (critical-path priority) here,
+    quantized once into discrete bands; :meth:`push_replay` then pushes
+    each newly-ready task into the priority lane of the chosen deque at
+    its precomputed band, so every owner pop and every steal starts the
+    longest remaining chain first. Everything else — live iterations,
+    divergence suffixes, non-replay runtimes — flows through the
+    inherited shard-affine/round-robin path unchanged.
+    """
+
+    wants_replay_priorities = True
+
+    def __init__(self, num_slots: int, max_regions: int = 4096,
+                 num_shards: Optional[int] = None,
+                 max_bands: int = 32) -> None:
+        super().__init__(num_slots, max_regions, num_shards)
+        self.max_bands = max(1, max_bands)
+        self._bands_of: Optional[List[int]] = None
+        self.priority_pushes = 0
+
+    @property
+    def replay_priorities_active(self) -> bool:
+        return self._bands_of is not None
+
+    def set_replay_priorities(self, levels: Sequence[float]) -> None:
+        """Publish per-sid bottom levels (called at freeze time and
+        refreshed from the cost EMAs at replay iteration boundaries —
+        both root-quiescent points, so the deques are empty and the band
+        swap races with nothing)."""
+        bands, nbands = quantize_bands(levels, self.max_bands)
+        for d in self.deques:
+            d.set_num_bands(nbands)
+        self._bands_of = bands
+
+    def clear_replay_priorities(self) -> None:
+        self._bands_of = None
+        for d in self.deques:
+            d.set_num_bands(0)
+
+    def push_replay(self, wd: WorkDescriptor, sid: int) -> None:
+        bands = self._bands_of
+        if bands is None or not 0 <= sid < len(bands):
+            self.push(wd)
+            return
+        self.charge.prio_push()
+        slot = self.preferred_slot(wd)
+        if slot is None:
+            self.fallback_pushes += 1
+            slot = self._rr
+            self._rr = (self._rr + 1) % len(self.deques)
+        else:
+            self.affine_pushes += 1
+        self.priority_pushes += 1
+        self.deques[slot].push_priority(wd, bands[sid])
+
+    def pop(self, slot: int) -> Optional[WorkDescriptor]:
+        wd = super().pop(slot)
+        if wd is not None and self._bands_of is not None:
+            self.charge.prio_pop()      # the pop-side band scan
+        return wd
+
+    def stats(self) -> Dict[str, int]:
+        st = super().stats()
+        st["priority_pushes"] = self.priority_pushes
+        return st
+
+
+_PLACEMENTS = {
+    "round_robin": RoundRobinPlacement,
+    "shard_affine": ShardAffinePlacement,
+    "critical_path": CriticalPathPlacement,
+}
+
+PLACEMENT_NAMES = tuple(_PLACEMENTS)
+
+
+def make_placement(kind, num_slots: int,
+                   num_shards: Optional[int] = None) -> PlacementPolicy:
+    """``kind`` is a name from ``_PLACEMENTS``, an already-built
+    :class:`PlacementPolicy` (returned as-is), or a class to
+    instantiate. ``num_shards`` (from the driver) switches
+    shard-affine placements to bounded shard-id affinity keying."""
+    if isinstance(kind, PlacementPolicy):
+        if len(kind.deques) != num_slots:
+            raise ValueError(
+                f"placement instance has {len(kind.deques)} deques, "
+                f"driver needs {num_slots}")
+        return kind
+    if isinstance(kind, type) and issubclass(kind, PlacementPolicy):
+        cls = kind
+    else:
+        try:
+            cls = _PLACEMENTS[kind]
+        except KeyError:
+            raise ValueError(
+                f"placement must be one of {sorted(_PLACEMENTS)}, "
+                f"got {kind!r}")
+    if num_shards and issubclass(cls, ShardAffinePlacement):
+        return cls(num_slots, num_shards=num_shards)
+    return cls(num_slots)

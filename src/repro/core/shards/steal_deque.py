@@ -9,7 +9,10 @@ pop / popleft are each atomic under the GIL, so owner and thief never
 corrupt the structure; a concurrent pop+steal race on a single remaining
 element resolves to exactly one winner (the loser sees ``IndexError`` and
 reports empty). This also fixes the O(n) ``list.pop(0)`` steal of the
-previous implementation — ``popleft`` is O(1).
+previous implementation — ``popleft`` is O(1). The deque is two-lane:
+an optional banded priority lane (one GIL-atomic deque per discrete
+priority band, highest band drained first) serves the critical-path
+replay placement without reintroducing any lock.
 
 ``AtomicCounter`` is the per-WD pending-predecessor join counter used by
 cross-shard tasks: every shard portion of a Submit adds its local
@@ -75,26 +78,72 @@ class AtomicCounter:
 
 
 class StealDeque(Generic[T]):
-    """Per-worker ready deque: owner-side LIFO pop, thief-side FIFO steal.
+    """Per-worker TWO-LANE ready deque: a normal lane with owner-side
+    LIFO pop / thief-side FIFO steal, plus an optional banded *priority
+    lane* consumed before it.
 
     Push may come from any thread (managers make tasks ready); deque
     append is atomic, so no producer lock is needed either.
+
+    The priority lane (used by the critical-path replay placement) is a
+    list of GIL-atomic deques, one per discrete priority band — highest
+    band drained first by owner and thieves alike, so the longest
+    remaining chain is always started before breadth work. A banded
+    array instead of a heap is what keeps the lane lock-free: every
+    band operation is a single atomic ``deque`` append/pop, and a
+    concurrent pop+steal race on a band's last element resolves to
+    exactly one winner just like the normal lane. Within a band the
+    owner pops the hot end (LIFO) and thieves the cold end (FIFO) — the
+    classic discipline per band. ``set_num_bands`` swaps the band array
+    wholesale and must only be called at quiescent points (the replay
+    freeze / iteration boundaries, where the deques are empty).
     """
 
-    __slots__ = ("_q", "pushed", "popped", "stolen")
+    __slots__ = ("_q", "_bands", "pushed", "popped", "stolen")
 
-    def __init__(self) -> None:
+    def __init__(self, num_bands: int = 0) -> None:
         self._q: deque = deque()
+        self._bands: list = [deque() for _ in range(num_bands)]
         self.pushed = 0
         self.popped = 0
         self.stolen = 0
+
+    def set_num_bands(self, num_bands: int) -> None:
+        """(Re)allocate the priority lane. Quiescent points only: items
+        still sitting in the old band array would be orphaned."""
+        self._bands = [deque() for _ in range(num_bands)]
+
+    @property
+    def num_bands(self) -> int:
+        return len(self._bands)
 
     def push(self, item: T) -> None:
         self._q.append(item)
         self.pushed += 1
 
+    def push_priority(self, item: T, band: int) -> None:
+        """Priority lane: ``band`` indexes the band array (higher =
+        drained first)."""
+        self._bands[band].append(item)
+        self.pushed += 1
+
     def pop(self) -> Optional[T]:
-        """Owner side: newest task (LIFO — cache-warm end)."""
+        """Owner side: highest priority band first, then the normal
+        lane's newest task (LIFO — cache-warm end). The emptiness
+        pre-checks keep the idle-spin path free of raised exceptions;
+        the try/except still arbitrates the last-element pop+steal
+        race."""
+        for b in reversed(self._bands):
+            if not b:
+                continue
+            try:
+                item = b.pop()
+            except IndexError:
+                continue
+            self.popped += 1
+            return item
+        if not self._q:
+            return None
         try:
             item = self._q.pop()
         except IndexError:
@@ -103,7 +152,20 @@ class StealDeque(Generic[T]):
         return item
 
     def steal(self) -> Optional[T]:
-        """Thief side: oldest task (FIFO — the breadth-first end)."""
+        """Thief side: highest priority band first (critical work is
+        globally urgent), then the normal lane's oldest task (FIFO — the
+        breadth-first end); FIFO within each band."""
+        for b in reversed(self._bands):
+            if not b:
+                continue
+            try:
+                item = b.popleft()
+            except IndexError:
+                continue
+            self.stolen += 1
+            return item
+        if not self._q:
+            return None
         try:
             item = self._q.popleft()
         except IndexError:
@@ -111,5 +173,17 @@ class StealDeque(Generic[T]):
         self.stolen += 1
         return item
 
-    def __len__(self) -> int:
+    @property
+    def lane_len(self) -> int:
+        """Length of the normal lane alone — O(1), used by the
+        shard-affine load cap (priority-lane work is excluded there:
+        banded items are drained highest-first by owner and thieves
+        alike, so they never pin to the owner the way the LIFO lane
+        does)."""
         return len(self._q)
+
+    def __len__(self) -> int:
+        n = len(self._q)
+        for b in self._bands:
+            n += len(b)
+        return n

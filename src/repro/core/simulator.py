@@ -53,7 +53,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .ddast import DDASTParams
 from .engine import (SimCharger, make_placement, make_policy,
-                     mode_uses_shards)
+                     mode_needs_manager_thread, mode_uses_shards)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 # ---------------------------------------------------------------------------
@@ -96,6 +96,12 @@ class SimCosts:
     replay_submit: float = 0.12  # key compare + submit-phase latch dec
     replay_done: float = 0.05    # completion bookkeeping (fixed part)
     replay_dec: float = 0.04     # per recorded successor latch dec
+    # Critical-path placement lane traffic (sched/placement.py): a
+    # priority push is one banded deque append, a pop pays the band
+    # scan — both lock-free, priced so the critical_path-vs-round_robin
+    # makespan comparison in bench_sched.py is honest.
+    prio_push: float = 0.06      # banded append + band lookup
+    prio_pop: float = 0.04       # pop-side band scan while replaying
 
 
 @dataclass
@@ -146,9 +152,9 @@ class RuntimeSimulator:
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
                  replay: bool = False) -> None:
-        if mode not in ("sync", "dast", "ddast", "sharded"):
-            raise ValueError("mode must be sync|dast|ddast|sharded")
-        if mode == "dast" and num_cores < 2:
+        # mode validation lives in the policy registry (raises on an
+        # unknown mode) — the driver itself stays free of mode branching
+        if mode_needs_manager_thread(mode) and num_cores < 2:
             # core P-1 is the dedicated manager; with one core the main
             # program could never run and the result would be silently
             # empty.

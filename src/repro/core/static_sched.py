@@ -1,112 +1,9 @@
-"""DDAST as a *static* scheduler for device-side task DAGs.
+"""Back-compat shim: the static DDAST scheduler moved into the unified
+scheduling subsystem (:mod:`repro.core.sched`), where it shares its DAG
+core (successor arrays, list-schedule event loop, bottom levels) with
+the runtime's critical-path replay placement. Import from
+``repro.core.sched`` in new code."""
+from .sched.dag import DagNode
+from .sched.static import ddast_schedule, overlap_collectives
 
-On TPU, the compiled program cannot mutate a dependence graph at run time —
-XLA fixes the schedule at compile time. The transferable part of the
-paper's idea is the *order* the DDAST manager discovers tasks in: ready
-tasks are released incrementally, keeping the working set ("in-graph"
-tasks) minimal and interleaving producer completion with consumer release.
-
-`ddast_schedule` replays the DDAST manager's release discipline in virtual
-time over an arbitrary task DAG and returns a total order. The framework
-uses it to:
-  * order microbatch/collective nodes in the gradient-accumulation train
-    step so the reduce-scatter of µbatch i overlaps compute of µbatch i+1
-    (train/train_step.py);
-  * order request admission in the serving engine's continuous batcher
-    (serve/engine.py) — requests are tasks, prefill->decode are edges.
-"""
-from __future__ import annotations
-
-import heapq
-from dataclasses import dataclass
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
-
-from .ddast import DDASTParams
-
-
-@dataclass
-class DagNode:
-    """A node in an abstract device task DAG."""
-    name: Hashable
-    cost: float = 1.0                      # relative cost (virtual µs)
-    deps: Sequence[Hashable] = ()          # names of predecessor nodes
-    kind: str = "compute"                  # compute | collective | io
-
-
-def ddast_schedule(nodes: Sequence[DagNode], num_units: int = 2,
-                   params: Optional[DDASTParams] = None) -> List[Hashable]:
-    """Deterministic list schedule with the DDAST manager's release
-    discipline: ready nodes are popped LIFO (chain/depth-first locality —
-    the MAX_OPS_THREAD same-queue affinity) onto the earliest-free unit,
-    and successor release happens at producer *finish* events, i.e. tasks
-    are discovered incrementally like the manager draining Done messages,
-    never all at once. Returns a valid topological order (asserted)."""
-    params = params or DDASTParams()
-    by_name = {n.name: n for n in nodes}
-    indeg: Dict[Hashable, int] = {n.name: 0 for n in nodes}
-    succs: Dict[Hashable, List[Hashable]] = {n.name: [] for n in nodes}
-    for n in nodes:
-        for p in n.deps:
-            if p in by_name:
-                indeg[n.name] += 1
-                succs[p].append(n.name)
-
-    ready: List[Hashable] = [nm for nm in (n.name for n in nodes)
-                             if indeg[nm] == 0]
-    unit_free = [0.0] * num_units
-    pending = dict(indeg)
-    order: List[Hashable] = []
-    events: List[Tuple[float, int, Hashable]] = []
-    seqc = 0
-    tcur = 0.0
-    while ready or events:
-        while ready:
-            u = min(range(num_units), key=lambda i: unit_free[i])
-            nm = ready.pop()                     # LIFO: chain locality
-            start = max(unit_free[u], tcur)
-            end = start + max(by_name[nm].cost, 1e-3)
-            unit_free[u] = end
-            heapq.heappush(events, (end, seqc, nm))
-            seqc += 1
-            order.append(nm)
-        if events:
-            tcur, _, nm = heapq.heappop(events)
-            for s in succs[nm]:
-                pending[s] -= 1
-                if pending[s] == 0:
-                    ready.append(s)
-
-    pos = {nm: i for i, nm in enumerate(order)}
-    for n in nodes:
-        for p in n.deps:
-            if p in pos:
-                assert pos[p] < pos[n.name], "ddast_schedule violated a dep"
-    assert len(order) == len(nodes), "DAG has a cycle or unknown dep"
-    return order
-
-
-def overlap_collectives(nodes: Sequence[DagNode],
-                        order: List[Hashable]) -> List[Hashable]:
-    """Post-pass: hoist every collective node to the earliest position the
-    DAG allows (right after its latest-scheduled predecessor), maximizing
-    the slack XLA's latency-hiding scheduler can use to overlap it with
-    compute. Dependence-safe: a node never moves before a predecessor."""
-    deps = {n.name: set(n.deps) for n in nodes}
-    kinds = {n.name: n.kind for n in nodes}
-    out = list(order)
-    for nm in [n.name for n in nodes if n.kind == "collective"]:
-        i = out.index(nm)
-        # earliest legal slot: after the last predecessor in `out`
-        pred_pos = [out.index(p) for p in deps[nm] if p in out[:i]]
-        lo = (max(pred_pos) + 1) if pred_pos else 0
-        if lo < i:
-            out.pop(i)
-            out.insert(lo, nm)
-    # sanity: still topological
-    pos = {nm: i for i, nm in enumerate(out)}
-    for n in nodes:
-        for p in n.deps:
-            if p in pos:
-                assert pos[p] < pos[n.name]
-    _ = kinds
-    return out
+__all__ = ["DagNode", "ddast_schedule", "overlap_collectives"]

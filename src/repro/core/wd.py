@@ -55,6 +55,10 @@ class WorkDescriptor:
     label: str = "task"
     parent: Optional["WorkDescriptor"] = None
     duration: Optional[float] = None  # virtual duration for the simulator
+    # Measured body execution time (seconds), stamped by the threaded
+    # driver — feeds the replay scheduler's per-task cost EMA (the
+    # simulator uses `duration` for the same purpose).
+    exec_dur: Optional[float] = None
 
     wd_id: int = field(default_factory=lambda: next(_wd_ids))
     state: TaskState = TaskState.CREATED

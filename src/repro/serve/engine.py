@@ -25,6 +25,7 @@ import numpy as np
 
 from ..core.ddast import DDASTParams
 from ..core.queues import WorkerQueues
+from ..core.sched import DagNode, bottom_levels, build_arrays
 from ..models.registry import ModelAPI
 
 _req_ids = itertools.count()
@@ -87,32 +88,58 @@ class ServeEngine:
     def _admit_requests(self) -> None:
         """DDAST callback port: round-robin client queues, up to
         MAX_OPS_THREAD per queue, early-exit once MIN_READY slots filled
-        (ready tasks == occupied slots waiting to run)."""
+        (ready tasks == occupied slots waiting to run). Each drain pass
+        admits its batch longest-remaining-chain first (the scheduling
+        subsystem's bottom levels over the request DAG) so a long
+        request starts decoding before short ones fill the slots."""
         p = self.ddast
         self.stats["callback_passes"] += 1
         spins = max(p.max_spins, 1)
         while self._free_slots() > 0 and spins > 0:
             total = 0
+            batch: List[Request] = []
             for q in self.client_queues:
-                if self._free_slots() == 0:
+                if self._free_slots() - len(batch) == 0:
                     break
                 cnt = 0
                 if q.acquire_submit():
                     try:
                         while cnt < p.max_ops_thread and \
-                                self._free_slots() > 0:
+                                self._free_slots() - len(batch) > 0:
                             req = q.submit.pop()
                             if req is None:
                                 break
-                            self._admit(req)
+                            batch.append(req)
                             cnt += 1
                     finally:
                         q.release_submit()
                 total += cnt
+            for req in self._admission_order(batch):
+                self._admit(req)
             self.stats["drained_msgs"] += total
             spins = spins - 1 if total == 0 else spins
             if total == 0:
                 break
+
+    @staticmethod
+    def _admission_order(batch: List[Request]) -> List[Request]:
+        """Order one drain pass's admissions by descending bottom level
+        of each request's prefill->decode chain (shared DAG core,
+        core/sched — the serving analogue of the runtime's critical-path
+        placement). Stable: equal chains keep their FIFO order."""
+        if len(batch) < 2:
+            return batch
+        nodes = []
+        for req in batch:
+            nodes.append(DagNode(("prefill", req.req_id),
+                                 cost=max(len(req.prompt), 1)))
+            nodes.append(DagNode(("decode", req.req_id),
+                                 cost=max(req.max_new_tokens, 1),
+                                 deps=[("prefill", req.req_id)]))
+        idx, succs, _ = build_arrays(nodes)
+        levels = bottom_levels(succs, [n.cost for n in nodes])
+        return sorted(batch, reverse=True,
+                      key=lambda r: levels[idx[("prefill", r.req_id)]])
 
     def _admit(self, req: Request) -> None:
         for i, slot in enumerate(self.slots):

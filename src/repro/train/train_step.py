@@ -1,7 +1,7 @@
 """Train / prefill / serve step builders.
 
 Gradient accumulation over microbatches uses a `lax.scan` whose iteration
-order is the DDAST static schedule's discovery order (core/static_sched):
+order is the DDAST static schedule's discovery order (core/sched):
 each microbatch's grad reduce-scatter is released as soon as its backward
 finishes, so XLA's latency-hiding scheduler overlaps the collective of
 µbatch i with compute of µbatch i+1. Optional gradient compression casts
@@ -16,7 +16,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.static_sched import DagNode, ddast_schedule
+from ..core.sched import DagNode, ddast_schedule
 from ..models.registry import ModelAPI
 from .optimizer import OptConfig, adamw_update, clip_by_global_norm
 

@@ -105,12 +105,18 @@ def test_sim_and_real_share_policy_protocol(app, scale, mode):
 
 
 def test_runtime_driver_is_policy_agnostic():
-    """The acceptance grep: no `mode ==` branching left in runtime.py —
-    the thread driver delegates everything to the policy."""
+    """The acceptance grep: no `mode ==` (nor placement-kind) branching
+    left in either driver — the thread driver and the simulator delegate
+    everything to the policy/placement registries."""
     import repro.core.runtime as rt_mod
-    src = open(os.path.abspath(rt_mod.__file__.replace(".pyc", ".py"))).read()
-    assert "mode ==" not in src
-    assert "mode in (" not in src
+    import repro.core.simulator as sim_mod
+    for mod in (rt_mod, sim_mod):
+        src = open(os.path.abspath(
+            mod.__file__.replace(".pyc", ".py"))).read()
+        assert "mode ==" not in src, mod.__name__
+        assert "mode in (" not in src, mod.__name__
+        assert "placement ==" not in src, mod.__name__
+        assert "placement_kind ==" not in src, mod.__name__
 
 
 @pytest.mark.parametrize("mode", ALL_MODES)

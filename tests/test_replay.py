@@ -197,10 +197,14 @@ def _iteration(rt, out, n, regions, mode=INOUT, tag=0):
 
 @pytest.mark.parametrize("mutate", ["mode", "region", "added"])
 def test_invalidation_falls_back_and_rerecords(mutate):
-    """A structural divergence mid-iteration (changed dep mode, changed
-    region, added task) falls back to live analysis for the diverging
-    suffix, drops the recording, and re-records the new structure —
-    which then replays lock- and message-free again."""
+    """A structural divergence (changed dep mode, changed region, added
+    task) falls back to live analysis and re-records the new structure —
+    which then replays lock- and message-free again. A divergence on the
+    FIRST submission (the changed-mode case: task 0's key differs)
+    re-records in the SAME iteration (nothing was replayed yet); a
+    mid-iteration divergence finishes the replayed prefix under replay,
+    live-analyzes the suffix, and re-records on the next iteration."""
+    first_task_diverges = mutate == "mode"
     with TaskRuntime(num_workers=2, mode="sharded", num_shards=4,
                      replay=True) as rt:
         out = []
@@ -219,18 +223,27 @@ def test_invalidation_falls_back_and_rerecords(mutate):
         iter_a()                            # record
         iter_a()                            # replay
         assert rt.policy.stats()["replay"]["replay_iterations"] == 1
-        iter_b()                            # diverge -> fallback
+        iter_b()                            # diverge
         rep = rt.policy.stats()["replay"]
         assert rep["invalidations"] == 1
-        assert rep["state"] == "recording"
-        iter_b()                            # re-record the new structure
+        if first_task_diverges:
+            # redispatched to RECORDING before anything replayed: the
+            # new structure froze at this very iteration's quiescence
+            assert rep["state"] == "replaying"
+            assert rep["recordings"] == 2
+        else:
+            assert rep["state"] == "recording"
+            iter_b()                        # re-record the new structure
         base = _lockmsg(rt.policy)
         iter_b()                            # replay the new structure
         assert _lockmsg(rt.policy) == base
         rep = rt.policy.stats()["replay"]
         assert rep["state"] == "replaying"
         assert rep["recordings"] == 2
-    expected = 16 * 2 + (17 if mutate == "added" else 16) * 3
+        # the old structure was retired into the cache, not dropped
+        assert rep["cached_recordings"] == 2
+    expected = 16 * 2 + (17 if mutate == "added" else 16) * \
+        (2 if first_task_diverges else 3)
     assert rt.stats.tasks_executed == expected
     assert rt.stats.replay_invalidations == 1
 
