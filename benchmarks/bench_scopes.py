@@ -1,0 +1,210 @@
+"""Multi-tenant scope benchmark: concurrent tenants vs solo runs, and
+weighted-fair admission.
+
+Simulated (virtual-time) comparison: each paper app graph is run solo
+and then as TWO concurrent scopes (``RuntimeSimulator.run_scopes``) on
+the same core count — the headline number is the concurrency ratio
+``T_concurrent / (T_solo_a + T_solo_b)``: 1.0 means tenants time-share
+perfectly, < 1.0 means idle-time overlap wins, and anything above
+``1 / 0.9`` means the scope layers (keying shim, per-scope replay
+slots, fair admission) cost real throughput. A fairness section floods
+two scopes with independent tasks at 2:1 weights and measures the
+grant ratio over the contended prefix (``sync`` mode: inline
+dependence analysis, so readiness tracks submission and admission is
+the contended stage — under the managed modes the DDAST MIN_READY
+discipline deliberately keeps the ready pool small, which is upstream
+of admission). A real-threaded section runs two client threads with
+per-scope replay and reports the RuntimeStats rollups.
+
+Standalone:
+
+    PYTHONPATH=src python benchmarks/bench_scopes.py            # full sweep
+    PYTHONPATH=src python benchmarks/bench_scopes.py --smoke    # ~10 s, CI
+    ... [--out BENCH_scopes.json]
+
+or as a suite inside ``python -m benchmarks.run --only scopes``.
+
+Exit status doubles as the CI gate: non-zero when (a) 2-scope
+concurrent throughput drops below 0.9x the sum-of-solo throughput on
+the matmul graph (ddast AND sharded), or (b) weight-2:1 scopes stop
+getting admission grants within 2:1 +- 25% over the contended prefix.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import RuntimeSimulator, SimTaskSpec, TaskRuntime  # noqa: E402
+from repro.core.taskgraph_apps import sim_app_specs  # noqa: E402
+from repro.core.wd import DepMode  # noqa: E402
+
+#: gate (a): concurrent makespan may exceed the sum of solos by at most
+#: 1/0.9 (i.e. throughput >= 0.9x sum of solo runs)
+MAX_CONC_RATIO = 1.0 / 0.9
+#: gate (b): 2:1 weights must grant within +-25%
+FAIR_LO, FAIR_HI = 2.0 * 0.75, 2.0 * 1.25
+
+FULL = {
+    "apps": {"matmul": 8, "nbody": 6, "sparselu": 10},
+    "modes": ("sync", "ddast", "sharded"),
+    "workers": 8,
+    "flood": 120,
+    "real_tasks": 200,
+    "real_iters": 3,
+}
+SMOKE = {
+    "apps": {"matmul": 8, "sparselu": 8},
+    "modes": ("ddast", "sharded"),
+    "workers": 8,
+    "flood": 90,
+    "real_tasks": 100,
+    "real_iters": 3,
+}
+
+
+def _flood(n: int, tag: str):
+    return [SimTaskSpec(dur=100.0, deps=[((tag, i), DepMode.INOUT)],
+                        label=f"{tag}.{i}") for i in range(n)]
+
+
+def sim_concurrency(cfg: dict) -> list:
+    records = []
+    for app, scale in cfg["apps"].items():
+        for mode in cfg["modes"]:
+            specs = sim_app_specs(app, scale)
+            solo = RuntimeSimulator(cfg["workers"], mode).run(specs)
+            conc = RuntimeSimulator(cfg["workers"], mode).run_scopes(
+                [specs, specs], names=["a", "b"])
+            ratio = conc.makespan_us / (2 * solo.makespan_us)
+            records.append({
+                "app": app, "mode": mode, "workers": cfg["workers"],
+                "tasks_per_scope": solo.tasks,
+                "solo_makespan_us": round(solo.makespan_us, 1),
+                "concurrent_makespan_us": round(conc.makespan_us, 1),
+                "concurrency_ratio": round(ratio, 4),
+                "scope_finish_us": {
+                    k: round(v["finish_us"], 1)
+                    for k, v in conc.scopes.items()},
+            })
+    return records
+
+
+def sim_fairness(cfg: dict) -> dict:
+    n = cfg["flood"]
+    r = RuntimeSimulator(4, "sync").run_scopes(
+        [_flood(n, "a"), _flood(n, "b")], weights=[2.0, 1.0],
+        names=["a", "b"])
+    pre = r.exec_order[:n]              # both scopes still backlogged
+    na = sum(1 for lbl in pre if lbl.startswith("a."))
+    nb = len(pre) - na
+    return {
+        "flood_tasks_per_scope": n,
+        "weights": [2.0, 1.0],
+        "prefix_a": na, "prefix_b": nb,
+        "grant_ratio": round(na / max(nb, 1), 3),
+        "admission_waits": {k: v["admission_waits"]
+                            for k, v in r.scopes.items()},
+    }
+
+
+def real_threads(cfg: dict) -> dict:
+    """Two client threads, each iterating its own scope's graph with
+    per-scope replay, on real threads (informational: wall time; the
+    replay counters are deterministic)."""
+    def spin():
+        x = 0.0
+        for i in range(150):
+            x += i * i
+        return x
+
+    tasks, iters = cfg["real_tasks"], cfg["real_iters"]
+    t0 = time.perf_counter()
+    with TaskRuntime(num_workers=4, mode="sharded", num_shards=8,
+                     num_clients=2, replay=True) as rt:
+        def client(name, weight):
+            sc = rt.open_scope(name, weight=weight)
+            for _ in range(iters):
+                for i in range(tasks):
+                    sc.task(spin, deps=[((i % 31,), DepMode.INOUT)])
+                sc.taskwait()
+            sc.close()
+
+        ts = [threading.Thread(target=client, args=("a", 2.0)),
+              threading.Thread(target=client, args=("b", 1.0))]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    wall = time.perf_counter() - t0
+    return {
+        "mode": "sharded", "tasks_per_iter": tasks, "iters": iters,
+        "wall_s": round(wall, 3),
+        "scopes": {k: {kk: (round(vv, 4) if isinstance(vv, float) else vv)
+                       for kk, vv in v.items()}
+                   for k, v in rt.stats.scopes.items()},
+    }
+
+
+def acceptance(concurrency: list, fairness: dict) -> dict:
+    gates = {}
+    for rec in concurrency:
+        if rec["app"] == "matmul" and rec["mode"] in ("ddast", "sharded"):
+            gates[f"throughput_{rec['mode']}"] = (
+                rec["concurrency_ratio"] <= MAX_CONC_RATIO)
+    gates["fairness_2to1"] = FAIR_LO <= fairness["grant_ratio"] <= FAIR_HI
+    gates["ok"] = all(gates.values())
+    return gates
+
+
+def run(rows: list, smoke: bool = True, out: str = None) -> bool:
+    """``benchmarks.run`` suite entry point (smoke config there, like
+    the sibling suites; the standalone CLI picks via ``--smoke``)."""
+    cfg = SMOKE if smoke else FULL
+    concurrency = sim_concurrency(cfg)
+    fairness = sim_fairness(cfg)
+    real = real_threads(cfg)
+    gates = acceptance(concurrency, fairness)
+    for rec in concurrency:
+        rows.append((f"scopes.{rec['app']}.{rec['mode']}.conc_ratio",
+                     rec["concurrency_ratio"],
+                     f"solo={rec['solo_makespan_us']}us"))
+    rows.append(("scopes.fairness.grant_ratio", fairness["grant_ratio"],
+                 "weights 2:1"))
+    rows.append(("scopes.real.wall_s", real["wall_s"],
+                 f"{real['tasks_per_iter']}x{real['iters']} x 2 scopes"))
+    for k, v in real["scopes"].items():
+        rows.append((f"scopes.real.{k}.replay_iters",
+                     v["replay_iterations"], ""))
+    rows.append(("scopes.gates.ok", int(gates["ok"]), str(gates)))
+    if out:
+        with open(out, "w") as f:
+            json.dump({"concurrency": concurrency, "fairness": fairness,
+                       "real_threads": real, "gates": gates,
+                       "config": {k: v for k, v in cfg.items()
+                                  if not isinstance(v, dict)}},
+                      f, indent=2, default=str)
+    return gates["ok"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows: list = []
+    ok = run(rows, smoke=args.smoke, out=args.out)
+    print("name,value,derived")
+    for n, v, d in rows:
+        print(f"{n},{v},{d}")
+    print(f"# gates {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,8 @@ sys.path.insert(0, "src")
 
 from benchmarks import (bench_contention, bench_replay,  # noqa: E402
                         bench_roofline, bench_scalability, bench_sched,
-                        bench_shards, bench_traces, bench_tuning)
+                        bench_scopes, bench_shards, bench_traces,
+                        bench_tuning)
 
 SUITES = {
     "contention": bench_contention.run,     # §1 motivation + calibration
@@ -24,6 +25,7 @@ SUITES = {
     "shards": bench_shards.run,             # sharded manager sweep
     "replay": bench_replay.run,             # record-and-replay vs live
     "sched": bench_sched.run,               # placement x replay sweep
+    "scopes": bench_scopes.run,             # multi-tenant scopes
 }
 
 

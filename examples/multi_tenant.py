@@ -1,0 +1,56 @@
+"""Multi-tenant scopes: N client threads share ONE runtime.
+
+Each client opens a JobScope — its own root context, dependence
+namespace, record-and-replay slot, and weighted-fair share of
+admission — and iterates its own taskgraph. After iteration 1 each
+scope's recording freezes and further iterations replay with zero
+locks and zero messages, independently per tenant.
+
+    PYTHONPATH=src python examples/multi_tenant.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import threading
+
+import numpy as np
+from repro.core import TaskRuntime
+from repro.core.taskgraph_apps import run_matmul_epochs
+
+N_CLIENTS = 3
+EPOCHS = 4
+rng = np.random.default_rng(0)
+a = rng.standard_normal((32, 32)).astype(np.float32)
+b = rng.standard_normal((32, 32)).astype(np.float32)
+
+with TaskRuntime(num_workers=4, mode="sharded", num_shards=8,
+                 num_clients=N_CLIENTS, replay=True) as rt:
+    outs = {}
+
+    def client(idx: int) -> None:
+        # heavier tenants get a bigger share of ready-task admission
+        weight = float(N_CLIENTS - idx)
+        with rt.open_scope(f"tenant{idx}", weight=weight) as sc:
+            # inside the scope, plain rt.task()/rt.taskwait() land here:
+            # each epoch re-submits the same graph, so epochs 2..N replay
+            outs[idx] = run_matmul_epochs(rt, a, b, bs=8, epochs=EPOCHS)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(N_CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+ref = EPOCHS * (a.astype(np.float64) @ b.astype(np.float64))
+for i, out in sorted(outs.items()):
+    assert np.allclose(out, ref, atol=1e-2), f"tenant{i} wrong result"
+
+print(f"{rt.stats.tasks_executed} tasks across {N_CLIENTS} tenants, "
+      f"{rt.stats.replay_iterations} replayed iterations total")
+for name, st in rt.stats.scopes.items():
+    print(f"  {name}: {st['tasks']} tasks, weight {st['weight']:.0f}, "
+          f"replay iters {st['replay_iterations']} "
+          f"({st['replayed_tasks']} tasks analysis-free), "
+          f"admitted {st['admitted']} "
+          f"(waited {st['admission_waits']}x on admission)")

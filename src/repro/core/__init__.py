@@ -20,6 +20,8 @@ from .messages import (DoneBatchMessage, DoneTaskMessage,
                        SubmitBatchMessage, SubmitTaskMessage)
 from .queues import InstrumentedLock, SPSCQueue, WorkerQueues
 from .runtime import RuntimeStats, TaskRuntime
+from .scopes import (FairAdmission, JobScope, ScopedPolicy, ScopedRegion,
+                     scoped_deps)
 from .shards import (AtomicCounter, GraphShard, ShardMailbox, ShardRouter,
                      ShardedDependenceGraph, StealDeque, stable_region_hash)
 from .simulator import RuntimeSimulator, SimCosts, SimResult, SimTaskSpec
@@ -40,6 +42,8 @@ __all__ = [
     "SubmitTaskMessage",
     "InstrumentedLock", "SPSCQueue", "WorkerQueues",
     "RuntimeStats", "TaskRuntime",
+    "FairAdmission", "JobScope", "ScopedPolicy", "ScopedRegion",
+    "scoped_deps",
     "AtomicCounter", "GraphShard", "ShardMailbox", "ShardRouter",
     "ShardedDependenceGraph", "StealDeque", "stable_region_hash",
     "RuntimeSimulator", "SimCosts", "SimResult", "SimTaskSpec",

@@ -107,11 +107,15 @@ class DependencePolicy:
     def flush(self, slot: int) -> None:
         """Make the slot's buffered submits visible (batching policies)."""
 
-    def notify_quiescent(self, root: bool = True) -> None:
+    def notify_quiescent(self, root: bool = True,
+                         scope_id: Optional[int] = None) -> None:
         """A taskwait on this policy reached quiescence; ``root`` marks
         the driver's top-level (root-task) taskwait — the boundary the
         record-and-replay wrapper freezes and validates recordings at.
-        Plain policies have no iteration state: no-op."""
+        ``scope_id`` names the job scope whose root quiesced (None = the
+        driver's own root context) — only the scope multiplexer
+        (``core.scopes.ScopedPolicy``) routes on it; plain policies have
+        no iteration state: no-op."""
 
     def pending(self) -> int:
         return 0

@@ -250,11 +250,19 @@ class ReplayPolicy(DependencePolicy):
     driver conveniences (``router``, ``worker_queues``, ``resize``, …)
     keep working."""
 
-    def __init__(self, inner: DependencePolicy) -> None:
+    def __init__(self, inner: DependencePolicy,
+                 publish_priorities: bool = True) -> None:
         # deliberately NOT calling super().__init__: the wrapped policy
         # owns slots/params/placement/charge; we delegate.
         self.inner = inner
         self.name = f"replay({inner.name})"
+        # Whether this wrapper may drive the placement's banded priority
+        # lane. Multi-tenant scope wrappers (core.scopes) share ONE
+        # placement across several independent replay graphs whose sids
+        # index different band tables, so they run with this off: ready
+        # replayed tasks take the normal lane and no bottom levels are
+        # published (the placement degrades to its non-replay behavior).
+        self.publish_priorities = publish_priorities
         self._state = RECORDING
         # -- recording side (guarded by _rec_lock; slow path) ----------
         self._rec_lock = threading.Lock()
@@ -433,7 +441,10 @@ class ReplayPolicy(DependencePolicy):
         if self.replay_graph.latches[sid].dec(self._gen) == 0:
             wd = self._iter_wds[sid]
             wd.mark_ready()
-            self.placement.push_replay(wd, sid)
+            if self.publish_priorities:
+                self.placement.push_replay(wd, sid)
+            else:
+                self.placement.push(wd)
 
     # ------------------------------------------------------------------
     # protocol: complete
@@ -505,7 +516,9 @@ class ReplayPolicy(DependencePolicy):
 
     # ------------------------------------------------------------------
     # iteration boundaries
-    def notify_quiescent(self, root: bool = True) -> None:
+    def notify_quiescent(self, root: bool = True,
+                         scope_id: Optional[int] = None) -> None:
+        del scope_id                    # routing happens one layer up
         if not root:
             return
         if self._state == RECORDING:
@@ -569,6 +582,8 @@ class ReplayPolicy(DependencePolicy):
         """Hand the active graph's bottom levels (over the recorded
         successor arrays, weighted by the cost EMAs) to the placement —
         skipped entirely unless the placement asks for them."""
+        if not self.publish_priorities:
+            return
         if not getattr(self.placement, "wants_replay_priorities", False):
             return
         g = self.replay_graph
@@ -599,7 +614,8 @@ class ReplayPolicy(DependencePolicy):
         """The active recording failed this iteration's structure: keep
         it in the cache (alternating patterns come back to it), clear
         the live replay state, and return to RECORDING."""
-        if getattr(self.placement, "wants_replay_priorities", False):
+        if self.publish_priorities and \
+                getattr(self.placement, "wants_replay_priorities", False):
             self.placement.clear_replay_priorities()
         self.replay_graph = None
         self._diverged = False

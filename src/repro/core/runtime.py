@@ -36,6 +36,15 @@ round-robin by default, shard-affine with ``placement="shard_affine"``,
 and critical-path-over-frozen-replay-graphs with
 ``placement="critical_path"`` (+ ``replay=True``).
 
+With ``num_clients=N`` the runtime is **multi-tenant**: ``open_scope``
+returns a :class:`~repro.core.scopes.JobScope` — an independent root
+context with its own taskwait quiescence, its own dependence namespace
+(the ``core.scopes`` region-keying shim), its own record-and-replay
+slot, and a weighted-fair share of ready-task admission
+(:class:`~repro.core.scopes.FairAdmission` in front of the placement).
+Client threads each own one submit slot, preserving the §3.1
+single-producer queue discipline.
+
 The runtime is instrumented with exactly the quantities the paper plots:
 graph-lock wait time (per-shard waits summed under the sharded policy),
 in-graph/ready task counts over time (Figs 12-14), message counts, and
@@ -43,15 +52,19 @@ task throughput.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 from .ddast import DDASTParams
 from .dispatcher import FunctionalityDispatcher
 from .engine import make_placement, make_policy, mode_uses_shards
 from .queues import InstrumentedLock
+from .scopes import (FairAdmission, JobScope, ScopedPolicy, scope_rollup,
+                     scoped_deps)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 _MODES = ("sync", "dast", "ddast", "sharded")
@@ -87,6 +100,10 @@ class RuntimeStats:
     replayed_tasks: int = 0            # submits elided from live analysis
     replay_invalidations: int = 0      # recordings retired on divergence
     replay_cache_hits: int = 0         # recordings reused from the cache
+    # Per-scope rollups (empty unless scopes were opened): scope name ->
+    # {tasks, weight, iterations, wall_s, admitted, admission_waits,
+    #  max_queued, replay_iterations, replayed_tasks}.
+    scopes: Dict[str, dict] = field(default_factory=dict)
 
 
 # Backward-compatible alias: the lock lives in queues.py so every layer
@@ -109,11 +126,14 @@ class TaskRuntime:
                  num_shards: Optional[int] = None,
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
-                 replay: bool = False) -> None:
+                 replay: bool = False,
+                 num_clients: int = 0) -> None:
         if mode not in _MODES:
             raise ValueError(f"mode must be one of {_MODES}")
         if num_shards is not None and num_shards < 1:
             raise ValueError("num_shards must be >= 1")
+        if num_clients < 0:
+            raise ValueError("num_clients must be >= 0")
         self.num_workers = num_workers
         self.mode = mode
         self.params = params or DDASTParams()
@@ -122,14 +142,23 @@ class TaskRuntime:
         self.num_shards = num_shards or max(2, num_workers)
         self.batch_size = batch_size
         self.replay = replay
+        self.num_clients = num_clients
 
-        num_slots = num_workers + 1        # +1: the main thread's slot
+        # +1: the main thread's slot; client threads (multi-tenant
+        # scopes) each own one more so the single-producer submit-queue
+        # discipline (§3.1) survives concurrent tenants
+        num_slots = num_workers + 1 + num_clients
         # shard-id affinity keying only makes sense over a shard
         # partition; other modes keep exact-region keying
         self.placement = make_placement(
             placement, num_slots,
             num_shards=self.num_shards if mode_uses_shards(mode) else None)
-        self.policy = make_policy(
+        if num_clients > 0:
+            # multi-tenant: fair admission in front of the deques; the
+            # scope multiplexer below owns the replay wrapping (one
+            # recording slot per scope), so the base policy stays live
+            self.placement = FairAdmission(self.placement)
+        self.policy: Any = make_policy(
             mode, num_slots,
             num_workers=num_workers,
             params=self.params,
@@ -138,7 +167,9 @@ class TaskRuntime:
             main_slot=num_workers,
             num_shards=self.num_shards,
             batch_size=batch_size,
-            replay=replay)
+            replay=replay and num_clients == 0)
+        if num_clients > 0:
+            self.policy = ScopedPolicy(self.policy, replay=replay)
         self.dispatcher = FunctionalityDispatcher()
         if self.policy.uses_idle_managers:
             self.dispatcher.register("policy", self.policy.callback,
@@ -151,6 +182,14 @@ class TaskRuntime:
         self._manager_thread: Optional[threading.Thread] = None
         self.stats = RuntimeStats()
         self._trace_t0 = time.perf_counter()
+        # multi-tenant bookkeeping (inert when num_clients == 0)
+        self._scopes: List[JobScope] = []
+        self._scope_seq = itertools.count(1)
+        self._main_thread = threading.current_thread()
+        self._client_slot_lock = threading.Lock()
+        self._free_client_slots = list(range(num_workers + 1, num_slots))
+        self._client_slot_of: Dict[int, int] = {}   # thread ident -> slot
+        self._client_slot_refs: Dict[int, int] = {}  # slot -> open scopes
 
     # ------------------------------------------------------------------
     # historical accessors (the policy owns the structures now)
@@ -183,6 +222,7 @@ class TaskRuntime:
 
     def start(self) -> None:
         self._trace_t0 = time.perf_counter()
+        self._main_thread = threading.current_thread()
         _tls.current = self._root
         _tls.worker_id = self.num_workers  # main thread owns the last slot
         for i in range(self.num_workers):
@@ -196,6 +236,11 @@ class TaskRuntime:
             self._manager_thread.start()
 
     def shutdown(self) -> None:
+        # scope roots are NOT children of the runtime root: drain every
+        # still-open tenant before the final root taskwait (close() is
+        # a no-op for scopes the client already closed)
+        for sc in self._scopes:
+            sc.close()
         self.taskwait()
         self._stop.set()
         for t in self._threads:
@@ -218,6 +263,15 @@ class TaskRuntime:
             self.stats.replayed_tasks = rep["replayed_tasks"]
             self.stats.replay_invalidations = rep["invalidations"]
             self.stats.replay_cache_hits = rep["cache_hits"]
+        scope_tasks = st.get("scope_tasks", {})
+        for sc in self._scopes:
+            entry = {"tasks": scope_tasks.get(sc.scope_id, 0),
+                     "weight": sc.weight,
+                     "iterations": sc.iterations,
+                     "wall_s": sc.wall_s}
+            entry.update(scope_rollup(self.placement, self.policy,
+                                      sc.scope_id))
+            self.stats.scopes[sc.name] = entry
 
     # ------------------------------------------------------------------
     # ready pool / occupancy probes (delegated)
@@ -242,11 +296,19 @@ class TaskRuntime:
              deps: Sequence[Tuple[Any, Union[str, DepMode]]] = (),
              label: str = "task") -> WorkDescriptor:
         """Create + submit a task (life-cycle steps 1-2)."""
-        parent = getattr(_tls, "current", self._root)
-        wid = self._current_wid()
-        wd = WorkDescriptor(func=func, args=args, deps=_parse_deps(deps),
+        parent = getattr(_tls, "current", None) or self._root
+        return self._submit_task(parent, func, args, deps, label)
+
+    def _submit_task(self, parent: WorkDescriptor, func, args, deps,
+                     label: str) -> WorkDescriptor:
+        # the ONE keying shim (core.scopes): a task created under a
+        # scope declares scope-qualified regions, so tenants can never
+        # alias each other's keys anywhere downstream
+        wd = WorkDescriptor(func=func, args=args,
+                            deps=_parse_deps(scoped_deps(parent.scope,
+                                                         deps)),
                             label=label, parent=parent)
-        self.policy.submit(wd, wid)
+        self.policy.submit(wd, self._current_wid())
         self._sample_trace()
         return wd
 
@@ -254,18 +316,48 @@ class TaskRuntime:
         """Block until all children of the current task completed. The
         blocked thread keeps working: executes ready tasks and runs the
         registered idle callbacks — the paper's idle-thread philosophy."""
-        parent = getattr(_tls, "current", self._root)
+        self._taskwait_on(getattr(_tls, "current", None) or self._root)
+
+    def _taskwait_on(self, parent: WorkDescriptor) -> None:
         wid = self._current_wid()
-        self.policy.flush(wid)
+        scope_root = getattr(parent, "is_scope_root", False)
+        if scope_root:
+            # a tenant quiescence edge flushes EVERY slot (cross-thread
+            # flush is lock-protected in the batching policy, same as
+            # drain_all): the scope's buffered submits may sit in a
+            # departed client thread's buffer that no idle callback
+            # will ever flush — without this, close()/shutdown() on an
+            # abandoned scope would spin forever on its unshipped
+            # children
+            for s in range(self.num_workers + 1 + self.num_clients):
+                self.policy.flush(s)
+        else:
+            self.policy.flush(wid)
+        root = parent is self._root or scope_root
+        sid = parent.scope if scope_root else None
+        # Scoped waiters gate on their own subtree alone: every child —
+        # including one whose Submit is still queued, buffered, or in a
+        # replay divergence buffer — incremented num_children_alive at
+        # CREATION and only decrements once its Done is fully processed,
+        # so children == 0 already implies nothing of THIS scope is in
+        # flight. Gating on the runtime-wide pending count here would
+        # let a busy tenant delay another tenant's quiescence (and
+        # replay freeze) unboundedly. The default (scope-less) context
+        # keeps the global probe: its taskwait doubles as the runtime's
+        # drain point at shutdown.
+        scoped = parent.scope is not None
         while True:
-            # account for children whose Submit is still queued/buffered
-            if parent.num_children_alive == 0 and not self._pending_msgs():
+            if parent.num_children_alive == 0 and \
+                    (scoped or not self._pending_msgs()):
                 # policy first (a replay wrapper freezes/validates its
                 # recording here), then dispatcher callbacks (the tuner
                 # may resize shards — legal only once the policy has
-                # settled its iteration state)
-                self.policy.notify_quiescent(parent is self._root)
-                self.dispatcher.notify_quiescent(wid)
+                # settled its iteration state). A scope quiescence is
+                # NOT global quiescence, so it routes to the scope's
+                # policy slot only and skips the dispatcher hooks.
+                self.policy.notify_quiescent(root, scope_id=sid)
+                if not scope_root:
+                    self.dispatcher.notify_quiescent(wid)
                 return
             wd = self.placement.pop(wid)
             if wd is not None:
@@ -274,10 +366,117 @@ class TaskRuntime:
             self.dispatcher.notify_idle(wid)
             time.sleep(self.policy.idle_sleep_s)
 
+    # ------------------------------------------------------------------
+    # multi-tenant scope API (core.scopes)
+    def open_scope(self, name: Optional[str] = None, *,
+                   weight: float = 1.0,
+                   max_inflight: Optional[int] = None) -> JobScope:
+        """Open an independent root context for one tenant. Requires a
+        multi-tenant runtime (``num_clients >= 1``): client threads each
+        own a submit slot there, and the scope layers (per-scope replay
+        slots + fair admission) are in place."""
+        if self.num_clients <= 0:
+            raise ValueError(
+                "open_scope needs TaskRuntime(num_clients=N): client "
+                "submit slots and the scope layers are sized at "
+                "construction")
+        slot = self._ensure_client_slot()
+        sid = next(self._scope_seq)
+        sc = JobScope(self, sid, name or f"scope{sid}",
+                      weight=weight, max_inflight=max_inflight)
+        if slot > self.num_workers:     # an allocated client slot:
+            sc._client_slot = slot      # returned once the owning
+            with self._client_slot_lock:  # thread's last scope closes
+                self._client_slot_refs[slot] = \
+                    self._client_slot_refs.get(slot, 0) + 1
+        self.policy.register_scope(sid)
+        self.placement.register_scope(sid, weight, max_inflight)
+        self._scopes.append(sc)
+        return sc
+
+    def _release_client_slot(self, scope: JobScope) -> None:
+        """A scope closed: when it was the owning client thread's last
+        open scope, recycle the thread's submit slot so tenant-session
+        churn (thread per session) is bounded by CONCURRENT clients,
+        not total ones. Safe at close time: the scope quiesced, so the
+        slot's queues and buffers hold nothing of it."""
+        slot = getattr(scope, "_client_slot", None)
+        if slot is None:
+            return
+        scope._client_slot = None
+        with self._client_slot_lock:
+            refs = self._client_slot_refs.get(slot, 0) - 1
+            if refs > 0:
+                self._client_slot_refs[slot] = refs
+                return
+            self._client_slot_refs.pop(slot, None)
+            for ident, s in list(self._client_slot_of.items()):
+                if s == slot:
+                    del self._client_slot_of[ident]
+            self._free_client_slots.append(slot)
+
+    def _scope_task(self, scope: JobScope, func, args, deps,
+                    label: str) -> WorkDescriptor:
+        cur = getattr(_tls, "current", None)
+        parent = (cur if cur is not None
+                  and getattr(cur, "scope", None) == scope.scope_id
+                  else scope.root)
+        return self._submit_task(parent, func, args, deps, label)
+
+    def _scope_taskwait(self, scope: JobScope) -> None:
+        self._taskwait_on(scope.root)
+
+    def _enter_scope(self, scope: JobScope) -> None:
+        """``with scope:`` — the calling thread's submissions land in
+        the scope until exit (per-thread stack, so scopes nest)."""
+        stack = getattr(_tls, "scope_stack", None)
+        if stack is None:
+            stack = _tls.scope_stack = []
+        stack.append(getattr(_tls, "current", None))
+        _tls.current = scope.root
+
+    def _exit_scope(self, scope: JobScope) -> None:
+        del scope
+        prev = _tls.scope_stack.pop()
+        if prev is None:
+            try:
+                del _tls.current
+            except AttributeError:  # pragma: no cover - defensive
+                pass
+        else:
+            _tls.current = prev
+
+    def _ensure_client_slot(self) -> int:
+        """The calling thread's submit slot, allocating a client slot
+        for threads the runtime doesn't already own (cold path: once
+        per thread per runtime; recycled by ``_release_client_slot``)."""
+        wid = self._client_slot_of.get(threading.get_ident())
+        if wid is not None:
+            return wid
+        t = threading.current_thread()
+        if t is self._main_thread or t in self._threads:
+            return self._current_wid()  # already owns a slot
+        with self._client_slot_lock:
+            wid = self._client_slot_of.get(threading.get_ident())
+            if wid is not None:
+                return wid
+            if not self._free_client_slots:
+                raise RuntimeError(
+                    f"no free client slot (num_clients={self.num_clients}"
+                    f"): raise num_clients or reuse a registered thread")
+            wid = self._free_client_slots.pop(0)
+            self._client_slot_of[threading.get_ident()] = wid
+        return wid
+
     def _current_wid(self) -> int:
         """This thread's worker id, clamped to this runtime's slots: the
         TLS is module-global, so a thread that last belonged to a larger
-        runtime would otherwise index out of range here."""
+        runtime would otherwise index out of range here. Registered
+        client threads (multi-tenant scopes) resolve through this
+        runtime's slot map first (GIL-atomic dict read)."""
+        wid = self._client_slot_of.get(threading.get_ident())
+        if wid is not None:
+            return wid
         wid = getattr(_tls, "worker_id", self.num_workers)
         return wid if wid <= self.num_workers else self.num_workers
 

@@ -266,7 +266,13 @@ class CriticalPathPlacement(ShardAffinePlacement):
         super().__init__(num_slots, max_regions, num_shards)
         self.max_bands = max(1, max_bands)
         self._bands_of: Optional[List[int]] = None
+        # band-indexed global occupancy counters shared by all deques
+        # (GIL-atomic hint — see StealDeque): lets pop find the best
+        # band across the WHOLE ring, making the longest-remaining-chain
+        # guarantee global instead of per-deque
+        self._band_counts: Optional[List[int]] = None
         self.priority_pushes = 0
+        self.global_band_steals = 0
 
     @property
     def replay_priorities_active(self) -> bool:
@@ -278,12 +284,15 @@ class CriticalPathPlacement(ShardAffinePlacement):
         both root-quiescent points, so the deques are empty and the band
         swap races with nothing)."""
         bands, nbands = quantize_bands(levels, self.max_bands)
+        counts = [0] * nbands
         for d in self.deques:
-            d.set_num_bands(nbands)
+            d.set_num_bands(nbands, counts)
+        self._band_counts = counts
         self._bands_of = bands
 
     def clear_replay_priorities(self) -> None:
         self._bands_of = None
+        self._band_counts = None
         for d in self.deques:
             d.set_num_bands(0)
 
@@ -304,6 +313,27 @@ class CriticalPathPlacement(ShardAffinePlacement):
         self.deques[slot].push_priority(wd, bands[sid])
 
     def pop(self, slot: int) -> Optional[WorkDescriptor]:
+        # Global priority pop: when the shared band counters say a
+        # better band exists somewhere in the ring than anything in the
+        # own deque, steal from THAT band first — the
+        # longest-remaining-chain guarantee becomes global, not
+        # per-deque. The counters are a hint (see StealDeque): a stale
+        # entry just falls through to the normal own-pop/steal path.
+        counts = self._band_counts
+        if counts is not None:
+            gb = -1
+            for b in range(len(counts) - 1, -1, -1):
+                if counts[b] > 0:
+                    gb = b
+                    break
+            if gb >= 0 and self.deques[slot].best_band() < gb:
+                n = len(self.deques)
+                for off in range(1, n):
+                    wd = self.deques[(slot + off) % n].steal_band(gb)
+                    if wd is not None:
+                        self.global_band_steals += 1
+                        self.charge.prio_pop()
+                        return wd
         wd = super().pop(slot)
         if wd is not None and self._bands_of is not None:
             self.charge.prio_pop()      # the pop-side band scan
@@ -312,6 +342,7 @@ class CriticalPathPlacement(ShardAffinePlacement):
     def stats(self) -> Dict[str, int]:
         st = super().stats()
         st["priority_pushes"] = self.priority_pushes
+        st["global_band_steals"] = self.global_band_steals
         return st
 
 

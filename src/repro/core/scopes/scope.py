@@ -1,0 +1,128 @@
+"""JobScope: a first-class root context, plus the region-keying shim.
+
+A scope is to the runtime what a tenant is to a service: its tasks form
+an independent graph under the scope's own root WD, its ``taskwait()``
+quiesces only that graph, and its regions live in a namespace no other
+scope can alias. The namespace comes from ONE shim —
+:func:`scoped_deps` wraps every declared region as
+``ScopedRegion(scope, region)`` at the moment a task enters the policy
+boundary — so every downstream consumer of region keys (the RAW/WAW/WAR
+rules, the shard hash, the placement affinity map, the replay
+structural keys) separates tenants for free, in all four policies.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+from ..wd import TaskState, WorkDescriptor
+
+
+class ScopedRegion(NamedTuple):
+    """A region key qualified by the scope that declared it. Compares
+    and hashes by value like any region tuple, and its ``repr`` is
+    stable, so :func:`~repro.core.shards.stable_region_hash` spreads the
+    same app region to *different* shards for different scopes."""
+    scope: int
+    region: Any
+
+
+def scoped_deps(scope_id: Optional[int], deps: Sequence[Tuple[Any, Any]]
+                ) -> Sequence[Tuple[Any, Any]]:
+    """The keying shim: fold ``scope_id`` into every region key of a
+    dependence list. Identity for the default (scope-less) context, so
+    non-tenant code pays nothing."""
+    if scope_id is None:
+        return deps
+    return tuple((ScopedRegion(scope_id, region), mode)
+                 for region, mode in deps)
+
+
+class JobScope:
+    """One tenant's root context inside a shared ``TaskRuntime``.
+
+    Created by ``TaskRuntime.open_scope(name, weight=, max_inflight=)``;
+    usable as a context manager (``with rt.open_scope("a") as sc:``) —
+    entering makes the scope root the calling thread's current task so
+    plain ``rt.task(...)`` submissions land in the scope; exiting
+    taskwaits and closes. ``task()``/``taskwait()`` also work
+    explicitly, from the opening thread (each submitting thread owns
+    one SPSC submit queue — the §3.1 single-producer discipline — so a
+    scope's top-level tasks must come from one thread; *nested* tasks
+    created by worker threads executing scope tasks inherit the scope
+    through their parent and use the worker's own slot).
+
+    ``weight`` and ``max_inflight`` parameterize the
+    :class:`~repro.core.scopes.admission.FairAdmission` layer: weight
+    is the scope's deficit-round-robin share of ready-task admission;
+    ``max_inflight`` bounds how many of the scope's ready tasks may
+    occupy the shared ready deques at once (backpressure — a flooding
+    tenant queues in its own ring, not in the shared pool).
+    """
+
+    def __init__(self, runtime, scope_id: int, name: str,
+                 weight: float = 1.0,
+                 max_inflight: Optional[int] = None) -> None:
+        if weight <= 0:
+            raise ValueError("weight must be > 0")
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        self._rt = runtime
+        self.scope_id = scope_id
+        self.name = name
+        self.weight = weight
+        self.max_inflight = max_inflight
+        self.root = WorkDescriptor(func=None, label=f"scope:{name}",
+                                   scope=scope_id)
+        self.root.state = TaskState.RUNNING
+        self.root.is_scope_root = True
+        self.iterations = 0             # root taskwaits reached
+        self.opened_s = time.perf_counter()
+        self.closed_s: Optional[float] = None
+        # the owning client thread's submit slot, when one was
+        # allocated for it (recycled at close — see runtime)
+        self._client_slot: Optional[int] = None
+
+    # ------------------------------------------------------------------
+    def task(self, func: Optional[Callable[..., Any]], *args,
+             deps: Sequence[Tuple[Any, Any]] = (),
+             label: str = "task") -> WorkDescriptor:
+        """Create + submit a task under this scope. The parent is the
+        calling thread's current task when that task already belongs to
+        this scope (nested creation), else the scope root."""
+        return self._rt._scope_task(self, func, args, deps, label)
+
+    def taskwait(self) -> None:
+        """Block until all of THIS scope's tasks completed; the blocked
+        thread keeps working (any scope's ready tasks). Reaching
+        quiescence is this scope's root iteration boundary — its replay
+        recording freezes/validates here, independent of other
+        tenants."""
+        self._rt._scope_taskwait(self)
+        self.iterations += 1
+
+    def close(self) -> None:
+        """Taskwait, stop accounting wall time, and recycle the owning
+        thread's client slot once its last scope closes."""
+        if self.closed_s is None:
+            self.taskwait()
+            self.closed_s = time.perf_counter()
+            self._rt._release_client_slot(self)
+
+    @property
+    def wall_s(self) -> float:
+        return (self.closed_s or time.perf_counter()) - self.opened_s
+
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "JobScope":
+        self._rt._enter_scope(self)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._rt._exit_scope(self)
+        self.close()
+        return False
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"JobScope({self.scope_id}:{self.name!r} "
+                f"w={self.weight} cap={self.max_inflight})")

@@ -97,21 +97,35 @@ class StealDeque(Generic[T]):
     classic discipline per band. ``set_num_bands`` swaps the band array
     wholesale and must only be called at quiescent points (the replay
     freeze / iteration boundaries, where the deques are empty).
+
+    ``shared_counts`` (optional, installed by ``set_num_bands``) is a
+    band-indexed list of occupancy counters SHARED across all deques of
+    one placement: every band push increments its entry, every band
+    pop/steal decrements it, so a popper can find the best band across
+    the whole ring in O(bands) without touching any other deque. The
+    updates are plain GIL-interleavable ``+=``/``-=`` — the counters
+    are a *hint*, never load-bearing: a stale positive entry costs one
+    wasted cross-deque scan, a stale zero merely loses the global-order
+    improvement for one pop (the per-deque band scan below still drains
+    every band, so no task can be stranded).
     """
 
-    __slots__ = ("_q", "_bands", "pushed", "popped", "stolen")
+    __slots__ = ("_q", "_bands", "_counts", "pushed", "popped", "stolen")
 
     def __init__(self, num_bands: int = 0) -> None:
         self._q: deque = deque()
         self._bands: list = [deque() for _ in range(num_bands)]
+        self._counts: Optional[list] = None
         self.pushed = 0
         self.popped = 0
         self.stolen = 0
 
-    def set_num_bands(self, num_bands: int) -> None:
+    def set_num_bands(self, num_bands: int,
+                      shared_counts: Optional[list] = None) -> None:
         """(Re)allocate the priority lane. Quiescent points only: items
         still sitting in the old band array would be orphaned."""
         self._bands = [deque() for _ in range(num_bands)]
+        self._counts = shared_counts
 
     @property
     def num_bands(self) -> int:
@@ -125,7 +139,32 @@ class StealDeque(Generic[T]):
         """Priority lane: ``band`` indexes the band array (higher =
         drained first)."""
         self._bands[band].append(item)
+        if self._counts is not None:
+            self._counts[band] += 1
         self.pushed += 1
+
+    def best_band(self) -> int:
+        """Highest non-empty band of THIS deque (O(bands) emptiness
+        scan), -1 when the priority lane is empty."""
+        for b in range(len(self._bands) - 1, -1, -1):
+            if self._bands[b]:
+                return b
+        return -1
+
+    def steal_band(self, band: int) -> Optional[T]:
+        """Thief-side pop from one specific band (the cross-deque
+        global-best-band scan); None when that band is empty here."""
+        bands = self._bands
+        if not 0 <= band < len(bands) or not bands[band]:
+            return None
+        try:
+            item = bands[band].popleft()
+        except IndexError:
+            return None
+        if self._counts is not None:
+            self._counts[band] -= 1
+        self.stolen += 1
+        return item
 
     def pop(self) -> Optional[T]:
         """Owner side: highest priority band first, then the normal
@@ -133,13 +172,16 @@ class StealDeque(Generic[T]):
         pre-checks keep the idle-spin path free of raised exceptions;
         the try/except still arbitrates the last-element pop+steal
         race."""
-        for b in reversed(self._bands):
+        for i in range(len(self._bands) - 1, -1, -1):
+            b = self._bands[i]
             if not b:
                 continue
             try:
                 item = b.pop()
             except IndexError:
                 continue
+            if self._counts is not None:
+                self._counts[i] -= 1
             self.popped += 1
             return item
         if not self._q:
@@ -155,13 +197,16 @@ class StealDeque(Generic[T]):
         """Thief side: highest priority band first (critical work is
         globally urgent), then the normal lane's oldest task (FIFO — the
         breadth-first end); FIFO within each band."""
-        for b in reversed(self._bands):
+        for i in range(len(self._bands) - 1, -1, -1):
+            b = self._bands[i]
             if not b:
                 continue
             try:
                 item = b.popleft()
             except IndexError:
                 continue
+            if self._counts is not None:
+                self._counts[i] -= 1
             self.stolen += 1
             return item
         if not self._q:

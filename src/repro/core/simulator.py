@@ -54,6 +54,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from .ddast import DDASTParams
 from .engine import (SimCharger, make_placement, make_policy,
                      mode_needs_manager_thread, mode_uses_shards)
+from .scopes import (FairAdmission, ScopedPolicy, scope_rollup,
+                     scoped_deps)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 # ---------------------------------------------------------------------------
@@ -125,6 +127,13 @@ class SimResult:
     iter_makespans_us: List[float] = field(default_factory=list)
     iter_lock_acq: List[int] = field(default_factory=list)
     iter_messages: List[int] = field(default_factory=list)
+    # Per-scope rollups when run_scopes(...) drove multiple tenant
+    # programs: scope name -> {tasks, weight, finish_us,
+    # iter_makespans_us, replay_iterations, replayed_tasks, admitted,
+    # admission_waits, max_queued}. Only per-scope-attributable
+    # quantities appear here — lock/message counters are runtime-wide
+    # (compare iterations=1 vs iterations=n runs to bound replay cost).
+    scopes: Dict[str, dict] = field(default_factory=dict)
 
     @property
     def speedup(self) -> float:
@@ -132,6 +141,30 @@ class SimResult:
 
 
 # ---------------------------------------------------------------------------
+
+
+class _SimProgram:
+    """One client program driven by the event loop: a spec graph
+    re-submitted ``iterations`` times with a root taskwait between
+    (``run()``: the single scope-less main program; ``run_scopes()``:
+    one per tenant, each on its own client core)."""
+
+    __slots__ = ("scope_id", "name", "specs", "iterations", "weight",
+                 "epoch", "marks", "finish_us", "serial_us", "tasks")
+
+    def __init__(self, scope_id: Optional[int], name: str,
+                 specs: List[SimTaskSpec], iterations: int,
+                 weight: float = 1.0) -> None:
+        self.scope_id = scope_id
+        self.name = name
+        self.specs = specs
+        self.iterations = iterations
+        self.weight = weight
+        self.epoch = 0
+        self.marks: List[Tuple[float, int, int]] = []
+        self.finish_us = 0.0
+        self.serial_us = 0.0
+        self.tasks = 0
 
 
 class RuntimeSimulator:
@@ -182,38 +215,106 @@ class RuntimeSimulator:
         the shape record-and-replay (``replay=True``) exploits."""
         if iterations < 1:
             raise ValueError("iterations must be >= 1")
-        P, costs = self.P, self.costs
-        charge = SimCharger(costs)
-        placement = make_placement(
-            self.placement_kind, P,
-            num_shards=(self.num_shards or P)
+        charge = SimCharger(self.costs)
+        placement = self._make_placement()
+        policy = self._make_policy(placement, charge, replay=self.replay)
+        prog = _SimProgram(None, "main", list(specs), iterations)
+        return self._drive([prog], charge, placement, policy)
+
+    def run_scopes(self, scope_specs: Sequence[List[SimTaskSpec]],
+                   weights: Optional[Sequence[float]] = None,
+                   max_inflight: Optional[Sequence[Optional[int]]] = None,
+                   iterations: int = 1,
+                   names: Optional[Sequence[str]] = None) -> SimResult:
+        """Multi-tenant event loop: one virtual *client core* per entry
+        of ``scope_specs`` runs that scope's program (create the graph,
+        taskwait — working as a normal worker while blocked — then
+        re-submit ``iterations`` times), mirroring ``TaskRuntime``
+        client threads with ``open_scope``. The same scope layers run
+        underneath: the region-keying shim, one replay slot per scope
+        (``replay=True``), and weighted-deficit-round-robin admission
+        (``weights``, per-scope ``max_inflight``). Per-scope rollups
+        land in ``SimResult.scopes``."""
+        S = len(scope_specs)
+        if S < 1:
+            raise ValueError("run_scopes needs at least one scope")
+        if iterations < 1:
+            raise ValueError("iterations must be >= 1")
+        P = self.P
+        if S > P:
+            raise ValueError(f"{S} scopes need at least {S} cores")
+        if mode_needs_manager_thread(self.mode) and S > P - 1:
+            raise ValueError("dast reserves the last core for the "
+                             "manager: need num_cores > num_scopes")
+        weights = list(weights) if weights is not None else [1.0] * S
+        caps = list(max_inflight) if max_inflight is not None \
+            else [None] * S
+        names = list(names) if names is not None \
+            else [f"scope{i}" for i in range(S)]
+        if not (len(weights) == len(caps) == len(names) == S):
+            raise ValueError("weights/max_inflight/names length mismatch")
+        charge = SimCharger(self.costs)
+        placement = FairAdmission(self._make_placement())
+        # the scope multiplexer owns the replay wrapping (one recording
+        # slot per scope), so the base policy stays live
+        policy = ScopedPolicy(self._make_policy(placement, charge,
+                                                replay=False),
+                              replay=self.replay)
+        programs = []
+        for i in range(S):
+            sid = i + 1
+            policy.register_scope(sid)
+            placement.register_scope(sid, weights[i], caps[i])
+            programs.append(_SimProgram(sid, names[i],
+                                        list(scope_specs[i]), iterations,
+                                        weight=weights[i]))
+        return self._drive(programs, charge, placement, policy)
+
+    def _make_placement(self):
+        return make_placement(
+            self.placement_kind, self.P,
+            num_shards=(self.num_shards or self.P)
             if mode_uses_shards(self.mode) else None)
-        policy = make_policy(
-            self.mode, P,
-            num_workers=P,
+
+    def _make_policy(self, placement, charge: SimCharger, replay: bool):
+        return make_policy(
+            self.mode, self.P,
+            num_workers=self.P,
             params=self.params,
             placement=placement,
             charge=charge,
             main_slot=0,
-            num_shards=self.num_shards or P,
+            num_shards=self.num_shards or self.P,
             batch_size=self.batch_size,
-            replay=self.replay)
+            replay=replay)
+
+    # -- the event loop (shared by run and run_scopes) ------------------
+    def _drive(self, programs: List["_SimProgram"], charge: SimCharger,
+               placement, policy) -> SimResult:
+        P, costs = self.P, self.costs
         mgr_core = P - 1 if policy.needs_manager_thread else -1
 
-        root = WorkDescriptor(func=None, label="sim-main")
-        root.state = TaskState.RUNNING
+        roots: Dict[int, WorkDescriptor] = {}
+        for core, prog in enumerate(programs):
+            root = WorkDescriptor(func=None, label=f"sim-{prog.name}",
+                                  scope=prog.scope_id)
+            root.state = TaskState.RUNNING
+            roots[core] = root
 
         serial_us = 0.0
         total_tasks = 0
-        stack_count = [list(specs)]
-        while stack_count:
-            for s in stack_count.pop():
-                serial_us += s.dur
-                total_tasks += 1
-                if s.children:
-                    stack_count.append(s.children)
-        serial_us *= iterations
-        total_tasks *= iterations
+        for prog in programs:
+            stack_count = [list(prog.specs)]
+            while stack_count:
+                for s in stack_count.pop():
+                    prog.serial_us += s.dur
+                    prog.tasks += 1
+                    if s.children:
+                        stack_count.append(s.children)
+            prog.serial_us *= prog.iterations
+            prog.tasks *= prog.iterations
+            serial_us += prog.serial_us
+            total_tasks += prog.tasks
 
         trace: List[Tuple[float, int, int]] = []
         exec_order: List[str] = []
@@ -245,27 +346,36 @@ class RuntimeSimulator:
                               placement.ready_count()))
 
         # progs[core] = stack of creation frames [specs, idx, parent_wd];
-        # parent_wd is None for the top-level (root) program frame.
+        # parent_wd is None for a top-level (program-root) frame. Program
+        # p runs on client core p (run(): the single program on core 0).
         progs: Dict[int, List[List[Any]]] = {i: [] for i in range(P)}
-        progs[0].append([list(specs), 0, None])
+        for core, prog in enumerate(programs):
+            progs[core].append([list(prog.specs), 0, None])
 
         # iteration (epoch) bookkeeping: cumulative snapshots taken at
-        # each root quiescence, turned into per-iteration deltas below
-        epoch = [0]
-        iter_marks: List[Tuple[float, int, int]] = []
+        # each program-root quiescence, turned into per-iteration deltas
+        # below (per program — each tenant has its own epoch loop)
+        done = [0]
 
         def finish_epoch(core: int) -> None:
+            prog = programs[core]
             t = max(makespan[0], charge.now)
-            policy.notify_quiescent(True)
-            iter_marks.append((t, charge.lock_acquisitions(),
+            policy.notify_quiescent(True, scope_id=prog.scope_id)
+            prog.marks.append((t, charge.lock_acquisitions(),
                                policy.stats()["messages_processed"]))
-            epoch[0] += 1
-            if epoch[0] < iterations:
-                progs[core].append([list(specs), 0, None])
+            prog.epoch += 1
+            if prog.epoch < prog.iterations:
+                progs[core].append([list(prog.specs), 0, None])
                 schedule(charge.now, core)
-            else:
+                return
+            prog.finish_us = t
+            done[0] += 1
+            if done[0] == len(programs):
                 finished[0] = True
                 makespan[0] = t
+            else:
+                # this client core keeps working for the other tenants
+                schedule(charge.now, core)
 
         def run_worker(core: int) -> bool:
             """Pop + start one ready task on `core` at charge.now.
@@ -309,9 +419,15 @@ class RuntimeSimulator:
                     spec = specs_[idx]
                     frame[1] += 1
                     charge.create()
+                    parent_wd = parent if parent is not None \
+                        else roots[core]
+                    # the scopes keying shim: a tenant's regions are
+                    # scope-qualified exactly as on the real runtime
                     wd = WorkDescriptor(
-                        func=None, deps=tuple(spec.deps), label=spec.label,
-                        parent=parent if parent is not None else root)
+                        func=None,
+                        deps=tuple(scoped_deps(parent_wd.scope,
+                                               spec.deps)),
+                        label=spec.label, parent=parent_wd)
                     wd.duration = spec.dur
                     wd.sim_children = spec.children
                     policy.submit(wd, core)
@@ -321,8 +437,13 @@ class RuntimeSimulator:
                     return
                 # taskwait phase of this frame
                 policy.flush(core)
-                waiter = parent if parent is not None else root
-                if waiter.num_children_alive == 0 and not policy.pending():
+                waiter = parent if parent is not None else roots[core]
+                # scoped waiters gate on their own subtree only (see
+                # TaskRuntime._taskwait_on): children are counted from
+                # creation, so children == 0 implies none of the
+                # scope's submits are still queued anywhere
+                if waiter.num_children_alive == 0 and \
+                        (waiter.scope is not None or not policy.pending()):
                     stack.pop()
                     if parent is not None:  # nested parent completes
                         policy.notify_quiescent(False)
@@ -370,13 +491,37 @@ class RuntimeSimulator:
                 raise RuntimeError("simulator exceeded event budget")
 
         st = policy.stats()
-        iter_mk, iter_la, iter_msg = [], [], []
-        prev = (0.0, 0, 0)
-        for mark in iter_marks:
-            iter_mk.append(mark[0] - prev[0])
-            iter_la.append(mark[1] - prev[1])
-            iter_msg.append(mark[2] - prev[2])
-            prev = mark
+
+        def _deltas(marks):
+            mk, la, msg = [], [], []
+            prev = (0.0, 0, 0)
+            for mark in marks:
+                mk.append(mark[0] - prev[0])
+                la.append(mark[1] - prev[1])
+                msg.append(mark[2] - prev[2])
+                prev = mark
+            return mk, la, msg
+
+        # the flat iter_* lists keep their single-program meaning; with
+        # several tenants the boundaries interleave, so per-scope lists
+        # live in the rollups instead
+        iter_mk, iter_la, iter_msg = _deltas(
+            programs[0].marks if len(programs) == 1 else [])
+        scopes: Dict[str, dict] = {}
+        if len(programs) > 1 or programs[0].scope_id is not None:
+            for prog in programs:
+                mk, _, _ = _deltas(prog.marks)
+                # lock/message counters are runtime-wide, so deltas at
+                # one scope's boundaries would silently include every
+                # OTHER tenant's activity — per-scope rollups carry only
+                # quantities attributable to the scope (verify replay
+                # cost globally via iterations=1 vs iterations=n runs)
+                entry = {"tasks": prog.tasks, "weight": prog.weight,
+                         "finish_us": prog.finish_us,
+                         "iter_makespans_us": mk}
+                entry.update(scope_rollup(placement, policy,
+                                          prog.scope_id))
+                scopes[prog.name] = entry
         return SimResult(
             makespan_us=max(makespan[0], charge.max_free_at()),
             serial_us=serial_us,
@@ -388,8 +533,9 @@ class RuntimeSimulator:
             total_edges=st["total_edges"],
             trace=trace,
             exec_order=exec_order,
-            iterations=iterations,
+            iterations=max(p.iterations for p in programs),
             iter_makespans_us=iter_mk,
             iter_lock_acq=iter_la,
             iter_messages=iter_msg,
+            scopes=scopes,
         )

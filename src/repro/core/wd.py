@@ -59,6 +59,11 @@ class WorkDescriptor:
     # driver — feeds the replay scheduler's per-task cost EMA (the
     # simulator uses `duration` for the same purpose).
     exec_dur: Optional[float] = None
+    # Multi-tenant job-scope id (core.scopes): None outside any scope;
+    # inherited from the parent at creation so every descendant of a
+    # scope root routes through that scope's policy slot and admission
+    # ring without per-submit lookups.
+    scope: Optional[int] = None
 
     wd_id: int = field(default_factory=lambda: next(_wd_ids))
     state: TaskState = TaskState.CREATED
@@ -89,6 +94,8 @@ class WorkDescriptor:
 
     def __post_init__(self) -> None:
         if self.parent is not None:
+            if self.scope is None:
+                self.scope = self.parent.scope
             with self.parent._children_lock:
                 self.parent.num_children_alive += 1
 

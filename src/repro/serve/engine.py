@@ -11,13 +11,25 @@ advances ALL active slots by one token with a single batched
 `decode_step` (prompt tokens are teacher-forced through the decode path;
 generated tokens continue it). Slots free as requests finish => true
 continuous batching with per-slot positions.
+
+With ``runtime=`` (a multi-tenant ``TaskRuntime(num_clients>=1)``) each
+client queue becomes a :class:`~repro.core.scopes.JobScope` on the REAL
+runtime instead of the engine's private drain loop: every drained
+request is submitted as a scope task chained per client (region
+``("reqchain",)`` INOUT under the scope's namespace — client FIFO for
+free), the scopes' weighted-fair admission layer decides which client's
+requests reach the admission buffer first, and per-client
+``max_inflight`` backpressure bounds a flooding client's presence in
+the shared pool. Request ids are per-engine (stamped at submit), so two
+engines number their requests independently.
 """
 from __future__ import annotations
 
 import itertools
 import threading
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,14 +40,14 @@ from ..core.queues import WorkerQueues
 from ..core.sched import DagNode, bottom_levels, build_arrays
 from ..models.registry import ModelAPI
 
-_req_ids = itertools.count()
-
 
 @dataclass
 class Request:
     prompt: List[int]
     max_new_tokens: int = 16
-    req_id: int = field(default_factory=lambda: next(_req_ids))
+    # stamped by the owning engine at submit time (per-engine counter —
+    # a module-global here would leak numbering across engines/tests)
+    req_id: Optional[int] = None
     output: List[int] = field(default_factory=list)
     done_event: threading.Event = field(default_factory=threading.Event)
     admitted_step: int = -1
@@ -56,7 +68,11 @@ class _Slot:
 class ServeEngine:
     def __init__(self, model: ModelAPI, params: Any, *, batch_slots: int = 4,
                  max_len: int = 256, num_clients: int = 4,
-                 ddast: Optional[DDASTParams] = None, eos_id: int = -1):
+                 ddast: Optional[DDASTParams] = None, eos_id: int = -1,
+                 runtime: Any = None,
+                 client_weights: Optional[Sequence[float]] = None,
+                 client_max_inflight: Optional[Sequence[Optional[int]]]
+                 = None):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -64,6 +80,24 @@ class ServeEngine:
         self.eos_id = eos_id
         self.ddast = ddast or DDASTParams()
         self.client_queues = [WorkerQueues(i) for i in range(num_clients)]
+        self._req_ids = itertools.count()
+        # runtime-backed request layer: one JobScope per client queue
+        self.runtime = runtime
+        self._scopes: List[Any] = []
+        self._admitq: deque = deque()   # GIL-atomic: filled by scope
+        #   task bodies on worker threads, drained by the engine step
+        if runtime is not None:
+            ws = (list(client_weights) if client_weights is not None
+                  else [1.0] * num_clients)
+            caps = (list(client_max_inflight)
+                    if client_max_inflight is not None
+                    else [None] * num_clients)
+            if len(ws) != num_clients or len(caps) != num_clients:
+                raise ValueError("client_weights/client_max_inflight "
+                                 "must have num_clients entries")
+            for c in range(num_clients):
+                self._scopes.append(runtime.open_scope(
+                    f"client{c}", weight=ws[c], max_inflight=caps[c]))
         self.slots = [_Slot() for _ in range(self.B)]
         self.cache = model.init_cache(self.B, max_len)
         self._tokens = np.zeros((self.B,), np.int32)
@@ -78,6 +112,8 @@ class ServeEngine:
     def submit(self, req: Request, client_id: int = 0) -> Request:
         """Lock-free from the caller's perspective: single-producer push
         into the client's own queue (the Submit Task Message analogue)."""
+        if req.req_id is None:
+            req.req_id = next(self._req_ids)
         self.client_queues[client_id].submit.push(req)
         return req
 
@@ -85,13 +121,68 @@ class ServeEngine:
     def _free_slots(self) -> int:
         return sum(1 for s in self.slots if s.free)
 
+    def _pump_to_scopes(self) -> None:
+        """Runtime-backed request layer: move drained client-queue
+        entries onto the REAL runtime as per-client scope tasks. The
+        per-client ``("reqchain",) INOUT`` chain (scope-qualified by the
+        keying shim, so clients never alias) keeps each client FIFO;
+        WHICH client's chain advances first is the scope layer's
+        weighted-fair admission, replacing the engine's private
+        round-robin. Task bodies append to the GIL-atomic admission
+        buffer the engine step admits from.
+
+        The pumping thread first claims its own runtime submit slot:
+        scope submissions ride per-thread SPSC queues, so a serving
+        thread that differs from the engine's constructing thread must
+        not share the main slot with a concurrently-submitting main
+        thread (size ``num_clients`` one larger when stepping from a
+        dedicated thread)."""
+        self.runtime._ensure_client_slot()
+        for cid, q in enumerate(self.client_queues):
+            if not q.acquire_submit():
+                continue
+            try:
+                while True:
+                    req = q.submit.pop()
+                    if req is None:
+                        break
+                    self._scopes[cid].task(
+                        self._admitq.append, req,
+                        deps=[(("reqchain",), "inout")],
+                        label=f"req{req.req_id}")
+                    self.stats["drained_msgs"] += 1
+            finally:
+                q.release_submit()
+
+    def scope_admission(self) -> Dict[str, dict]:
+        """Per-client fairness counters from the runtime's admission
+        layer (runtime-backed engines only)."""
+        return {sc.name:
+                self.runtime.placement.scope_admission(sc.scope_id)
+                for sc in self._scopes}
+
     def _admit_requests(self) -> None:
         """DDAST callback port: round-robin client queues, up to
         MAX_OPS_THREAD per queue, early-exit once MIN_READY slots filled
         (ready tasks == occupied slots waiting to run). Each drain pass
         admits its batch longest-remaining-chain first (the scheduling
         subsystem's bottom levels over the request DAG) so a long
-        request starts decoding before short ones fill the slots."""
+        request starts decoding before short ones fill the slots.
+
+        Runtime-backed engines skip the private drain discipline: the
+        scope layer already ordered requests into the admission buffer;
+        this just fills free slots from it."""
+        if self.runtime is not None:
+            self._pump_to_scopes()
+            batch: List[Request] = []
+            while self._free_slots() - len(batch) > 0:
+                try:
+                    batch.append(self._admitq.popleft())
+                except IndexError:
+                    break
+            for req in self._admission_order(batch):
+                self._admit(req)
+            return
         p = self.ddast
         self.stats["callback_passes"] += 1
         spins = max(p.max_spins, 1)
@@ -197,12 +288,21 @@ class ServeEngine:
             self._pos[i] = slot.pos
         return len(active)
 
+    def _backlog(self) -> int:
+        """Requests not yet in a batch slot: client queues, plus (when
+        runtime-backed) in-flight scope tasks and the admission buffer."""
+        n = sum(len(q.submit) for q in self.client_queues)
+        n += len(self._admitq)
+        for sc in self._scopes:
+            n += sc.root.num_children_alive
+        return n
+
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         idle = 0
         for _ in range(max_steps):
             n = self.step()
             if n == 0:
-                if all(len(q.submit) == 0 for q in self.client_queues):
+                if self._backlog() == 0:
                     idle += 1
                     if idle > 2:
                         return

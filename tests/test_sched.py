@@ -485,6 +485,52 @@ def test_shard_affine_load_cap_inactive_when_balanced():
 # ===================================================================
 # back-compat import surfaces
 # ===================================================================
+# -------------------------------------------------- global priority pop
+def test_global_priority_pop_inverted_per_deque_order():
+    """Regression (PR-4 follow-up): per-deque order inverts the global
+    order — slot 0's own deque holds only a LOW band task while a HIGH
+    band task sits in slot 1's deque. With per-deque banding pop(0)
+    would start the low task; the band-indexed global counters must
+    steer it to steal the high task first."""
+    pl = CriticalPathPlacement(2)
+    pl.set_replay_priorities([1.0, 5.0])        # sid0 band0, sid1 band1
+    lo = WorkDescriptor(func=None, label="lo")
+    hi = WorkDescriptor(func=None, label="hi")
+    pl.deques[0].push_priority(lo, 0)
+    pl.deques[1].push_priority(hi, 1)
+    assert pl.pop(0) is hi                       # global best band wins
+    assert pl.global_band_steals == 1
+    assert pl.pop(0) is lo
+    assert pl.pop(0) is None
+
+
+def test_global_priority_pop_prefers_own_deque_on_equal_band():
+    pl = CriticalPathPlacement(2)
+    pl.set_replay_priorities([5.0, 5.0])
+    own = WorkDescriptor(func=None, label="own")
+    other = WorkDescriptor(func=None, label="other")
+    pl.deques[0].push_priority(own, 0)
+    pl.deques[1].push_priority(other, 0)
+    assert pl.pop(0) is own                      # no pointless steal
+    assert pl.global_band_steals == 0
+
+
+def test_global_band_counters_are_resilient_hints():
+    """A stale counter (drifted by a benign race) must cost at most a
+    wasted scan — never strand or lose a task."""
+    pl = CriticalPathPlacement(2)
+    pl.set_replay_priorities([1.0, 5.0])
+    lo = WorkDescriptor(func=None, label="lo")
+    pl.deques[0].push_priority(lo, 0)
+    pl._band_counts[1] += 3                      # phantom high band
+    assert pl.pop(0) is lo                       # falls through cleanly
+    pl._band_counts[0] -= 5                      # phantom emptiness
+    hi = WorkDescriptor(func=None, label="hi")
+    pl.deques[1].push_priority(hi, 1)
+    assert pl.pop(0) is hi
+    assert pl.pop(1) is None
+
+
 def test_backcompat_engine_placement_imports():
     from repro.core.engine.placement import (CriticalPathPlacement as C2,
                                              PlacementPolicy,
