@@ -1,13 +1,70 @@
-"""Figs 12-14 reproduction: the evolution of in-graph / ready task counts.
-Nanos++ shows a 'pyramid' (every created task sits in the graph); DDAST a
-flat 'roof' (tasks wait in the manager queues; the graph holds only what
-is needed to discover parallelism)."""
+"""Figs 12-14 reproduction + tracing-overhead gate.
+
+Two sections:
+
+  * **pyramid vs roof** — the evolution of in-graph / ready task counts
+    across all four dependence policies on the paper's matmul and
+    sparse-LU graphs. Nanos++/sync shows a 'pyramid' (every created
+    task sits in the graph); the managed policies a flat 'roof' (tasks
+    wait in the manager queues; the graph holds only what is needed to
+    discover parallelism).
+  * **tracing overhead** — the same graph simulated with ``trace=False``
+    and ``trace=True``; every per-task event stamp is priced in virtual
+    time (``SimCosts.trace_event``), so the makespan delta is the
+    honest cost of the observability layer, not zero by construction.
+
+Standalone:
+
+    PYTHONPATH=src python benchmarks/bench_traces.py            # full sweep
+    PYTHONPATH=src python benchmarks/bench_traces.py --smoke    # CI
+    ... [--out BENCH_traces.json]
+
+or as a suite inside ``python -m benchmarks.run --only traces``.
+
+Exit status doubles as the CI gate, on the 16-core nb=16 matmul
+(the acceptance workload): non-zero when (a) the sync pyramid stops
+towering over the ddast roof (peak in-graph ratio <= 2), or (b) traced
+makespan exceeds untraced by more than ``GATE['overhead_pct_max']`` %.
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
 
 import numpy as np
 
-from repro.core import RuntimeSimulator
-from repro.core.taskgraph_apps import sim_matmul_specs, sim_sparselu_specs
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import RuntimeSimulator  # noqa: E402
+from repro.core.taskgraph_apps import (sim_matmul_specs,  # noqa: E402
+                                       sim_sparselu_specs)
+from repro.core.trace import detect_all  # noqa: E402
+
+# The gate workload is fixed by the acceptance criterion: nb=16 matmul
+# (400 us bodies) on 16 simulated cores — identical in smoke and full.
+GATE = {"app": "matmul_fg", "nb": 16, "dur_us": 400.0, "cores": 16,
+        "mode": "ddast", "overhead_pct_max": 5.0,
+        # sync keeps the whole graph live; ddast's sustained (mean)
+        # in-graph level must sit well below it — the paper's roof
+        "pyramid_ratio_min": 1.5}
+
+MODES = ("sync", "dast", "ddast", "sharded")
+
+FULL = {"matmul_nb": 16, "sparselu_nb": 14, "modes": MODES}
+SMOKE = {"matmul_nb": 10, "sparselu_nb": 8, "modes": MODES}
+
+
+def _apps(cfg: dict):
+    return (
+        ("matmul_fg", lambda: sim_matmul_specs(cfg["matmul_nb"],
+                                               dur_us=400.0)),
+        ("sparselu", lambda: sim_sparselu_specs(
+            cfg["sparselu_nb"], dur_lu0=400, dur_fwd=320, dur_bdiv=320,
+            dur_bmod=350)),
+    )
 
 
 def trace_stats(trace, makespan):
@@ -23,22 +80,143 @@ def trace_stats(trace, makespan):
             "peak_ready": int(rd.max())}
 
 
-def run(csv_rows: list) -> None:
-    for name, factory in (
-            ("matmul_fg", lambda: sim_matmul_specs(16, dur_us=400.0)),
-            ("sparselu", lambda: sim_sparselu_specs(
-                14, dur_lu0=400, dur_fwd=320, dur_bdiv=320, dur_bmod=350))):
-        stats = {}
+def _pyramid_record(name: str, specs, mode: str, nb: int) -> dict:
+    r = RuntimeSimulator(num_cores=16, mode=mode, trace=True).run(specs)
+    st = trace_stats(r.trace, r.makespan_us)
+    findings = detect_all(r.events)
+    return {
+        "app": name, "mode": mode, "nb": nb, "tasks": r.tasks,
+        "makespan_us": round(r.makespan_us, 1),
+        "events": len(r.events),
+        "trace_dropped": r.trace_dropped,
+        "steals": int(sum(r.worker_steals)),
+        "findings": [f.kind for f in findings],
+        **st,
+    }
+
+
+def pyramid_sweep(cfg: dict) -> list:
+    """All four policies on both apps: legacy (t, in_graph, ready)
+    samples plus the per-task event timeline's bulk counters."""
+    records = []
+    for name, factory in _apps(cfg):
+        nb = cfg["matmul_nb" if name == "matmul_fg" else "sparselu_nb"]
+        for mode in cfg["modes"]:
+            records.append(_pyramid_record(name, factory(), mode, nb))
+    # the pyramid gate compares sync vs ddast at the acceptance scale
+    # regardless of the sweep config (smoke sweeps a smaller nb)
+    if cfg["matmul_nb"] != GATE["nb"]:
         for mode in ("sync", "ddast"):
-            r = RuntimeSimulator(num_cores=16, mode=mode, trace=True).run(
-                factory())
-            stats[mode] = trace_stats(r.trace, r.makespan_us)
-            csv_rows.append((
-                f"traces.{name}.{mode}.peak_in_graph",
-                stats[mode]["peak_in_graph"],
-                f"mean={stats[mode]['mean_in_graph']:.0f} "
-                f"peak_ready={stats[mode]['peak_ready']}"))
-        ratio = stats["sync"]["peak_in_graph"] / \
-            max(stats["ddast"]["peak_in_graph"], 1)
-        csv_rows.append((f"traces.{name}.pyramid_vs_roof_ratio", ratio,
+            records.append(_pyramid_record(
+                "matmul_fg",
+                sim_matmul_specs(GATE["nb"], dur_us=GATE["dur_us"]),
+                mode, GATE["nb"]))
+    return records
+
+
+def overhead_case(cores: int, nb: int, dur_us: float, mode: str) -> dict:
+    """Same graph, traced vs untraced; the pct delta is the gate."""
+    specs = sim_matmul_specs(nb, dur_us=dur_us)
+    base = RuntimeSimulator(cores, mode).run(specs)
+    traced = RuntimeSimulator(cores, mode, trace=True).run(specs)
+    pct = (traced.makespan_us / base.makespan_us - 1.0) * 100.0
+    return {
+        "app": "matmul_fg", "nb": nb, "cores": cores, "mode": mode,
+        "untraced_makespan_us": round(base.makespan_us, 1),
+        "traced_makespan_us": round(traced.makespan_us, 1),
+        "traced_events": len(traced.events),
+        "overhead_pct": round(pct, 3),
+    }
+
+
+def acceptance(pyramid: list, overhead: dict) -> dict:
+    """The CI gates on the nb=16 matmul @ 16 cores workload."""
+    out = {"overhead_pct": overhead["overhead_pct"],
+           "overhead_pct_max": GATE["overhead_pct_max"],
+           "overhead_ok": overhead["overhead_pct"]
+           <= GATE["overhead_pct_max"]}
+    means = {r["mode"]: r["mean_in_graph"] for r in pyramid
+             if r["app"] == "matmul_fg" and r["nb"] == GATE["nb"]}
+    out["checked"] = "sync" in means and "ddast" in means
+    if out["checked"]:
+        ratio = means["sync"] / max(means["ddast"], 1.0)
+        out["pyramid_vs_roof_ratio"] = round(ratio, 2)
+        out["pyramid_ok"] = ratio > GATE["pyramid_ratio_min"]
+    return out
+
+
+def collect(smoke: bool) -> dict:
+    cfg = SMOKE if smoke else FULL
+    t0 = time.time()
+    pyramid = pyramid_sweep(cfg)
+    # the gate overhead case runs at the acceptance scale regardless of
+    # the sweep config (the smoke pyramid runs a smaller nb for speed)
+    overhead = overhead_case(GATE["cores"], GATE["nb"], GATE["dur_us"],
+                             GATE["mode"])
+    return {
+        "bench": "traces",
+        "smoke": smoke,
+        "pyramid": pyramid,
+        "overhead": overhead,
+        "acceptance": acceptance(pyramid, overhead),
+        "bench_wall_s": round(time.time() - t0, 2),
+    }
+
+
+def run(csv_rows: list) -> None:
+    """benchmarks.run suite entry point."""
+    out = collect(smoke=True)
+    stats: dict = {}
+    for r in out["pyramid"]:
+        stats.setdefault((r["app"], r["nb"]), {})[r["mode"]] = r
+        csv_rows.append((
+            f"traces.{r['app']}.nb{r['nb']}.{r['mode']}.peak_in_graph",
+            r["peak_in_graph"],
+            f"mean={r['mean_in_graph']:.0f} "
+            f"peak_ready={r['peak_ready']} events={r['events']}"))
+    for (app, nb), per_mode in stats.items():
+        if "sync" not in per_mode or "ddast" not in per_mode:
+            continue
+        ratio = per_mode["sync"]["peak_in_graph"] / \
+            max(per_mode["ddast"]["peak_in_graph"], 1)
+        csv_rows.append((f"traces.{app}.nb{nb}.pyramid_vs_roof_ratio",
+                         ratio,
                          "paper fig12/14: sync pyramid >> ddast roof"))
+    ov = out["overhead"]
+    csv_rows.append(("traces.overhead.traced_vs_untraced_pct",
+                     ov["overhead_pct"],
+                     f"gate<={GATE['overhead_pct_max']}% on "
+                     f"{ov['cores']}-core nb{ov['nb']} matmul"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small pyramid sweep, same gate workload (CI)")
+    ap.add_argument("--out", default="BENCH_traces.json",
+                    help="JSON output path")
+    args = ap.parse_args()
+    out = collect(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    acc = out["acceptance"]
+    print(f"wrote {args.out} ({len(out['pyramid'])} pyramid records, "
+          f"{out['bench_wall_s']}s)")
+    failed = False
+    if acc.get("checked"):
+        print(f"matmul pyramid/roof ratio "
+              f"{acc['pyramid_vs_roof_ratio']} (min "
+              f"{GATE['pyramid_ratio_min']}) -> "
+              f"{'OK' if acc['pyramid_ok'] else 'REGRESSION'}")
+        failed |= not acc["pyramid_ok"]
+    print(f"tracing overhead {acc['overhead_pct']}% of makespan on "
+          f"{GATE['cores']}-core nb{GATE['nb']} matmul (max "
+          f"{acc['overhead_pct_max']}%) -> "
+          f"{'OK' if acc['overhead_ok'] else 'REGRESSION'}")
+    failed |= not acc["overhead_ok"]
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,8 @@ from .shards import (AtomicCounter, GraphShard, ShardMailbox, ShardRouter,
                      ShardedDependenceGraph, StealDeque, stable_region_hash)
 from .simulator import RuntimeSimulator, SimCosts, SimResult, SimTaskSpec
 from .static_sched import DagNode, ddast_schedule, overlap_collectives
+from .trace import (Finding, TraceEvent, TraceRecorder, detect_all,
+                    load_trace, save_trace)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 __all__ = [
@@ -48,5 +50,7 @@ __all__ = [
     "ShardedDependenceGraph", "StealDeque", "stable_region_hash",
     "RuntimeSimulator", "SimCosts", "SimResult", "SimTaskSpec",
     "DagNode", "ddast_schedule", "overlap_collectives",
+    "Finding", "TraceEvent", "TraceRecorder", "detect_all",
+    "load_trace", "save_trace",
     "DepMode", "TaskState", "WorkDescriptor",
 ]

@@ -21,6 +21,16 @@ consecutive direction flips mean the optimum is bracketed and the
 controller settles — the same bounded-hysteresis discipline as the
 manager-thread loop, so it cannot oscillate.
 
+With tracing on (``trace=True``), the tuner additionally closes the
+observability loop: a quiescence hook runs the detrimental-pattern
+detectors (``core.trace.detect``) over the events recorded since the
+last boundary and folds their verdicts into the control decisions —
+persistent ready-queue starvation votes for a wider manager pool and
+un-settles the shard hill-climb so it re-brackets under the observed
+load. Detection runs only at quiescence (never on the task hot path)
+and only over the event delta, so its cost scales with traffic, not
+with run length.
+
 All adjustments are bounded and hysteretic; the tuned static defaults
 remain the fixed point under calm load.
 """
@@ -47,6 +57,9 @@ class TunerConfig:
     shard_min_messages: int = 64    # min msgs between shard adjustments
     shard_improve_eps: float = 0.05  # relative improvement to keep going
     shard_cap: Optional[int] = None  # default: max(64, 4 * num_workers)
+    # -- trace-detector feedback (runtimes built with trace=True) -------
+    trace_feedback: bool = True
+    trace_starve_votes: int = 2     # starvation verdicts before acting
 
 
 class DynamicTuner:
@@ -75,6 +88,15 @@ class DynamicTuner:
         if cfg.tune_shards and hasattr(runtime.policy, "resize"):
             runtime.dispatcher.register_quiescent(
                 "shard-autotune", self.quiescent_callback, priority=0)
+        # -- trace-detector feedback state ------------------------------
+        self.trace_verdicts: List = []   # every Finding the hook saw
+        self.trace_actions: List[Tuple[float, str]] = []
+        self._starve_votes = 0
+        self._trace_seen = 0             # total_appended at last sweep
+        if cfg.trace_feedback and getattr(runtime.tracer, "enabled",
+                                          False):
+            runtime.dispatcher.register_quiescent(
+                "trace-feedback", self.trace_callback, priority=1)
 
     # -- dispatcher callback --------------------------------------------
     def callback(self, worker_id: int) -> None:
@@ -169,3 +191,55 @@ class DynamicTuner:
     @property
     def shards_settled(self) -> bool:
         return self._shard_settled
+
+    # -- trace-detector feedback ----------------------------------------
+    def trace_callback(self, worker_id: int) -> None:
+        """Quiescence hook: sweep the detectors over the trace and fold
+        the verdicts in. Skipped when nothing new was recorded since
+        the last boundary (replayed iterations append only lifecycle +
+        quiesce events, so the probe stays cheap there too)."""
+        del worker_id
+        tracer = self.rt.tracer
+        appended = tracer.total_appended
+        if appended <= self._trace_seen:
+            return
+        self._trace_seen = appended
+        # deferred import: autotune must stay importable without trace
+        from .trace import detect_all
+        self.note_trace_verdicts(detect_all(tracer.events()))
+
+    def note_trace_verdicts(self, findings) -> bool:
+        """Fold detector verdicts into the control loops (split out so
+        tests can feed fabricated findings). Persistent ready-queue
+        starvation — ``cfg.trace_starve_votes`` sweeps that each saw at
+        least one starvation span — votes to widen the manager pool and
+        to un-settle the shard hill-climb so it re-brackets under the
+        load the detectors actually observed. Inversion/affinity
+        verdicts are recorded for reporting but drive no knob: the
+        former is a placement-band artifact, the latter is the load
+        balancer's deliberate trade. Returns True if a knob moved."""
+        from .trace import STARVATION
+        self.trace_verdicts.extend(findings)
+        if not any(f.kind == STARVATION for f in findings):
+            return False
+        self._starve_votes += 1
+        if self._starve_votes < self.cfg.trace_starve_votes:
+            return False
+        self._starve_votes = 0
+        now = time.perf_counter()
+        p = self.rt.params
+        mgr_cap = max(1, self.rt.num_workers // 2)
+        acted = False
+        if p.max_ddast_threads < mgr_cap:
+            p.max_ddast_threads += 1
+            self.adjustments.append((now, p.max_ddast_threads,
+                                     p.max_ops_thread))
+            self.trace_actions.append((now, "widen_managers"))
+            acted = True
+        if self._shard_settled:
+            self._shard_settled = False
+            self._shard_flips = 0
+            self._shard_prev_metric = None
+            self.trace_actions.append((now, "unsettle_shards"))
+            acted = True
+        return acted

@@ -81,6 +81,11 @@ class CostCharger:
         """The pop-side band scan while replay priorities are active —
         no lock."""
 
+    def trace_event(self) -> None:
+        """One tracing ring-buffer append (core.trace). Free on real
+        threads (the append IS the cost); priced in the simulator so
+        the traced-vs-untraced overhead gate measures something real."""
+
 
 class VirtualLock:
     """Serializes critical sections in virtual time (FIFO-handover
@@ -201,6 +206,11 @@ class SimCharger(CostCharger):
 
     def prio_pop(self) -> None:
         self.now += self.costs.prio_pop
+
+    # Tracing stamps are lock-free appends: local-time cost only, no
+    # VirtualLock, no pollution flag.
+    def trace_event(self) -> None:
+        self.now += self.costs.trace_event
 
     # -- result aggregation ---------------------------------------------
     def lock_wait_us(self) -> float:

@@ -43,6 +43,7 @@ from ..depgraph import DependenceGraph
 from ..messages import DoneTaskMessage, SubmitTaskMessage
 from ..queues import InstrumentedLock, WorkerQueues
 from ..shards import ShardRouter, ShardedDependenceGraph
+from ..trace import EV_DEPS, EV_MSG_DRAIN, EV_MSG_ENQ, NULL_TRACER
 from ..wd import WorkDescriptor
 from .charge import CostCharger
 from .placement import PlacementPolicy, RoundRobinPlacement
@@ -66,16 +67,20 @@ class DependencePolicy:
                  placement: Optional[PlacementPolicy] = None,
                  charge: Optional[CostCharger] = None,
                  manager_eligible: Optional[Set[int]] = None,
-                 main_slot: Optional[int] = None) -> None:
+                 main_slot: Optional[int] = None,
+                 tracer=None) -> None:
         self.num_slots = num_slots
         self.num_workers = num_workers if num_workers is not None \
             else num_slots
         self.params = params or DDASTParams()
         self.placement = placement or RoundRobinPlacement(num_slots)
         self.charge = charge or CostCharger()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # placements charge their priority-lane traffic through the same
         # adapter the policy uses (no-op on threads, priced in the sim)
+        # — and stamp their ready/steal events through the same tracer
         self.placement.charge = self.charge
+        self.placement.tracer = self.tracer
         # big.LITTLE support (paper §8): restrict which workers may become
         # manager threads (None = any). The main slot is always eligible
         # so taskwait drains.
@@ -169,6 +174,8 @@ class _GlobalGraphMixin:
         self.charge.submit_cs("graph", len(wd.deps))
         with self.graph_lock:
             ready = self._graph_for(wd.parent).submit(wd)
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_DEPS, wd, -1)
         if ready:
             self.placement.push(wd)
 
@@ -276,10 +283,16 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
     def submit(self, wd: WorkDescriptor, slot: int) -> None:
         self.charge.push()
         self.worker_queues[slot].submit.push(SubmitTaskMessage(wd))
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_MSG_ENQ, wd, slot,
+                                   data=("submit", slot, 1))
 
     def complete(self, wd: WorkDescriptor, slot: int) -> None:
         self.charge.push()
         self.worker_queues[slot].done.push(DoneTaskMessage(wd))
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_MSG_ENQ, wd, slot,
+                                   data=("done", slot, 1))
 
     # -- manager side ---------------------------------------------------
     def _drain_once(self, worker_id: int) -> int:
@@ -298,6 +311,10 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
                         if msg is None:
                             break
                         self.charge.message()
+                        if self.tracer.enabled:
+                            self.tracer.task_event(
+                                EV_MSG_DRAIN, msg.wd, -1,
+                                data=("submit", wq.worker_id, 1))
                         self._apply_submit(msg.wd)
                         cnt += 1
                 finally:
@@ -307,6 +324,9 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
                 if msg is None:
                     break
                 self.charge.message()
+                if self.tracer.enabled:
+                    self.tracer.task_event(EV_MSG_DRAIN, msg.wd, -1,
+                                           data=("done", wq.worker_id, 1))
                 self._apply_done(msg.wd)
                 cnt += 1
             total_cnt += cnt
@@ -326,6 +346,10 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
                             if msg is None:
                                 break
                             self.charge.message()
+                            if self.tracer.enabled:
+                                self.tracer.task_event(
+                                    EV_MSG_DRAIN, msg.wd, -1,
+                                    data=("submit", wq.worker_id, 1))
                             self._apply_submit(msg.wd)
                             n += 1
                             progress = True
@@ -336,6 +360,10 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
                     if msg is None:
                         break
                     self.charge.message()
+                    if self.tracer.enabled:
+                        self.tracer.task_event(
+                            EV_MSG_DRAIN, msg.wd, -1,
+                            data=("done", wq.worker_id, 1))
                     self._apply_done(msg.wd)
                     n += 1
                     progress = True
@@ -390,7 +418,8 @@ class ShardedPolicy(_ManagedPolicy):
         self.graph = ShardedDependenceGraph(num_shards)
         self.router = ShardRouter(self.graph,
                                   on_ready=self.placement.push,
-                                  charge=self.charge)
+                                  charge=self.charge,
+                                  tracer=self.tracer)
         # Per-slot submit + done buffers. The owning slot appends; flush
         # may additionally be invoked by OTHER threads (drain_all at
         # taskwait/shutdown edges), so each buffer's read-swap and the
@@ -550,7 +579,8 @@ class ShardedPolicy(_ManagedPolicy):
         self.graph = ShardedDependenceGraph(num_shards)
         self.router = ShardRouter(self.graph,
                                   on_ready=self.placement.push,
-                                  charge=self.charge)
+                                  charge=self.charge,
+                                  tracer=self.tracer)
         # shard-id-keyed affinity must follow the new partition function
         rekey = getattr(self.placement, "set_num_shards", None)
         if rekey is not None:

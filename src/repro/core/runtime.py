@@ -65,6 +65,8 @@ from .engine import make_placement, make_policy, mode_uses_shards
 from .queues import InstrumentedLock
 from .scopes import (FairAdmission, JobScope, ScopedPolicy, scope_rollup,
                      scoped_deps)
+from .trace import (EV_CREATED, EV_END, EV_START, NULL_TRACER,
+                    TraceEvent, TraceRecorder, replay_iterations_of)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 _MODES = ("sync", "dast", "ddast", "sharded")
@@ -91,6 +93,16 @@ class RuntimeStats:
     max_in_graph: int = 0
     total_edges: int = 0
     trace: List[Tuple[float, int, int]] = field(default_factory=list)  # (t, in_graph, ready)
+    # Per-task event timeline (core.trace; empty unless trace=True):
+    # merged, time-sorted TraceEvents from every slot's ring buffer,
+    # plus the count evicted by ring overflow.
+    events: List[TraceEvent] = field(default_factory=list)
+    trace_dropped: int = 0
+    # Placement counters surfaced per run: steals FROM each slot's
+    # deque, and shard-affine load-cap fallbacks (0 for placements
+    # without the cap).
+    worker_steals: List[int] = field(default_factory=list)
+    load_cap_skips: int = 0
     wall_s: float = 0.0
     # Per-shard breakdowns (empty outside the sharded policy).
     shard_lock_wait_s: List[float] = field(default_factory=list)
@@ -148,6 +160,12 @@ class TaskRuntime:
         # scopes) each own one more so the single-producer submit-queue
         # discipline (§3.1) survives concurrent tenants
         num_slots = num_workers + 1 + num_clients
+        # the event tracer must exist before the policy stack: the
+        # policy ctor wires it into the placement, the router, etc.
+        self._trace_t0 = time.perf_counter()
+        self.tracer = TraceRecorder(
+            num_slots, clock=lambda: time.perf_counter() - self._trace_t0,
+            time_unit="s") if trace else NULL_TRACER
         # shard-id affinity keying only makes sense over a shard
         # partition; other modes keep exact-region keying
         self.placement = make_placement(
@@ -167,7 +185,8 @@ class TaskRuntime:
             main_slot=num_workers,
             num_shards=self.num_shards,
             batch_size=batch_size,
-            replay=replay and num_clients == 0)
+            replay=replay and num_clients == 0,
+            tracer=self.tracer)
         if num_clients > 0:
             self.policy = ScopedPolicy(self.policy, replay=replay)
         self.dispatcher = FunctionalityDispatcher()
@@ -257,6 +276,12 @@ class TaskRuntime:
         self.stats.total_edges = st["total_edges"]
         self.stats.shard_messages = st["shard_messages"]
         self.stats.shard_lock_wait_s = st["shard_lock_wait_s"]
+        pst = self.placement.stats()
+        self.stats.worker_steals = [d.stolen for d in self.placement.deques]
+        self.stats.load_cap_skips = int(pst.get("load_cap_skips", 0))
+        if self.tracer.enabled:
+            self.stats.events = self.tracer.events()
+            self.stats.trace_dropped = self.tracer.dropped
         rep = st.get("replay")
         if rep:
             self.stats.replay_iterations = rep["replay_iterations"]
@@ -308,7 +333,10 @@ class TaskRuntime:
                             deps=_parse_deps(scoped_deps(parent.scope,
                                                          deps)),
                             label=label, parent=parent)
-        self.policy.submit(wd, self._current_wid())
+        wid = self._current_wid()
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_CREATED, wd, wid)
+        self.policy.submit(wd, wid)
         self._sample_trace()
         return wd
 
@@ -356,6 +384,14 @@ class TaskRuntime:
                 # NOT global quiescence, so it routes to the scope's
                 # policy slot only and skips the dispatcher hooks.
                 self.policy.notify_quiescent(root, scope_id=sid)
+                if root and self.tracer.enabled:
+                    # the boundary payload lets trace consumers tell
+                    # replayed windows (manager-silent by design) from
+                    # live ones
+                    self.tracer.quiesce(
+                        {"scope": sid,
+                         "replay_iterations": replay_iterations_of(
+                             self.policy, sid)})
                 if not scope_root:
                     self.dispatcher.notify_quiescent(wid)
                 return
@@ -487,6 +523,9 @@ class TaskRuntime:
         prev_wid = getattr(_tls, "worker_id", self.num_workers)
         _tls.current, _tls.worker_id = wd, worker_id
         wd.mark_running()
+        tr = self.tracer
+        if tr.enabled:
+            tr.task_event(EV_START, wd, worker_id)
         t0 = time.perf_counter()
         try:
             if wd.func is not None:
@@ -496,6 +535,10 @@ class TaskRuntime:
             wd.exec_dur = time.perf_counter() - t0
             wd.mark_finished()
             _tls.current, _tls.worker_id = prev_task, prev_wid
+        if tr.enabled:
+            # end BEFORE complete(): successors' ready events must sort
+            # after their predecessor's end
+            tr.task_event(EV_END, wd, worker_id)
         self.stats.tasks_executed += 1
         self.placement.note_executed(wd, worker_id)
         self.policy.complete(wd, worker_id)

@@ -45,7 +45,8 @@ import threading
 from collections import OrderedDict
 from typing import Dict, Hashable, List, Optional, Sequence
 
-from ..shards import StealDeque, stable_region_hash
+from ..shards import AtomicCounter, StealDeque, stable_region_hash
+from ..trace import EV_READY, EV_STEAL, NULL_TRACER
 from ..wd import WorkDescriptor
 from .dag import quantize_bands
 
@@ -81,6 +82,14 @@ class PlacementPolicy:
         self.deques: List[StealDeque] = [StealDeque()
                                          for _ in range(num_slots)]
         self.charge = _NO_CHARGE
+        # wired by the DependencePolicy ctor, like `charge`; `ready`
+        # events are stamped HERE because every ready path of every
+        # policy funnels through a placement push, and only the
+        # placement knows the target slot
+        self.tracer = NULL_TRACER
+        # per-scope steal tallies for the multi-tenant rollups
+        # (dict.setdefault is GIL-atomic; AtomicCounter guards the +=)
+        self.scope_steals: Dict[Hashable, AtomicCounter] = {}
 
     # -- protocol -------------------------------------------------------
     def push(self, wd: WorkDescriptor) -> None:
@@ -100,10 +109,21 @@ class PlacementPolicy:
             return wd
         n = len(self.deques)
         for off in range(1, n):
-            wd = self.deques[(slot + off) % n].steal()
+            victim = (slot + off) % n
+            wd = self.deques[victim].steal()
             if wd is not None:
+                self._note_steal(wd, slot, victim)
                 return wd
         return None
+
+    def _note_steal(self, wd: WorkDescriptor, slot: int,
+                    victim: int) -> None:
+        """A ready task left ``victim``'s deque for thief ``slot``."""
+        if wd.scope is not None:
+            self.scope_steals.setdefault(
+                wd.scope, AtomicCounter(0)).add(1)
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_STEAL, wd, slot, data=victim)
 
     def ready_count(self) -> int:
         return sum(len(d) for d in self.deques)
@@ -136,8 +156,11 @@ class RoundRobinPlacement(PlacementPolicy):
         self._rr = 0
 
     def push(self, wd: WorkDescriptor) -> None:
-        self.deques[self._rr].push(wd)
-        self._rr = (self._rr + 1) % len(self.deques)
+        slot = self._rr
+        self.deques[slot].push(wd)
+        self._rr = (slot + 1) % len(self.deques)
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_READY, wd, slot)
 
 
 class ShardAffinePlacement(RoundRobinPlacement):
@@ -234,6 +257,10 @@ class ShardAffinePlacement(RoundRobinPlacement):
             return
         self.affine_pushes += 1
         self.deques[slot].push(wd)
+        if self.tracer.enabled:
+            # the "affine" payload marks locality-pinned placements for
+            # the affinity-miss detector
+            self.tracer.task_event(EV_READY, wd, slot, data="affine")
 
     def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
         with self._aff_lock:
@@ -243,6 +270,13 @@ class ShardAffinePlacement(RoundRobinPlacement):
                 self._affinity.move_to_end(key)
             while len(self._affinity) > self._max_regions:
                 self._affinity.popitem(last=False)
+
+    def stats(self) -> Dict[str, int]:
+        st = super().stats()
+        st["affine_pushes"] = self.affine_pushes
+        st["fallback_pushes"] = self.fallback_pushes
+        st["load_cap_skips"] = self.load_cap_skips
+        return st
 
 
 class CriticalPathPlacement(ShardAffinePlacement):
@@ -310,7 +344,13 @@ class CriticalPathPlacement(ShardAffinePlacement):
         else:
             self.affine_pushes += 1
         self.priority_pushes += 1
-        self.deques[slot].push_priority(wd, bands[sid])
+        band = bands[sid]
+        self.deques[slot].push_priority(wd, band)
+        if self.tracer.enabled:
+            # published-band payload: the priority-inversion detector
+            # only speaks where bands exist
+            self.tracer.task_event(EV_READY, wd, slot,
+                                   data=("band", band))
 
     def pop(self, slot: int) -> Optional[WorkDescriptor]:
         # Global priority pop: when the shared band counters say a
@@ -329,9 +369,11 @@ class CriticalPathPlacement(ShardAffinePlacement):
             if gb >= 0 and self.deques[slot].best_band() < gb:
                 n = len(self.deques)
                 for off in range(1, n):
-                    wd = self.deques[(slot + off) % n].steal_band(gb)
+                    victim = (slot + off) % n
+                    wd = self.deques[victim].steal_band(gb)
                     if wd is not None:
                         self.global_band_steals += 1
+                        self._note_steal(wd, slot, victim)
                         self.charge.prio_pop()
                         return wd
         wd = super().pop(slot)

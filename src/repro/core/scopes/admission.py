@@ -46,6 +46,7 @@ from typing import Dict, List, Optional
 
 from ..shards.steal_deque import AtomicCounter
 from ..sched.placement import PlacementPolicy
+from ..trace import EV_ADMIT_DEFER
 from ..wd import WorkDescriptor
 
 
@@ -109,6 +110,20 @@ class FairAdmission(PlacementPolicy):
     def charge(self, c) -> None:
         # the policy ctor wires its CostCharger through `placement.charge`
         self.inner.charge = c
+
+    @property
+    def tracer(self):
+        return self.inner.tracer
+
+    @tracer.setter
+    def tracer(self, t) -> None:
+        # same wiring path as `charge`: the inner placement stamps the
+        # ready/steal events, this wrapper stamps admission deferrals
+        self.inner.tracer = t
+
+    @property
+    def scope_steals(self):
+        return self.inner.scope_steals
 
     @property
     def wants_replay_priorities(self) -> bool:
@@ -201,6 +216,10 @@ class FairAdmission(PlacementPolicy):
         # the metric is comparable between spinning threads and the sim
         if r.admitted < seq:
             r.admission_waits += 1
+            tr = self.inner.tracer
+            if tr.enabled:
+                tr.task_event(EV_ADMIT_DEFER, wd, -1,
+                              data={"queued": len(r.ring)})
 
     def push_replay(self, wd: WorkDescriptor, sid: int) -> None:
         # scope replay wrappers run with the priority lane off (their

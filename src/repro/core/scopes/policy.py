@@ -40,6 +40,8 @@ def scope_rollup(placement, policy, scope_id: int) -> Dict[str, object]:
     admission counters from the FairAdmission ring plus the scope's
     replay-slot counters."""
     entry: Dict[str, object] = dict(placement.scope_admission(scope_id))
+    steals = getattr(placement, "scope_steals", {}).get(scope_id)
+    entry["steals"] = steals.value if steals is not None else 0
     pol = policy.scope_policy(scope_id)
     entry["replay_iterations"] = getattr(pol, "replay_iterations", 0)
     entry["replayed_tasks"] = getattr(pol, "replayed_tasks", 0)

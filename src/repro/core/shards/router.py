@@ -50,6 +50,7 @@ from typing import Callable, List, Optional, Union
 
 from ..messages import (DoneBatchMessage, DoneTaskMessage,
                         SubmitBatchMessage, SubmitTaskMessage)
+from ..trace import EV_DEPS, EV_MSG_DRAIN, EV_MSG_ENQ, NULL_TRACER
 from ..wd import TaskState, WorkDescriptor
 from .sharded_graph import ShardedDependenceGraph, partition_deps
 from .steal_deque import AtomicCounter
@@ -98,11 +99,12 @@ class ShardRouter:
 
     def __init__(self, graph: ShardedDependenceGraph,
                  on_ready: Callable[[WorkDescriptor], None],
-                 charge=None) -> None:
+                 charge=None, tracer=None) -> None:
         from ..engine.charge import CostCharger
         self.graph = graph
         self.on_ready = on_ready
         self.charge = charge if charge is not None else CostCharger()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.mailboxes: List[ShardMailbox] = [
             ShardMailbox(i) for i in range(graph.num_shards)]
 
@@ -131,8 +133,11 @@ class ShardRouter:
         if self.prepare_submit(wd):
             return
         msg = SubmitTaskMessage(wd)
+        tr = self.tracer
         for s in wd.shard_parts:
             self.mailboxes[s].push(msg)
+            if tr.enabled:
+                tr.task_event(EV_MSG_ENQ, wd, -1, data=("submit", s, 1))
 
     def push_batch(self, wds: List[WorkDescriptor]) -> None:
         """Ship already-prepared WDs (see ``prepare_submit``) as one
@@ -142,8 +147,12 @@ class ShardRouter:
         for wd in wds:
             for s in wd.shard_parts:
                 per_shard.setdefault(s, []).append(wd)
+        tr = self.tracer
         for s, group in per_shard.items():
             self.mailboxes[s].push(SubmitBatchMessage(group))
+            if tr.enabled:
+                tr.mgr_event(EV_MSG_ENQ, -1,
+                             data=("submit_batch", s, len(group)))
 
     def route_done(self, wd: WorkDescriptor) -> None:
         parts = wd.shard_parts            # cached by prepare_submit
@@ -152,8 +161,11 @@ class ShardRouter:
             wd.mark_completed()
             return
         msg = DoneTaskMessage(wd)
+        tr = self.tracer
         for s in parts:
             self.mailboxes[s].push(msg)
+            if tr.enabled:
+                tr.task_event(EV_MSG_ENQ, wd, -1, data=("done", s, 1))
 
     def push_done_batch(self, wds: List[WorkDescriptor]) -> None:
         """Ship finished WDs (each with at least one shard portion) as
@@ -163,8 +175,12 @@ class ShardRouter:
         for wd in wds:
             for s in wd.shard_parts:
                 per_shard.setdefault(s, []).append(wd)
+        tr = self.tracer
         for s, group in per_shard.items():
             self.mailboxes[s].push(DoneBatchMessage(group))
+            if tr.enabled:
+                tr.mgr_event(EV_MSG_ENQ, -1,
+                             data=("done_batch", s, len(group)))
 
     # -- consumer side (the claiming manager) --------------------------
     def _submit_local(self, shard, wd: WorkDescriptor) -> bool:
@@ -179,6 +195,14 @@ class ShardRouter:
         shard's mailbox claim (single manager per shard)."""
         shard = self.graph.shards[shard_index]
         self.charge.message()
+        tr = self.tracer
+        if tr.enabled:
+            n = len(msg.wds) if type(msg) in (SubmitBatchMessage,
+                                              DoneBatchMessage) else 1
+            kind = ("submit" if type(msg) in (SubmitTaskMessage,
+                                              SubmitBatchMessage)
+                    else "done")
+            tr.mgr_event(EV_MSG_DRAIN, -1, data=(kind, shard_index, n))
         if type(msg) is SubmitBatchMessage:
             self.charge.submit_batch_cs(
                 ("shard", shard_index),
@@ -189,6 +213,11 @@ class ShardRouter:
                 for wd in msg.wds:
                     if self._submit_local(shard, wd):
                         newly.append(wd)
+            if tr.enabled:
+                # one deps_resolved per shard portion; consumers use
+                # the LAST one per task (the latch-zero portion)
+                for wd in msg.wds:
+                    tr.task_event(EV_DEPS, wd, -1, data=shard_index)
             for wd in newly:
                 wd.mark_ready()
                 self.on_ready(wd)
@@ -199,6 +228,8 @@ class ShardRouter:
                 len(wd.shard_parts[shard_index]), len(wd.shard_parts))
             with shard.lock:
                 ready = self._submit_local(shard, wd)
+            if tr.enabled:
+                tr.task_event(EV_DEPS, wd, -1, data=shard_index)
             if ready:
                 wd.mark_ready()
                 self.on_ready(wd)

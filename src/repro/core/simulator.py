@@ -56,6 +56,8 @@ from .engine import (SimCharger, make_placement, make_policy,
                      mode_needs_manager_thread, mode_uses_shards)
 from .scopes import (FairAdmission, ScopedPolicy, scope_rollup,
                      scoped_deps)
+from .trace import (EV_CREATED, EV_END, EV_START, NULL_TRACER,
+                    TraceRecorder, replay_iterations_of)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 # ---------------------------------------------------------------------------
@@ -104,6 +106,11 @@ class SimCosts:
     # makespan comparison in bench_sched.py is honest.
     prio_push: float = 0.06      # banded append + band lookup
     prio_pop: float = 0.04       # pop-side band scan while replaying
+    # One tracing ring-buffer append (core.trace, trace=True only):
+    # a tuple build + GIL-atomic deque append. Priced so the
+    # traced-vs-untraced overhead gate in bench_traces.py measures a
+    # real cost instead of zero by construction.
+    trace_event: float = 0.05
 
 
 @dataclass
@@ -117,6 +124,13 @@ class SimResult:
     max_in_graph: int = 0
     total_edges: int = 0
     trace: List[Tuple[float, int, int]] = field(default_factory=list)
+    # Per-task event timeline (core.trace; empty unless trace=True),
+    # same schema as RuntimeStats.events with virtual-µs timestamps.
+    events: list = field(default_factory=list)
+    trace_dropped: int = 0
+    # Placement counters surfaced per run (see RuntimeStats).
+    worker_steals: List[int] = field(default_factory=list)
+    load_cap_skips: int = 0
     exec_order: List[str] = field(default_factory=list)  # task labels
     # Per-iteration breakdown when run(..., iterations=n): virtual time,
     # lock acquisitions, and mailbox entries attributable to each
@@ -216,10 +230,12 @@ class RuntimeSimulator:
         if iterations < 1:
             raise ValueError("iterations must be >= 1")
         charge = SimCharger(self.costs)
+        tracer = self._make_tracer(charge)
         placement = self._make_placement()
-        policy = self._make_policy(placement, charge, replay=self.replay)
+        policy = self._make_policy(placement, charge, replay=self.replay,
+                                   tracer=tracer)
         prog = _SimProgram(None, "main", list(specs), iterations)
-        return self._drive([prog], charge, placement, policy)
+        return self._drive([prog], charge, placement, policy, tracer)
 
     def run_scopes(self, scope_specs: Sequence[List[SimTaskSpec]],
                    weights: Optional[Sequence[float]] = None,
@@ -254,11 +270,13 @@ class RuntimeSimulator:
         if not (len(weights) == len(caps) == len(names) == S):
             raise ValueError("weights/max_inflight/names length mismatch")
         charge = SimCharger(self.costs)
+        tracer = self._make_tracer(charge)
         placement = FairAdmission(self._make_placement())
         # the scope multiplexer owns the replay wrapping (one recording
         # slot per scope), so the base policy stays live
         policy = ScopedPolicy(self._make_policy(placement, charge,
-                                                replay=False),
+                                                replay=False,
+                                                tracer=tracer),
                               replay=self.replay)
         programs = []
         for i in range(S):
@@ -268,7 +286,16 @@ class RuntimeSimulator:
             programs.append(_SimProgram(sid, names[i],
                                         list(scope_specs[i]), iterations,
                                         weight=weights[i]))
-        return self._drive(programs, charge, placement, policy)
+        return self._drive(programs, charge, placement, policy, tracer)
+
+    def _make_tracer(self, charge: SimCharger):
+        """Virtual-time tracer: stamps `charge.now` and prices each
+        append through `SimCharger.trace_event()`, so the traced run's
+        makespan honestly carries the instrumentation cost."""
+        if not self.trace_enabled:
+            return NULL_TRACER
+        return TraceRecorder(self.P, clock=lambda: charge.now,
+                             charge=charge, time_unit="us")
 
     def _make_placement(self):
         return make_placement(
@@ -276,7 +303,8 @@ class RuntimeSimulator:
             num_shards=(self.num_shards or self.P)
             if mode_uses_shards(self.mode) else None)
 
-    def _make_policy(self, placement, charge: SimCharger, replay: bool):
+    def _make_policy(self, placement, charge: SimCharger, replay: bool,
+                     tracer=NULL_TRACER):
         return make_policy(
             self.mode, self.P,
             num_workers=self.P,
@@ -286,11 +314,12 @@ class RuntimeSimulator:
             main_slot=0,
             num_shards=self.num_shards or self.P,
             batch_size=self.batch_size,
-            replay=replay)
+            replay=replay,
+            tracer=tracer)
 
     # -- the event loop (shared by run and run_scopes) ------------------
     def _drive(self, programs: List["_SimProgram"], charge: SimCharger,
-               placement, policy) -> SimResult:
+               placement, policy, tracer=NULL_TRACER) -> SimResult:
         P, costs = self.P, self.costs
         mgr_core = P - 1 if policy.needs_manager_thread else -1
 
@@ -361,6 +390,13 @@ class RuntimeSimulator:
             prog = programs[core]
             t = max(makespan[0], charge.now)
             policy.notify_quiescent(True, scope_id=prog.scope_id)
+            if tracer.enabled:
+                # quiesce markers delimit replay windows for the
+                # detectors: replayed iterations are manager-silent by
+                # design, not starving (see trace/detect.py)
+                tracer.quiesce({"scope": prog.scope_id,
+                                "replay_iterations": replay_iterations_of(
+                                    policy, prog.scope_id)})
             prog.marks.append((t, charge.lock_acquisitions(),
                                policy.stats()["messages_processed"]))
             prog.epoch += 1
@@ -388,6 +424,8 @@ class RuntimeSimulator:
                                  if core in charge.polluted else 1.0)
             charge.polluted.discard(core)
             wd.mark_running()
+            if tracer.enabled:
+                tracer.task_event(EV_START, wd, core)
             exec_order.append(wd.label)
             children = getattr(wd, "sim_children", None)
             if children:
@@ -430,6 +468,8 @@ class RuntimeSimulator:
                         label=spec.label, parent=parent_wd)
                     wd.duration = spec.dur
                     wd.sim_children = spec.children
+                    if tracer.enabled:
+                        tracer.task_event(EV_CREATED, wd, core)
                     policy.submit(wd, core)
                     sample(charge.now)
                     wake_all(charge.now)
@@ -448,6 +488,8 @@ class RuntimeSimulator:
                     if parent is not None:  # nested parent completes
                         policy.notify_quiescent(False)
                         parent.mark_finished()
+                        if tracer.enabled:
+                            tracer.task_event(EV_END, parent, core)
                         placement.note_executed(parent, core)
                         policy.complete(parent, core)
                         sample(charge.now)
@@ -479,6 +521,8 @@ class RuntimeSimulator:
             if kind == "fin":
                 charge.begin(core, t)
                 wd.mark_finished()
+                if tracer.enabled:
+                    tracer.task_event(EV_END, wd, core)
                 placement.note_executed(wd, core)
                 policy.complete(wd, core)
                 sample(charge.now)
@@ -532,6 +576,10 @@ class RuntimeSimulator:
             max_in_graph=st["max_in_graph"],
             total_edges=st["total_edges"],
             trace=trace,
+            events=tracer.events() if tracer.enabled else [],
+            trace_dropped=tracer.dropped,
+            worker_steals=[d.stolen for d in placement.deques],
+            load_cap_skips=int(placement.stats().get("load_cap_skips", 0)),
             exec_order=exec_order,
             iterations=max(p.iterations for p in programs),
             iter_makespans_us=iter_mk,

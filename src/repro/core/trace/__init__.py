@@ -1,0 +1,28 @@
+"""Low-overhead per-task event tracing + detrimental-pattern detection.
+
+``recorder`` is the shared recording layer (per-slot GIL-atomic ring
+buffers, one schema for the threaded and simulated drivers); ``detect``
+holds the three pathology detectors (ready-queue starvation, priority
+inversion, affinity misses) that feed the ``DynamicTuner`` via its
+quiescence hook and the ``repro.analysis.traceview`` exporter.
+"""
+from .detect import (AFFINITY_MISS, INVERSION, STARVATION, Finding,
+                     detect_affinity_misses, detect_all,
+                     detect_priority_inversion, detect_starvation,
+                     replay_windows)
+from .recorder import (EV_ADMIT_DEFER, EV_CREATED, EV_DEPS, EV_END,
+                       EV_MSG_DRAIN, EV_MSG_ENQ, EV_QUIESCE, EV_READY,
+                       EV_START, EV_STEAL, NULL_TRACER, TASK_LIFECYCLE,
+                       NullTraceRecorder, TraceEvent, TraceRecorder,
+                       load_trace, replay_iterations_of, save_trace)
+
+__all__ = [
+    "TraceRecorder", "NullTraceRecorder", "NULL_TRACER", "TraceEvent",
+    "load_trace", "save_trace", "replay_iterations_of", "TASK_LIFECYCLE",
+    "EV_CREATED", "EV_DEPS", "EV_READY", "EV_START", "EV_END",
+    "EV_MSG_ENQ", "EV_MSG_DRAIN", "EV_STEAL", "EV_ADMIT_DEFER",
+    "EV_QUIESCE",
+    "Finding", "detect_all", "detect_starvation",
+    "detect_priority_inversion", "detect_affinity_misses",
+    "replay_windows", "STARVATION", "INVERSION", "AFFINITY_MISS",
+]
