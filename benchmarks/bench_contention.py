@@ -22,7 +22,9 @@ overhead.
 from __future__ import annotations
 
 import argparse
+import multiprocessing
 import os
+import pickle
 import sys
 import time
 
@@ -32,6 +34,12 @@ import numpy as np  # noqa: F401,E402  (parity with sibling benches)
 
 from repro.core import DDASTParams, TaskRuntime  # noqa: F401,E402
 from repro.core.depgraph import DependenceGraph  # noqa: E402
+from repro.core.messages import (DONE_NO_RESULT,  # noqa: E402
+                                 decode_done_batch, decode_submit_batch,
+                                 encode_done_batch, encode_submit_batch)
+from repro.core.procs import apps  # noqa: E402
+from repro.core.procs import serial  # noqa: E402
+from repro.core.procs.rings import ShmRing  # noqa: E402
 from repro.core.queues import SPSCQueue  # noqa: E402
 from repro.core.shards import (ShardRouter,  # noqa: E402
                                ShardedDependenceGraph)
@@ -107,6 +115,111 @@ def calibrate_portion(tasks: int = 4000, k: int = 4) -> dict:
     }
 
 
+def _ipc_echo_child(exec_name: str, done_name: str,
+                    exec_fbq, done_fbq) -> None:
+    """Worker half of the IPC calibration: pop a real EXEC frame off the
+    shared-memory ring, answer it with a real DONE frame — the exact
+    frame shapes and codecs the process backend ships per batch. Exits
+    on the first CTRL frame."""
+    ex = ShmRing.attach(exec_name, fallback=exec_fbq)
+    dn = ShmRing.attach(done_name, fallback=done_fbq)
+    while True:
+        frame = ex.pop()
+        if frame is None:
+            # a real (if tiny) sleep: sleep(0) never deschedules on
+            # Linux, and on a single-core host the two pollers must
+            # alternate or each spins out a full scheduler quantum
+            time.sleep(1e-6)
+            continue
+        kind, body = serial.parse(frame)
+        if kind == serial.K_CTRL:
+            break
+        dones = [(wd_id, 0.0, 0.0, DONE_NO_RESULT, b"")
+                 for wd_id, _payload, _label in body]
+        dn.push(serial.frame_done(dones))
+    ex.close()
+    dn.close()
+
+
+def calibrate_ipc(rounds: int = 400, batch: int = 8) -> dict:
+    """Measure ``SimCosts.ipc_submit_us`` / ``ipc_done_us`` from REAL
+    ring round-trips: fork an echo child over a ShmRing pair, push
+    EXEC frames (the wire form of ``SubmitBatchMessage``), wait for the
+    answering DONE frames, and split the per-task round-trip into its
+    submit and done legs. Each leg = its codec cost (measured
+    separately, in-process) + half the residual transport cost, so the
+    asymmetry between the ~variable-size submit entry (pickled
+    func+args) and the fixed 29-byte done header is preserved."""
+    # a representative submit payload: a real kernel + scalar args, the
+    # same shape ProcessDispatch pickles per task
+    payload = pickle.dumps((apps.spin, (100.0,)), protocol=4)
+    entries = [(i, payload, f"cal[{i}]") for i in range(batch)]
+    dones = [(i, 0.0, 0.0, DONE_NO_RESULT, b"") for i in range(batch)]
+
+    # codec-only legs, amortized per task (no transport)
+    reps = 2000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        decode_submit_batch(encode_submit_batch(entries))
+    sub_codec_us = (time.perf_counter() - t0) / (reps * batch) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        decode_done_batch(encode_done_batch(dones))
+    done_codec_us = (time.perf_counter() - t0) / (reps * batch) * 1e6
+
+    # real round-trips against a forked echo child
+    try:
+        ctx = multiprocessing.get_context("fork")
+    except ValueError:                   # pragma: no cover - non-POSIX
+        ctx = multiprocessing.get_context()
+    exec_fbq, done_fbq = ctx.SimpleQueue(), ctx.SimpleQueue()
+    ex = ShmRing(1 << 16, fallback=exec_fbq)
+    dn = ShmRing(1 << 16, fallback=done_fbq)
+    child = ctx.Process(target=_ipc_echo_child,
+                        args=(ex.name, dn.name, exec_fbq, done_fbq),
+                        daemon=True)
+    child.start()
+    try:
+        frame = serial.frame_exec(entries)
+
+        def roundtrip(n: int) -> float:
+            t0 = time.perf_counter()
+            for _ in range(n):
+                ex.push(frame)
+                while dn.pop() is None:
+                    time.sleep(1e-6)     # deschedule: don't starve the
+                                         # child of the core (see child)
+            return (time.perf_counter() - t0) / n * 1e6
+
+        roundtrip(max(20, rounds // 10))           # warm-up
+        rtt_us = roundtrip(rounds)
+    finally:
+        try:
+            ex.push(serial.frame_ctrl(serial.OP_SHUTDOWN))
+        except BufferError:              # pragma: no cover - dead child
+            pass
+        child.join(timeout=5.0)
+        if child.is_alive():             # pragma: no cover - dead child
+            child.terminate()
+            child.join(timeout=1.0)
+        ex.close()
+        dn.close()
+        ex.unlink()
+        dn.unlink()
+
+    rtt_task_us = rtt_us / batch
+    transport_us = max(0.0, rtt_task_us - sub_codec_us - done_codec_us)
+    return {
+        "ipc_submit_us": sub_codec_us + transport_us / 2,
+        "ipc_done_us": done_codec_us + transport_us / 2,
+        "rtt_task_us": rtt_task_us,
+        "sub_codec_us": sub_codec_us,
+        "done_codec_us": done_codec_us,
+        "batch": batch,
+        "rounds": rounds,
+    }
+
+
 def lock_contention(num_workers: int = 4, tasks: int = 600) -> dict:
     """Real threads: same independent-task workload under sync vs ddast;
     report graph-lock acquisitions + wait time."""
@@ -141,6 +254,11 @@ def run(csv_rows: list) -> None:
                      por["portion_overhead_us"],
                      f"portions {por['portions_single']}->"
                      f"{por['portions_spread']}"))
+    ipc = calibrate_ipc()
+    for key in ("ipc_submit_us", "ipc_done_us"):
+        csv_rows.append((f"calibrate.{key}", ipc[key],
+                         f"rtt/task={ipc['rtt_task_us']:.2f}us "
+                         f"batch={ipc['batch']}"))
     lc = lock_contention()
     for mode, st in lc.items():
         csv_rows.append((f"contention.{mode}.lock_wait_ms",
@@ -151,9 +269,11 @@ def run(csv_rows: list) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--calibrate", action="store_true",
-                    help="measure the per-shard-portion overhead from the "
-                         "threaded runtime and print the value to use for "
-                         "SimCosts.portion_overhead")
+                    help="measure the per-shard-portion overhead and the "
+                         "process-backend IPC frame costs on this host; "
+                         "print the values to use for "
+                         "SimCosts.portion_overhead / ipc_submit_us / "
+                         "ipc_done_us")
     args = ap.parse_args()
     if args.calibrate:
         por = calibrate_portion()
@@ -161,8 +281,17 @@ def main() -> None:
               f"{por['portion_overhead_us']:.3f} us/portion "
               f"({por['portions_single']} -> {por['portions_spread']} "
               f"portions)")
+        ipc = calibrate_ipc()
+        print(f"measured ring round-trip: {ipc['rtt_task_us']:.3f} "
+              f"us/task (batch={ipc['batch']}, {ipc['rounds']} rounds)")
+        print(f"  submit leg: {ipc['ipc_submit_us']:.3f} us "
+              f"(codec {ipc['sub_codec_us']:.3f})   "
+              f"done leg: {ipc['ipc_done_us']:.3f} us "
+              f"(codec {ipc['done_codec_us']:.3f})")
         print(f"suggested: SimCosts(portion_overhead="
-              f"{por['portion_overhead_us']:.2f})")
+              f"{por['portion_overhead_us']:.2f}, "
+              f"ipc_submit_us={ipc['ipc_submit_us']:.2f}, "
+              f"ipc_done_us={ipc['ipc_done_us']:.2f})")
         return
     rows: list = []
     run(rows)

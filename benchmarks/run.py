@@ -11,10 +11,10 @@ import time
 
 sys.path.insert(0, "src")
 
-from benchmarks import (bench_contention, bench_replay,  # noqa: E402
-                        bench_roofline, bench_scalability, bench_sched,
-                        bench_scopes, bench_shards, bench_traces,
-                        bench_tuning)
+from benchmarks import (bench_contention, bench_procs,  # noqa: E402
+                        bench_replay, bench_roofline, bench_scalability,
+                        bench_sched, bench_scopes, bench_shards,
+                        bench_traces, bench_tuning)
 
 SUITES = {
     "contention": bench_contention.run,     # §1 motivation + calibration
@@ -26,6 +26,7 @@ SUITES = {
     "replay": bench_replay.run,             # record-and-replay vs live
     "sched": bench_sched.run,               # placement x replay sweep
     "scopes": bench_scopes.run,             # multi-tenant scopes
+    "procs": bench_procs.run,               # multi-process GIL escape
 }
 
 

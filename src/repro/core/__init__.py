@@ -18,6 +18,7 @@ from .engine import (CostCharger, CriticalPathPlacement, DastPolicy,
 from .sched import bottom_levels, list_schedule, quantize_bands
 from .messages import (DoneBatchMessage, DoneTaskMessage,
                        SubmitBatchMessage, SubmitTaskMessage)
+from .procs import ProcessRuntime, ShmRing, TaskFailed, WorkerLost
 from .queues import InstrumentedLock, SPSCQueue, WorkerQueues
 from .runtime import RuntimeStats, TaskRuntime
 from .scopes import (FairAdmission, JobScope, ScopedPolicy, ScopedRegion,
@@ -43,6 +44,7 @@ __all__ = [
     "DoneBatchMessage", "DoneTaskMessage", "SubmitBatchMessage",
     "SubmitTaskMessage",
     "InstrumentedLock", "SPSCQueue", "WorkerQueues",
+    "ProcessRuntime", "ShmRing", "TaskFailed", "WorkerLost",
     "RuntimeStats", "TaskRuntime",
     "FairAdmission", "JobScope", "ScopedPolicy", "ScopedRegion",
     "scoped_deps",

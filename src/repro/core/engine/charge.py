@@ -86,6 +86,17 @@ class CostCharger:
         threads (the append IS the cost); priced in the simulator so
         the traced-vs-untraced overhead gate measures something real."""
 
+    def ipc_submit(self) -> None:
+        """One Submit batch encoded + pushed across a process boundary
+        (the process backend's exec rings). Free on the real drivers —
+        the ring push IS the cost; priced in the simulator so it can
+        model ``backend="processes"`` before buying cores. Calibrate
+        with ``bench_contention.py --calibrate``."""
+
+    def ipc_done(self) -> None:
+        """One Done batch decoded off a process-boundary ring (the
+        process backend's done rings); see :meth:`ipc_submit`."""
+
 
 class VirtualLock:
     """Serializes critical sections in virtual time (FIFO-handover
@@ -211,6 +222,15 @@ class SimCharger(CostCharger):
     # VirtualLock, no pollution flag.
     def trace_event(self) -> None:
         self.now += self.costs.trace_event
+
+    # Cross-process ring traffic (modeling backend="processes"): the
+    # rings are SPSC, so there is no lock to serialize on — pure
+    # serialization + copy time on the acting side.
+    def ipc_submit(self) -> None:
+        self.now += self.costs.ipc_submit_us
+
+    def ipc_done(self) -> None:
+        self.now += self.costs.ipc_done_us
 
     # -- result aggregation ---------------------------------------------
     def lock_wait_us(self) -> float:

@@ -335,6 +335,17 @@ class ReplayPolicy(DependencePolicy):
         exist."""
         return self._state == RECORDING and bool(self._rec_keys)
 
+    def steady_iteration_complete(self) -> bool:
+        """True when the in-progress iteration has submitted exactly the
+        recorded structure — the whole frozen graph is accounted for and
+        ``notify_quiescent`` is guaranteed to count it as a replay
+        iteration. The process backend keys its replay plane on this:
+        only then may the captured roots run worker-side off the shared
+        arrays instead of through the mailboxes."""
+        return (self._state == REPLAYING and not self._diverged
+                and self._iter_started
+                and self._iter_counts == self._rec_counts)
+
     # ------------------------------------------------------------------
     # protocol: submit
     def submit(self, wd: WorkDescriptor, slot: int) -> None:

@@ -14,8 +14,9 @@ high shard counts is paid once per batch.
 """
 from __future__ import annotations
 
+import struct
 from dataclasses import dataclass
-from typing import List
+from typing import List, Sequence, Tuple
 
 from .wd import WorkDescriptor
 
@@ -56,3 +57,80 @@ class DoneBatchMessage:
     order carries no semantics (see :class:`DoneTaskMessage`) — only the
     per-WD latch arithmetic must balance, and it is unchanged."""
     wds: List[WorkDescriptor]
+
+
+# ---------------------------------------------------------------------------
+# Compact binary wire forms (process backend, core.procs).
+#
+# The in-process messages above carry live WorkDescriptor references —
+# meaningless across an address-space boundary. The process backend
+# ships the SAME two batch shapes, but flattened to what the other side
+# actually needs: a Submit entry is (wd_id, payload, label) where
+# ``payload`` is the pickled (func, args) pair, and a Done entry is
+# (wd_id, t_start, t_end, status, blob) where ``blob`` is the pickled
+# result (status 0), empty (status 1: result not picklable, dropped),
+# or a UTF-8 traceback (status 2: body raised; status 3: replay-plane
+# body raised). Struct-framed rather than pickled wholesale so a batch
+# entry costs a fixed ~14/29-byte header per task, not a pickler walk
+# over dataclasses.
+
+_SUBMIT_HDR = struct.Struct("<QIH")      # wd_id, len(payload), len(label)
+_DONE_HDR = struct.Struct("<QddBI")      # wd_id, t0, t1, status, len(blob)
+_COUNT = struct.Struct("<I")
+
+DONE_OK = 0              # blob = pickled result
+DONE_NO_RESULT = 1       # result not picklable; dropped (blob empty)
+DONE_ERROR = 2           # body raised; blob = UTF-8 traceback
+DONE_PLANE_ERROR = 3     # replay-plane body raised; wd_id is the sid
+
+
+def encode_submit_batch(entries: Sequence[Tuple[int, bytes, str]]) -> bytes:
+    """Wire form of :class:`SubmitBatchMessage`: one frame per batch."""
+    parts = [_COUNT.pack(len(entries))]
+    for wd_id, payload, label in entries:
+        lb = label.encode("utf-8")
+        parts.append(_SUBMIT_HDR.pack(wd_id, len(payload), len(lb)))
+        parts.append(payload)
+        parts.append(lb)
+    return b"".join(parts)
+
+
+def decode_submit_batch(buf: bytes,
+                        off: int = 0) -> List[Tuple[int, bytes, str]]:
+    (count,) = _COUNT.unpack_from(buf, off)
+    off += _COUNT.size
+    out = []
+    for _ in range(count):
+        wd_id, plen, llen = _SUBMIT_HDR.unpack_from(buf, off)
+        off += _SUBMIT_HDR.size
+        payload = bytes(buf[off:off + plen])
+        off += plen
+        label = bytes(buf[off:off + llen]).decode("utf-8")
+        off += llen
+        out.append((wd_id, payload, label))
+    return out
+
+
+def encode_done_batch(
+        entries: Sequence[Tuple[int, float, float, int, bytes]]) -> bytes:
+    """Wire form of :class:`DoneBatchMessage`: one frame per batch."""
+    parts = [_COUNT.pack(len(entries))]
+    for wd_id, t0, t1, status, blob in entries:
+        parts.append(_DONE_HDR.pack(wd_id, t0, t1, status, len(blob)))
+        parts.append(blob)
+    return b"".join(parts)
+
+
+def decode_done_batch(
+        buf: bytes,
+        off: int = 0) -> List[Tuple[int, float, float, int, bytes]]:
+    (count,) = _COUNT.unpack_from(buf, off)
+    off += _COUNT.size
+    out = []
+    for _ in range(count):
+        wd_id, t0, t1, status, blen = _DONE_HDR.unpack_from(buf, off)
+        off += _DONE_HDR.size
+        blob = bytes(buf[off:off + blen])
+        off += blen
+        out.append((wd_id, t0, t1, status, blob))
+    return out

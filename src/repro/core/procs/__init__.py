@@ -1,0 +1,12 @@
+"""Multi-process backend (``backend="processes"``): worker processes
+execute task bodies while the shard-pinned manager stack stays in the
+parent; cross-process traffic is the §3.1 message shapes in compact
+binary form over shared-memory SPSC rings; frozen replay graphs map
+into every worker so steady-state replayed iterations ship only latch
+generations. See ``driver.py`` for the full design notes."""
+from .driver import (ProcessDispatch, ProcessRuntime, TaskFailed,
+                     WorkerLost)
+from .rings import ShmRing, attach_shm
+
+__all__ = ["ProcessRuntime", "ProcessDispatch", "WorkerLost",
+           "TaskFailed", "ShmRing", "attach_shm"]

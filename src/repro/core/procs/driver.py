@@ -1,0 +1,1018 @@
+"""``ProcessRuntime`` — the ``backend="processes"`` driver.
+
+Under CPython threads the GIL serializes task *bodies*, so the threaded
+driver can only ever demonstrate the paper's lock-wait story, never real
+parallel throughput. This driver keeps the entire dependence-management
+stack exactly where the engine refactor put it — the same
+``SyncPolicy`` / ``DdastPolicy`` / ``ShardedPolicy`` objects, unchanged —
+and moves only the task *bodies* into worker processes:
+
+    main thread (slot 1)        submits; taskwait drains managers
+    reaper thread (slot 0)      consumes Done rings, runs idle-manager
+                                callbacks (the DDAST discipline: a
+                                thread with nothing else to do drains
+                                shard mailboxes)
+    worker process i (slot 2+i) pops Submit batches from its exec ring,
+                                runs bodies, ships Done batches back
+
+Cross-process traffic reuses the §3.1 message shapes in compact binary
+wire form (``core.messages.encode_submit_batch`` / ``encode_done_batch``)
+over ``multiprocessing.shared_memory`` SPSC rings (``procs.rings``), one
+exec + one done ring per worker, with a ``SimpleQueue`` fallback lane
+for oversize frames. Dependence analysis itself stays in the parent:
+the shard graphs hold live WorkDescriptor references and per-slot
+AtomicCounters that cannot cross an address space without a full
+shared-heap redesign — README documents this split honestly.
+
+Record-and-replay goes further: once an iteration's structure is frozen
+(``engine/replay.py``), the parent builds a **replay plane** — the
+frozen ``ReplayGraph``'s flat successor arrays (CSR), per-task latches,
+a shared ready ring and the pickled task payloads — in shared memory,
+mapped by every worker. A structurally matching iteration then ships
+ONE control frame per worker (the latch generation + plane descriptor)
+and the workers self-schedule the whole graph: pop sid, run body, dec
+successor latches under one shared lock, push newly-ready sids. Zero
+Submit/Done mailbox messages cross the process boundary in steady
+state — the property ``bench_procs.py`` gates in CI.
+
+Not supported here (documented, enforced): nested tasks (bodies run in
+workers and cannot submit), multi-tenant scopes, non-picklable task
+functions/args (use ``procs.apps``-style shared-memory data planes; the
+fallback lane covers oversize payloads, not unpicklable ones).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+import traceback
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..ddast import DDASTParams
+from ..dispatcher import FunctionalityDispatcher
+from ..engine import make_policy
+from ..engine.replay import RECORDING, REPLAYING
+from ..messages import (DONE_ERROR, DONE_NO_RESULT, DONE_OK,
+                        DONE_PLANE_ERROR, decode_done_batch,
+                        decode_submit_batch, encode_done_batch)
+from ..trace import (EV_CREATED, EV_END, EV_READY, EV_START, NULL_TRACER,
+                     TraceRecorder, replay_iterations_of)
+from ..wd import TaskState, WorkDescriptor
+from . import serial
+from .rings import ShmRing
+from .serial import (K_CTRL, K_DONE, K_EXEC, K_TRACE, OP_ITER,
+                     OP_SHUTDOWN, frame_ctrl, frame_exec, frame_trace)
+
+PROC_MODES = ("sync", "dast", "ddast", "sharded")
+
+
+class WorkerLost(RuntimeError):
+    """A worker process died with tasks in flight. Raised at the next
+    ``taskwait`` (instead of hanging its quiescence wait) naming the
+    in-flight task(s)."""
+
+
+class TaskFailed(RuntimeError):
+    """A task body raised in a worker process. Carries the worker-side
+    traceback; raised at the next ``taskwait`` after quiescence (the
+    graph stays consistent: the failing task completes, successors run)."""
+
+
+# ---------------------------------------------------------------------------
+# replay plane: shm layout shared by parent and workers
+#
+#   gen i64 @0 | remaining i32 @8 | ready_head i32 @12 | ready_tail i32
+#   @16 | (pad to 32) | ready i32[n] | preds i32[n] | succ_off i32[n+1]
+#   | succ_tgt i32[E] | latch i32[n] | exec_slot i32[n] | (pad to 8) |
+#   times f64[2n]
+#
+# All mutation of remaining/ready/latch happens under ONE
+# multiprocessing.Lock created before the workers fork; the static
+# arrays (preds/succ_*) are written once at freeze and only read after.
+
+_PL_REMAINING = 2          # i32 index (byte 8)
+_PL_HEAD = 3               # i32 index (byte 12)
+_PL_TAIL = 4               # i32 index (byte 16)
+_PL_RING0 = 8              # i32 index (byte 32)
+
+
+def _plane_offsets(n: int, nedges: int) -> Dict[str, int]:
+    off: Dict[str, int] = {}
+    b = 32
+    off["ready"] = b
+    b += 4 * n
+    off["preds"] = b
+    b += 4 * n
+    off["succ_off"] = b
+    b += 4 * (n + 1)
+    off["succ_tgt"] = b
+    b += 4 * nedges
+    off["latch"] = b
+    b += 4 * n
+    off["exec_slot"] = b
+    b += 4 * n
+    b = (b + 7) & ~7
+    off["times"] = b
+    off["size"] = b + 16 * n
+    return off
+
+
+class _ReplayImage:
+    """Parent-side owner of one frozen graph's replay plane."""
+
+    def __init__(self, g, payload_entries: List[Tuple[bytes, str]]) -> None:
+        from multiprocessing import shared_memory
+        n = g.n
+        nedges = sum(len(s) for s in g.succs)
+        off = _plane_offsets(n, nedges)
+        self.n = n
+        self.g = g
+        self.off = off
+        self.roots = [sid for sid in range(n) if g.preds[sid] == 0]
+        self.labels = [lb for _, lb in payload_entries]
+        self.arrays = shared_memory.SharedMemory(create=True,
+                                                 size=off["size"])
+        self.arrays.buf[:off["size"]] = b"\0" * off["size"]
+        blob = pickle.dumps(payload_entries, protocol=4)
+        self.payload = shared_memory.SharedMemory(create=True,
+                                                  size=len(blob))
+        self.payload.buf[:len(blob)] = blob
+        ints = self.arrays.buf.cast("i")
+        base = off["preds"] // 4
+        for sid in range(n):
+            ints[base + sid] = g.preds[sid]
+        so = off["succ_off"] // 4
+        st = off["succ_tgt"] // 4
+        k = 0
+        for sid in range(n):
+            ints[so + sid] = k
+            for tgt in g.succs[sid]:
+                ints[st + k] = tgt
+                k += 1
+        ints[so + n] = k
+        self.desc = {"arrays": self.arrays.name,
+                     "payload": self.payload.name,
+                     "payload_size": len(blob),
+                     "n": n, "nedges": nedges, "gen": 0}
+        self._gen = 0
+
+    def reset(self) -> int:
+        """Arm the plane for one iteration; returns the new generation.
+        Runs at a quiescent point (workers idle), before the ITER
+        broadcast, so no lock is needed."""
+        ints = self.arrays.buf.cast("i")
+        dbls = self.arrays.buf.cast("d")
+        off = self.off
+        n = self.n
+        lat = off["latch"] // 4
+        prd = off["preds"] // 4
+        exc = off["exec_slot"] // 4
+        for sid in range(n):
+            ints[lat + sid] = ints[prd + sid]
+            ints[exc + sid] = -1
+        tm = off["times"] // 8
+        for i in range(2 * n):
+            dbls[tm + i] = 0.0
+        for i, sid in enumerate(self.roots):
+            ints[_PL_RING0 + i] = sid
+        ints[_PL_HEAD] = 0
+        ints[_PL_TAIL] = len(self.roots)
+        ints[_PL_REMAINING] = n
+        self._gen += 1
+        self.arrays.buf.cast("q")[0] = self._gen
+        self.desc["gen"] = self._gen
+        return self._gen
+
+    def remaining(self) -> int:
+        return self.arrays.buf.cast("i")[_PL_REMAINING]
+
+    def times(self, sid: int) -> Tuple[float, float]:
+        dbls = self.arrays.buf.cast("d")
+        tm = self.off["times"] // 8
+        return dbls[tm + 2 * sid], dbls[tm + 2 * sid + 1]
+
+    def exec_slot(self, sid: int) -> int:
+        return self.arrays.buf.cast("i")[self.off["exec_slot"] // 4 + sid]
+
+    def unfinished_labels(self) -> List[str]:
+        ints = self.arrays.buf.cast("i")
+        lat = self.off["latch"] // 4
+        del lat
+        out = []
+        for sid in range(self.n):
+            t0, t1 = self.times(sid)
+            if t1 == 0.0:
+                out.append(self.labels[sid])
+        del ints
+        return out
+
+    def shm_names(self) -> List[str]:
+        return [self.arrays.name, self.payload.name]
+
+    def close_unlink(self) -> None:
+        for shm in (self.arrays, self.payload):
+            try:
+                shm.close()
+                shm.unlink()
+            except FileNotFoundError:    # pragma: no cover - teardown
+                pass
+
+
+# ---------------------------------------------------------------------------
+# worker process side
+
+
+class _PlaneView:
+    """Worker-side attachment to a replay plane (cached per shm name)."""
+
+    def __init__(self, desc: dict) -> None:
+        from .rings import attach_shm
+        self.arrays = attach_shm(desc["arrays"])
+        payload = attach_shm(desc["payload"])
+        entries = pickle.loads(bytes(payload.buf[:desc["payload_size"]]))
+        payload.close()
+        self.payloads = entries          # [(payload_bytes, label)]
+        self.tasks: Dict[int, Tuple] = {}  # sid -> (func, args, label)
+        self.n = desc["n"]
+        off = _plane_offsets(self.n, desc["nedges"])
+        ints = self.arrays.buf.cast("i")
+        so = off["succ_off"] // 4
+        st = off["succ_tgt"] // 4
+        # static topology copied to plain lists once: no shm reads on
+        # the per-task hot path
+        self.succ_off = [ints[so + i] for i in range(self.n + 1)]
+        self.succ_tgt = [ints[st + i] for i in range(desc["nedges"])]
+        self.latch_i = off["latch"] // 4
+        self.exec_i = off["exec_slot"] // 4
+        self.times_i = off["times"] // 8
+        del ints
+
+    def task(self, sid: int) -> Tuple:
+        t = self.tasks.get(sid)
+        if t is None:
+            payload, label = self.payloads[sid]
+            func, args = pickle.loads(payload)
+            t = self.tasks[sid] = (func, args, label)
+        return t
+
+    def close(self) -> None:
+        try:
+            self.arrays.close()
+        except Exception:                # pragma: no cover - teardown
+            pass
+
+
+def _run_plane(desc: dict, planes: Dict[str, _PlaneView], lock,
+               done_ring: ShmRing, clock, slot: int,
+               trace: Optional[deque]) -> None:
+    view = planes.get(desc["arrays"])
+    if view is None:
+        view = planes[desc["arrays"]] = _PlaneView(desc)
+    ints = view.arrays.buf.cast("i")
+    dbls = view.arrays.buf.cast("d")
+    n = view.n
+    while True:
+        sid = -1
+        with lock:
+            if ints[_PL_REMAINING] == 0:
+                break
+            h = ints[_PL_HEAD]
+            if h != ints[_PL_TAIL]:
+                sid = ints[_PL_RING0 + (h % n)]
+                ints[_PL_HEAD] = h + 1
+        if sid < 0:
+            time.sleep(2e-6)
+            continue
+        func, args, label = view.task(sid)
+        t0 = clock()
+        try:
+            func(*args)
+        except BaseException:
+            done_ring.push(frame_done_one(
+                sid, t0, clock(), DONE_PLANE_ERROR,
+                traceback.format_exc().encode("utf-8")))
+        t1 = clock()
+        dbls[view.times_i + 2 * sid] = t0
+        dbls[view.times_i + 2 * sid + 1] = t1
+        ints[view.exec_i + sid] = slot
+        with lock:
+            for k in range(view.succ_off[sid], view.succ_off[sid + 1]):
+                tgt = view.succ_tgt[k]
+                v = ints[view.latch_i + tgt] - 1
+                ints[view.latch_i + tgt] = v
+                if v == 0:
+                    t = ints[_PL_TAIL]
+                    ints[_PL_RING0 + (t % n)] = tgt
+                    ints[_PL_TAIL] = t + 1
+            ints[_PL_REMAINING] -= 1
+    del ints, dbls
+
+
+def frame_done_one(wd_id: int, t0: float, t1: float, status: int,
+                   blob: bytes) -> bytes:
+    return bytes([K_DONE]) + encode_done_batch(
+        [(wd_id, t0, t1, status, blob)])
+
+
+def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
+                 exec_fbq, done_fbq, plane_lock, epoch: float,
+                 trace_enabled: bool, trace_cap: int,
+                 parent_pid: int) -> None:
+    exec_ring = ShmRing.attach(exec_name, fallback=exec_fbq)
+    done_ring = ShmRing.attach(done_name, fallback=done_fbq)
+    trace: deque = deque(maxlen=trace_cap)
+    planes: Dict[str, _PlaneView] = {}
+
+    def clock() -> float:
+        # perf_counter is CLOCK_MONOTONIC on Linux: one epoch, every
+        # process — worker timestamps merge directly with the parent's
+        return time.perf_counter() - epoch
+
+    try:
+        idle_checks = 0
+        while True:
+            frame = exec_ring.pop()
+            if frame is None:
+                time.sleep(2e-5)
+                idle_checks += 1
+                if idle_checks >= 256:   # orphan watchdog (~5 ms cost)
+                    idle_checks = 0
+                    if os.getppid() != parent_pid:
+                        return
+                continue
+            kind = frame[0]
+            if kind == K_EXEC:
+                entries = decode_submit_batch(frame, 1)
+                dones = []
+                for wd_id, payload, label in entries:
+                    t0 = clock()
+                    status, blob = DONE_OK, b""
+                    try:
+                        func, args = pickle.loads(payload)
+                        res = func(*args)
+                        if res is not None:
+                            try:
+                                blob = pickle.dumps(res, protocol=4)
+                            except Exception:
+                                status = DONE_NO_RESULT
+                    except BaseException:
+                        status = DONE_ERROR
+                        blob = traceback.format_exc().encode("utf-8")
+                    t1 = clock()
+                    if trace_enabled:
+                        trace.append((t0, EV_START, wd_id, slot, label,
+                                      None, None))
+                        trace.append((t1, EV_END, wd_id, slot, label,
+                                      None, None))
+                    dones.append((wd_id, t0, t1, status, blob))
+                done_ring.push(bytes([K_DONE]) + encode_done_batch(dones))
+            elif kind == K_CTRL:
+                op, body = serial.parse(frame)[1]
+                if op == OP_SHUTDOWN:
+                    if trace_enabled:
+                        done_ring.push(frame_trace(list(trace)))
+                    return
+                if op == OP_ITER:
+                    _run_plane(body, planes, plane_lock, done_ring,
+                               clock, slot, trace)
+    finally:
+        for view in planes.values():
+            view.close()
+        exec_ring.close()
+        done_ring.close()
+
+
+# ---------------------------------------------------------------------------
+# parent side
+
+
+class ProcessDispatch:
+    """The placement the parent-side policies push ready tasks into.
+    Implements the ``PlacementPolicy`` surface, but ``push`` serializes
+    the task and routes it to the least-loaded worker's exec ring
+    (batched: up to ``ipc_batch`` entries per frame) instead of a local
+    deque. ``push_replay`` is the capture hook: while an iteration is
+    being replayed against a built plane, ready roots are captured
+    instead of shipped, and the plane executes them."""
+
+    wants_replay_priorities = True       # receive (wd, sid) on replay
+
+    def __init__(self, rt: "ProcessRuntime") -> None:
+        self.rt = rt
+        self.charge: Any = None          # wired by the policy ctor
+        self.tracer: Any = NULL_TRACER   # ditto
+        self.deques: List[Any] = []      # protocol compat (unused)
+        self.scope_steals: Dict[int, int] = {}
+        self.capture = False             # replay-plane capture mode
+        self.discard = False             # plane drain: swallow pushes
+        self.captured: List[Tuple[WorkDescriptor, int]] = []
+        self.record_payloads = False     # keep payloads for image builds
+        self.payload_of: Dict[int, Tuple[bytes, str]] = {}
+        self.inflight: Dict[int, Tuple[WorkDescriptor, int]] = {}
+        W = rt.num_workers
+        self._load = [0] * W
+        self._buffers: List[List[Tuple[int, bytes, str]]] = \
+            [[] for _ in range(W)]
+        self._locks = [threading.Lock() for _ in range(W)]
+        self.sub_msgs = [0] * W          # exec frames shipped, per ring
+
+    # -- PlacementPolicy surface ---------------------------------------
+    def push(self, wd: WorkDescriptor) -> None:
+        if self.capture:
+            # a live push while capturing means the iteration diverged
+            # from the recorded structure: ship the captured prefix
+            self.flush_capture_live()
+        payload = wd._proc_payload
+        if self.record_payloads:
+            self.payload_of[wd.wd_id] = (payload, wd.label)
+        load = self._load
+        widx = min(range(len(load)), key=load.__getitem__)
+        load[widx] += 1
+        self.inflight[wd.wd_id] = (wd, widx)
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_READY, wd, 2 + widx)
+        with self._locks[widx]:
+            buf = self._buffers[widx]
+            buf.append((wd.wd_id, payload, wd.label))
+            if len(buf) >= self.rt.ipc_batch:
+                self._ship(widx)
+
+    def push_replay(self, wd: WorkDescriptor, sid: int) -> None:
+        if self.discard:
+            return
+        if self.capture:
+            self.captured.append((wd, sid))
+            return
+        self.push(wd)
+
+    def pop(self, slot: int) -> Optional[WorkDescriptor]:
+        return None                      # parent threads never run bodies
+
+    def ready_count(self) -> int:
+        return len(self.inflight)
+
+    def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
+        pass
+
+    def set_replay_priorities(self, levels) -> None:
+        pass                             # workers self-schedule the plane
+
+    def clear_replay_priorities(self) -> None:
+        pass
+
+    def stats(self) -> Dict[str, int]:
+        return {"pushed": sum(self.sub_msgs)}
+
+    # -- shipping -------------------------------------------------------
+    def _ship(self, widx: int) -> None:
+        """Encode + push the worker's buffer. Caller holds its lock."""
+        buf = self._buffers[widx]
+        if not buf:
+            return
+        self._buffers[widx] = []
+        self.rt._exec_rings[widx].push(frame_exec(buf))
+        self.sub_msgs[widx] += 1
+        if self.charge is not None:
+            self.charge.ipc_submit()
+
+    def flush_all(self) -> int:
+        n = 0
+        for widx in range(len(self._buffers)):
+            if self._buffers[widx]:
+                with self._locks[widx]:
+                    if self._buffers[widx]:
+                        self._ship(widx)
+                        n += 1
+        return n
+
+    def flush_capture_live(self) -> None:
+        self.capture = False
+        cap, self.captured = self.captured, []
+        for wd, _sid in cap:
+            self.push(wd)
+
+    def task_done(self, wd_id: int) -> Optional[Tuple[WorkDescriptor,
+                                                      int]]:
+        entry = self.inflight.pop(wd_id, None)
+        if entry is not None:
+            self._load[entry[1]] -= 1
+        return entry
+
+
+class ProcessRuntime:
+    """Multi-process sibling of :class:`~repro.core.runtime.TaskRuntime`
+    (also reachable as ``TaskRuntime(backend="processes")``). Same task
+    API, same modes, same policies — bodies run in worker processes.
+
+    Constraints: task funcs/args must be picklable and module-level
+    importable; no nested tasks; no multi-tenant scopes. Defaults to
+    ``mode="sharded"`` — the configuration the GIL-escape argument is
+    about."""
+
+    backend = "processes"
+
+    def __init__(self, num_workers: int = 4, mode: str = "sharded",
+                 params: Optional[DDASTParams] = None,
+                 trace: bool = False,
+                 manager_eligible: Optional[set] = None,
+                 num_shards: Optional[int] = None,
+                 batch_size: Optional[int] = None,
+                 placement: Any = "round_robin",
+                 replay: bool = False,
+                 num_clients: int = 0,
+                 backend: str = "processes",
+                 ring_capacity: int = 1 << 20,
+                 ipc_batch: int = 8,
+                 trace_capacity: int = 1 << 14) -> None:
+        if backend != "processes":
+            raise ValueError("ProcessRuntime is the backend='processes' "
+                             "driver")
+        if mode not in PROC_MODES:
+            raise ValueError(f"mode must be one of {PROC_MODES}")
+        if num_clients:
+            raise ValueError("multi-tenant scopes are not supported by "
+                             "the process backend")
+        if placement != "round_robin":
+            raise ValueError("the process backend owns placement "
+                             "(least-loaded worker rings); only "
+                             "'round_robin' is accepted")
+        if num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        self.num_workers = num_workers
+        self.mode = mode
+        self.params = params or DDASTParams()
+        self.trace_enabled = trace
+        self.num_shards = num_shards or max(2, num_workers)
+        self.batch_size = batch_size
+        self.replay = replay
+        self.ipc_batch = max(1, ipc_batch)
+        self.ring_capacity = ring_capacity
+        self.trace_capacity = trace_capacity
+
+        # slots: 0 = reaper/manager thread, 1 = main thread, 2+i = worker
+        # process i (trace attribution only — workers hold no policy
+        # state)
+        self._trace_t0 = time.perf_counter()
+        self.tracer = TraceRecorder(
+            2 + num_workers,
+            clock=lambda: time.perf_counter() - self._trace_t0,
+            time_unit="s") if trace else NULL_TRACER
+        self._dispatch = ProcessDispatch(self)
+        self._dispatch.record_payloads = replay
+        self.placement = self._dispatch
+        self.policy: Any = make_policy(
+            mode, 2,
+            num_workers=2,
+            params=self.params,
+            placement=self._dispatch,
+            manager_eligible=manager_eligible,
+            main_slot=1,
+            num_shards=self.num_shards,
+            batch_size=batch_size,
+            replay=replay,
+            tracer=self.tracer)
+        self.dispatcher = FunctionalityDispatcher()
+        if self.policy.uses_idle_managers:
+            self.dispatcher.register("policy", self.policy.callback,
+                                     priority=10)
+
+        from ..runtime import RuntimeStats
+        self.stats = RuntimeStats()
+        self._root = WorkDescriptor(func=None, label="main")
+        self._root.state = TaskState.RUNNING
+        self._stop = threading.Event()
+        self._started = False
+        self._torn_down = False
+        self._main_thread: Optional[threading.Thread] = None
+        self._reaper: Optional[threading.Thread] = None
+        self._manager_thread: Optional[threading.Thread] = None
+        self._procs: List[Any] = []
+        self._exec_rings: List[ShmRing] = []
+        self._done_rings: List[ShmRing] = []
+        self._fbqs: List[Any] = []
+        self._errors: List[Tuple[str, str]] = []   # (where, traceback)
+        self._errors_lock = threading.Lock()
+        self._lost: Optional[str] = None           # WorkerLost message
+        self._last_check = 0.0
+        self.done_msgs = 0
+        self.ctrl_msgs = 0
+        self.iter_ipc: List[Tuple[int, int]] = []  # (submit, done) per
+        self._ipc_mark = (0, 0)                    # root quiescence
+        self._images: Dict[int, _ReplayImage] = {}
+        self._image_graphs: Dict[int, Any] = {}    # keep graphs alive
+        self._plane_lock = None
+        self._ctx = None
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    def __enter__(self) -> "ProcessRuntime":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.shutdown()
+        return False
+
+    def start(self) -> None:
+        if self._started:
+            return
+        import multiprocessing as mp
+        methods = mp.get_all_start_methods()
+        self._ctx = mp.get_context(
+            "fork" if "fork" in methods else methods[0])
+        self._trace_t0 = time.perf_counter()
+        self._main_thread = threading.current_thread()
+        # ONE lock, created before the workers exist, guards every
+        # replay-plane mutation (latches, ready ring, remaining)
+        self._plane_lock = self._ctx.Lock()
+        parent_pid = os.getpid()
+        for i in range(self.num_workers):
+            exec_fbq = self._ctx.SimpleQueue()
+            done_fbq = self._ctx.SimpleQueue()
+            exec_ring = ShmRing(self.ring_capacity, fallback=exec_fbq)
+            done_ring = ShmRing(self.ring_capacity, fallback=done_fbq)
+            self._exec_rings.append(exec_ring)
+            self._done_rings.append(done_ring)
+            self._fbqs += [exec_fbq, done_fbq]
+            p = self._ctx.Process(
+                target=_worker_main,
+                args=(i, 2 + i, exec_ring.name, done_ring.name,
+                      exec_fbq, done_fbq, self._plane_lock,
+                      self._trace_t0, self.trace_enabled,
+                      self.trace_capacity, parent_pid),
+                name=f"procworker-{i}", daemon=True)
+            p.start()
+            self._procs.append(p)
+        self._reaper = threading.Thread(target=self._reaper_loop,
+                                        name="proc-reaper", daemon=True)
+        self._reaper.start()
+        if self.policy.needs_manager_thread:
+            self._manager_thread = threading.Thread(
+                target=self._manager_loop, name="proc-manager",
+                daemon=True)
+            self._manager_thread.start()
+        self._started = True
+
+    def shutdown(self) -> None:
+        if self._torn_down:
+            return
+        err: Optional[BaseException] = None
+        if self._started and self._lost is None:
+            try:
+                self.taskwait()
+            except BaseException as e:
+                err = e
+        self._teardown()
+        self._aggregate_stats()
+        if err is not None:
+            raise err
+
+    def _teardown(self) -> None:
+        if self._torn_down:
+            return
+        self._torn_down = True
+        self._stop.set()
+        if self._reaper is not None:
+            self._reaper.join(timeout=5.0)
+        if self._manager_thread is not None:
+            self._manager_thread.join(timeout=5.0)
+        for ring in self._exec_rings:
+            try:
+                ring.push(frame_ctrl(OP_SHUTDOWN), spin_s=0.2)
+                self.ctrl_msgs += 1
+            except BufferError:          # pragma: no cover - dead worker
+                pass
+        # drain final Done/trace frames while the workers exit
+        deadline = time.perf_counter() + 5.0
+        while any(p.is_alive() for p in self._procs) \
+                and time.perf_counter() < deadline:
+            self._pump_dones()
+            time.sleep(1e-3)
+        for p in self._procs:
+            if p.is_alive():             # pragma: no cover - stuck worker
+                p.terminate()
+            p.join(timeout=2.0)
+        self._pump_dones()               # trace frames land here
+        for ring in self._exec_rings + self._done_rings:
+            ring.close()
+            ring.unlink()
+        for img in self._images.values():
+            img.close_unlink()
+        for q in self._fbqs:
+            try:
+                q.close()
+            except Exception:            # pragma: no cover - teardown
+                pass
+
+    def _aggregate_stats(self) -> None:
+        self.stats.wall_s = time.perf_counter() - self._trace_t0
+        self.stats.ddast_callback_entries = self.policy.callback_entries
+        st = self.policy.stats()
+        self.stats.messages_processed = st["messages_processed"]
+        self.stats.lock_acquisitions = st["lock_acquisitions"]
+        self.stats.lock_wait_s = st["lock_wait_s"]
+        self.stats.max_in_graph = st["max_in_graph"]
+        self.stats.total_edges = st["total_edges"]
+        self.stats.shard_messages = st.get("shard_messages", [])
+        self.stats.shard_lock_wait_s = st.get("shard_lock_wait_s", [])
+        self.stats.ipc_submit_msgs = sum(self._dispatch.sub_msgs)
+        self.stats.ipc_done_msgs = self.done_msgs
+        self.stats.ipc_ctrl_msgs = self.ctrl_msgs
+        self.stats.ipc_iter = list(self.iter_ipc)
+        if self.tracer.enabled:
+            self.stats.events = self.tracer.events()
+            self.stats.trace_dropped = self.tracer.dropped
+        rep = st.get("replay")
+        if rep:
+            self.stats.replay_iterations = rep["replay_iterations"]
+            self.stats.replayed_tasks = rep["replayed_tasks"]
+            self.stats.replay_invalidations = rep["invalidations"]
+            self.stats.replay_cache_hits = rep["cache_hits"]
+
+    def shm_names(self) -> List[str]:
+        """Every shared-memory segment this runtime owns (rings + replay
+        planes) — the leak-check hook for tests."""
+        names = [r.name for r in self._exec_rings + self._done_rings]
+        for img in self._images.values():
+            names += img.shm_names()
+        return names
+
+    # ------------------------------------------------------------------
+    # task API
+    def task(self, func, *args, deps=(), label: str = "task"
+             ) -> WorkDescriptor:
+        if not self._started:
+            raise RuntimeError("ProcessRuntime.task() before start(): "
+                               "use it as a context manager")
+        if threading.current_thread() is not self._main_thread:
+            raise RuntimeError("the process backend supports submissions "
+                               "from the starting thread only (no nested "
+                               "tasks, no client threads)")
+        try:
+            payload = pickle.dumps((func, args), protocol=4)
+        except Exception as e:
+            raise ValueError(
+                f"process backend requires picklable task funcs/args "
+                f"(task {label!r}): {e}") from e
+        from ..runtime import _parse_deps
+        wd = WorkDescriptor(func=func, args=args, deps=_parse_deps(deps),
+                            label=label, parent=self._root)
+        wd._proc_payload = payload
+        self._maybe_enter_capture()
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_CREATED, wd, 1)
+        self.policy.submit(wd, 1)
+        self._after_submit_capture_check()
+        return wd
+
+    def taskwait(self) -> None:
+        pol = self.policy
+        d = self._dispatch
+        pol.flush(0)
+        pol.flush(1)
+        if d.capture:
+            g = getattr(pol, "replay_graph", None)
+            img = self._images.get(id(g)) if g is not None else None
+            if img is not None and pol.steady_iteration_complete():
+                self._plane_iteration(img)
+                return
+            d.flush_capture_live()
+        d.flush_all()
+        while True:
+            if self._lost is not None:
+                raise WorkerLost(self._lost)
+            if self._root.num_children_alive == 0 and not pol.pending() \
+                    and not d.inflight:
+                break
+            worked = pol.callback(1) if pol.uses_idle_managers else 0
+            if pol.pending() and not worked:
+                worked += pol.drain_all()
+            worked += d.flush_all()
+            if not worked:
+                time.sleep(2e-5)
+        self._quiesce()
+        self._raise_task_errors()
+
+    # ------------------------------------------------------------------
+    # replay-plane machinery
+    def _maybe_enter_capture(self) -> None:
+        if not self.replay:
+            return
+        d = self._dispatch
+        if d.capture or d.captured:
+            return
+        pol = self.policy
+        if getattr(pol, "replay_state", None) != REPLAYING:
+            return
+        if pol._diverged or pol._iter_started:
+            return                       # only at an iteration boundary
+        g = pol.replay_graph
+        if g is not None and id(g) in self._images:
+            d.capture = True
+
+    def _after_submit_capture_check(self) -> None:
+        d = self._dispatch
+        if not d.capture:
+            return
+        pol = self.policy
+        g = getattr(pol, "replay_graph", None)
+        if pol._diverged or pol.replay_state == RECORDING \
+                or g is None or id(g) not in self._images:
+            d.flush_capture_live()
+
+    def _plane_iteration(self, img: _ReplayImage) -> None:
+        """Steady-state replayed iteration: every task of the frozen
+        graph runs worker-side off the shared plane. Cross-process cost:
+        one CTRL(ITER) frame per worker — zero Submit/Done messages."""
+        pol = self.policy
+        d = self._dispatch
+        img.reset()
+        for widx, ring in enumerate(self._exec_rings):
+            ring.push(frame_ctrl(OP_ITER, dict(img.desc)))
+            self.ctrl_msgs += 1
+        while img.remaining() != 0:
+            if self._lost is not None:
+                stuck = ", ".join(img.unfinished_labels()[:4])
+                raise WorkerLost(f"{self._lost} (replay plane stalled; "
+                                 f"unfinished: {stuck})")
+            time.sleep(2e-5)
+        d.capture = False
+        d.captured = []
+        d.discard = True
+        try:
+            tr = self.tracer
+            for sid in range(img.n):
+                wd = pol._iter_wds[sid]
+                t0, t1 = img.times(sid)
+                wd.exec_dur = t1 - t0
+                wd.exec_span = (t0, t1)
+                wd.mark_finished()
+                if tr.enabled:
+                    slot = 2 + img.exec_slot(sid)
+                    tr.ingest([(t0, EV_START, wd.wd_id, slot, wd.label,
+                                wd.scope, None),
+                               (t1, EV_END, wd.wd_id, slot, wd.label,
+                                wd.scope, None)])
+                pol.complete(wd, 0)
+                self.stats.tasks_executed += 1
+        finally:
+            d.discard = False
+        self._quiesce()
+        self._raise_task_errors()
+
+    def _quiesce(self) -> None:
+        pol = self.policy
+        sid_snapshot = None
+        if self.replay and getattr(pol, "replay_state", None) == RECORDING:
+            sid_snapshot = dict(pol._rec_sid_of)
+        pol.notify_quiescent(True)
+        if self.tracer.enabled:
+            self.tracer.quiesce(
+                {"scope": None,
+                 "replay_iterations": replay_iterations_of(pol, None)})
+        self.dispatcher.notify_quiescent(1)
+        sub = sum(self._dispatch.sub_msgs)
+        done = self.done_msgs
+        self.iter_ipc.append((sub - self._ipc_mark[0],
+                              done - self._ipc_mark[1]))
+        self._ipc_mark = (sub, done)
+        if sid_snapshot is not None:
+            self._maybe_build_image(sid_snapshot)
+
+    def _maybe_build_image(self, sid_snapshot: Dict[int, int]) -> None:
+        """A recording may just have frozen: materialize its replay
+        plane in shared memory. The process backend admits no nested
+        tasks, so every recording is flat (one namespace) and the
+        recording's sid numbering is exactly the frozen graph's."""
+        pol = self.policy
+        d = self._dispatch
+        payload_of, d.payload_of = d.payload_of, {}
+        if pol.replay_state != REPLAYING:
+            return
+        g = pol.replay_graph
+        if g is None or id(g) in self._images:
+            self._prune_images()
+            return
+        if len(sid_snapshot) != g.n:
+            return                       # not this recording's graph
+        entries: List[Optional[Tuple[bytes, str]]] = [None] * g.n
+        for wd_id, sid in sid_snapshot.items():
+            entries[sid] = payload_of.get(wd_id)
+        if any(e is None for e in entries):
+            return                       # payload missing: stay live
+        self._images[id(g)] = _ReplayImage(g, entries)
+        self._image_graphs[id(g)] = g
+        self._prune_images()
+
+    def _prune_images(self) -> None:
+        pol = self.policy
+        cache = getattr(pol, "_cache", {})
+        alive = {id(g) for g in cache.values()}
+        g = getattr(pol, "replay_graph", None)
+        if g is not None:
+            alive.add(id(g))
+        for key in list(self._images):
+            if key not in alive:
+                self._images.pop(key).close_unlink()
+                self._image_graphs.pop(key, None)
+
+    # ------------------------------------------------------------------
+    # reaper: the single consumer of every Done ring
+    def _reaper_loop(self) -> None:
+        pol = self.policy
+        while not self._stop.is_set():
+            n = self._pump_dones()
+            n += self._dispatch.flush_all()
+            if pol.uses_idle_managers:
+                n += pol.callback(0)
+            self._check_workers()
+            if not n:
+                time.sleep(2e-5)
+
+    def _pump_dones(self) -> int:
+        n = 0
+        for ring in self._done_rings:
+            while True:
+                frame = ring.pop()
+                if frame is None:
+                    break
+                n += 1
+                self._handle_frame(frame)
+        return n
+
+    def _handle_frame(self, frame: bytes) -> None:
+        kind = frame[0]
+        if kind == K_TRACE:
+            if self.tracer.enabled:
+                self.tracer.ingest(serial.parse(frame)[1])
+            return
+        if kind != K_DONE:               # pragma: no cover - defensive
+            return
+        self.done_msgs += 1
+        if self.policy.charge is not None:
+            self.policy.charge.ipc_done()
+        for wd_id, t0, t1, status, blob in decode_done_batch(frame, 1):
+            if status == DONE_PLANE_ERROR:
+                with self._errors_lock:
+                    self._errors.append(
+                        (f"replay sid {wd_id}",
+                         blob.decode("utf-8", "replace")))
+                continue
+            entry = self._dispatch.task_done(wd_id)
+            if entry is None:            # pragma: no cover - defensive
+                continue
+            wd, _widx = entry
+            wd.exec_dur = t1 - t0
+            wd.exec_span = (t0, t1)
+            if status == DONE_OK and blob:
+                try:
+                    wd.result = pickle.loads(blob)
+                except Exception:        # pragma: no cover - defensive
+                    pass
+            elif status == DONE_ERROR:
+                with self._errors_lock:
+                    self._errors.append(
+                        (wd.label, blob.decode("utf-8", "replace")))
+            wd.mark_finished()
+            self.policy.complete(wd, 0)
+            self.stats.tasks_executed += 1
+
+    def _check_workers(self) -> None:
+        now = time.perf_counter()
+        if now - self._last_check < 5e-3 or self._lost is not None:
+            return
+        self._last_check = now
+        for widx, p in enumerate(self._procs):
+            if p.is_alive():
+                continue
+            stuck = [wd.label for wd, w in self._dispatch.inflight.values()
+                     if w == widx]
+            self._lost = (
+                f"worker process {widx} (pid {p.pid}, exitcode "
+                f"{p.exitcode}) died with {len(stuck)} task(s) in "
+                f"flight: {', '.join(stuck[:4]) or 'none'}")
+            return
+
+    def _raise_task_errors(self) -> None:
+        with self._errors_lock:
+            if not self._errors:
+                return
+            errors, self._errors = self._errors, []
+        where, tb = errors[0]
+        more = f" (+{len(errors) - 1} more)" if len(errors) > 1 else ""
+        raise TaskFailed(f"task {where!r} raised in a worker "
+                         f"process{more}:\n{tb}")
+
+    def _manager_loop(self) -> None:
+        while not self._stop.is_set():
+            if self.policy.drain_all() == 0:
+                time.sleep(1e-6)
+
+    # -- probes mirroring TaskRuntime ----------------------------------
+    def ready_count(self) -> int:
+        return self._dispatch.ready_count()
+
+    def in_graph_count(self) -> int:
+        return self.policy.in_graph()

@@ -1,0 +1,228 @@
+"""SPSC byte rings over ``multiprocessing.shared_memory``.
+
+The process backend's mailboxes (paper §3.1, per-worker queue pairs)
+must cross an address-space boundary, so the in-process ``SPSCQueue``
+(a plain deque) is replaced by a shared-memory ring of length-prefixed
+frames:
+
+    [ head u64 | tail u64 |  data region (capacity bytes) ... ]
+
+``head``/``tail`` are *monotonic byte counters* (never wrapped); the
+data offset is ``counter % capacity``. The producer owns ``tail``, the
+consumer owns ``head`` — single writer per cursor, so no cross-process
+lock is needed. 8-byte aligned cursor stores are effectively atomic on
+x86-64/ARM64 (CPython writes them with one memcpy), and the payload is
+fully written *before* the tail store that publishes it; on strongly
+ordered x86 that suffices, and in practice the GIL release around the
+syscall-free memoryview writes keeps ARM happy too. This is the same
+"good-enough SPSC" contract real runtimes (e.g. AMReX/Perilla forwarders)
+use for worker mailboxes.
+
+Frames are ``u32 length`` + payload, always contiguous: when a frame
+does not fit before the end of the data region the producer writes a
+``WRAP`` marker (or, with < 4 bytes left, nothing) and skips to the
+region start; the consumer mirrors the skip. Frames larger than half
+the capacity — or pushes that time out against a full ring — take the
+**fallback lane**: the raw frame goes through a ``SimpleQueue`` (pipe)
+and a 4-byte ``FALLBACK`` marker keeps its position in the ring, so
+FIFO order is preserved even for payloads the ring cannot hold.
+"""
+from __future__ import annotations
+
+import struct
+import time
+from multiprocessing import shared_memory
+from typing import Optional
+
+_U64 = struct.Struct("<Q")
+_U32 = struct.Struct("<I")
+
+_HDR = 16                      # head u64 @0, tail u64 @8
+WRAP = 0xFFFFFFFF              # skip to data-region start
+FALLBACK = 0xFFFFFFFE          # pop one frame from the fallback queue
+
+# one frame must leave room for a trailing marker; keep it conservative
+_MAX_INLINE_FRAC = 2           # inline frames <= capacity // 2
+
+
+def attach_shm(name: str) -> shared_memory.SharedMemory:
+    """Attach to an existing segment without adopting ownership. On
+    CPython < 3.13 ``SharedMemory(name=...)`` re-registers the segment
+    with the ``resource_tracker`` (bpo-39959); that is harmless here
+    because every attacher is a ``multiprocessing`` child of the
+    creator, so the whole tree shares ONE tracker process and the
+    re-register is a set-add no-op. Do NOT unregister (the tempting
+    bpo-39959 workaround): that would strip the creator's own tracker
+    entry and turn its eventual ``unlink()`` into tracker-side KeyError
+    noise. The creator remains the sole unlinker."""
+    return shared_memory.SharedMemory(name=name)
+
+
+class ShmRing:
+    """One direction of a worker mailbox. Construct with ``create=True``
+    in the owning (parent) process; workers attach with
+    :meth:`attach`. Exactly one producer process/thread and one consumer
+    process/thread; the parent side serializes its multiple producer
+    threads externally (``ProcessDispatch`` holds one lock per ring)."""
+
+    def __init__(self, capacity: int = 1 << 20, *, create: bool = True,
+                 name: Optional[str] = None, fallback=None) -> None:
+        if create and capacity < 64:
+            raise ValueError("capacity must be >= 64 bytes")
+        if create:
+            self.shm = shared_memory.SharedMemory(
+                create=True, size=_HDR + capacity)
+            self.capacity = capacity
+            self.shm.buf[:_HDR] = b"\0" * _HDR
+        else:
+            self.shm = attach_shm(name)
+            self.capacity = self.shm.size - _HDR
+        self.name = self.shm.name
+        self.owner = create
+        self.fallback = fallback         # SimpleQueue for oversize frames
+        # local-side counters (not shared; each side counts its own ops)
+        self.pushed = 0
+        self.popped = 0
+        self.fallbacks = 0
+
+    @classmethod
+    def attach(cls, name: str, fallback=None) -> "ShmRing":
+        return cls(create=False, name=name, fallback=fallback)
+
+    # -- cursor access --------------------------------------------------
+    def _head(self) -> int:
+        return _U64.unpack_from(self.shm.buf, 0)[0]
+
+    def _tail(self) -> int:
+        return _U64.unpack_from(self.shm.buf, 8)[0]
+
+    def _set_head(self, v: int) -> None:
+        _U64.pack_into(self.shm.buf, 0, v)
+
+    def _set_tail(self, v: int) -> None:
+        _U64.pack_into(self.shm.buf, 8, v)
+
+    def __len__(self) -> int:
+        return self._tail() - self._head()
+
+    # -- producer -------------------------------------------------------
+    def try_push(self, frame: bytes) -> bool:
+        """Append one frame if it fits (inline or as a fallback marker
+        when a fallback queue is wired and the frame is oversize).
+        Returns False when the ring lacks space right now."""
+        n = len(frame)
+        if self.fallback is not None and \
+                n + 4 > self.capacity // _MAX_INLINE_FRAC:
+            return self._push_fallback(frame)
+        return self._push_inline(frame)
+
+    def push(self, frame: bytes, spin_s: float = 0.5) -> None:
+        """Blocking append: spin (with micro-sleeps) until the consumer
+        frees space, then degrade to the fallback lane if one exists.
+        Raises BufferError only when there is no fallback and the ring
+        stays full for ``spin_s`` (a dead consumer)."""
+        deadline = time.perf_counter() + spin_s
+        while True:
+            if self.try_push(frame):
+                return
+            if time.perf_counter() > deadline:
+                if self.fallback is not None and \
+                        self._push_fallback(frame, spin_s):
+                    return
+                raise BufferError(
+                    f"ring {self.name} full for {spin_s}s "
+                    f"(consumer dead?)")
+            time.sleep(5e-6)
+
+    def _push_inline(self, frame: bytes) -> bool:
+        n = len(frame)
+        cap = self.capacity
+        if n + 4 > cap // _MAX_INLINE_FRAC:
+            return False                 # never fits: caller's problem
+        head, tail = self._head(), self._tail()
+        free = cap - (tail - head)
+        off = tail % cap
+        contig = cap - off
+        if contig < n + 4:
+            # frame would straddle the region end: burn `contig` bytes
+            # (with a WRAP marker when the length field fits)
+            if free < contig + n + 4:
+                return False
+            if contig >= 4:
+                _U32.pack_into(self.shm.buf, _HDR + off, WRAP)
+            tail += contig
+            off = 0
+        elif free < n + 4:
+            return False
+        _U32.pack_into(self.shm.buf, _HDR + off, n)
+        self.shm.buf[_HDR + off + 4:_HDR + off + 4 + n] = frame
+        self._set_tail(tail + 4 + n)     # publish AFTER the payload
+        self.pushed += 1
+        return True
+
+    def _push_fallback(self, frame: bytes, spin_s: float = 0.5) -> bool:
+        """Route the frame through the pipe, keeping its FIFO slot with
+        an in-ring marker (put BEFORE the marker: the consumer's get()
+        can then never block on an unsent item)."""
+        self.fallback.put(frame)
+        deadline = time.perf_counter() + spin_s
+        cap = self.capacity
+        while True:
+            head, tail = self._head(), self._tail()
+            off = tail % cap
+            contig = cap - off
+            if contig < 4 and cap - (tail - head) >= contig + 4:
+                tail += contig           # markerless end-of-region skip
+                off, contig = 0, cap
+            if contig >= 4 and cap - (tail - head) >= 4:
+                _U32.pack_into(self.shm.buf, _HDR + off, FALLBACK)
+                self._set_tail(tail + 4)
+                self.pushed += 1
+                self.fallbacks += 1
+                return True
+            if time.perf_counter() > deadline:
+                return False
+            time.sleep(5e-6)
+
+    # -- consumer -------------------------------------------------------
+    def pop(self) -> Optional[bytes]:
+        """Dequeue one frame, or None when the ring is empty."""
+        while True:
+            head, tail = self._head(), self._tail()
+            if head == tail:
+                return None
+            cap = self.capacity
+            off = head % cap
+            contig = cap - off
+            if contig < 4:               # producer skipped, markerless
+                self._set_head(head + contig)
+                continue
+            n = _U32.unpack_from(self.shm.buf, _HDR + off)[0]
+            if n == WRAP:
+                self._set_head(head + contig)
+                continue
+            if n == FALLBACK:
+                self._set_head(head + 4)
+                self.popped += 1
+                return self.fallback.get()
+            frame = bytes(self.shm.buf[_HDR + off + 4:
+                                       _HDR + off + 4 + n])
+            self._set_head(head + 4 + n)
+            self.popped += 1
+            return frame
+
+    # -- lifecycle ------------------------------------------------------
+    def close(self) -> None:
+        try:
+            self.shm.close()
+        except Exception:                # pragma: no cover - teardown
+            pass
+
+    def unlink(self) -> None:
+        """Owner-side destroy. Safe to call once; attachers never do."""
+        if not self.owner:
+            return
+        try:
+            self.shm.unlink()
+        except FileNotFoundError:        # pragma: no cover - teardown
+            pass

@@ -116,6 +116,15 @@ class RuntimeStats:
     # {tasks, weight, iterations, wall_s, admitted, admission_waits,
     #  max_queued, replay_iterations, replayed_tasks}.
     scopes: Dict[str, dict] = field(default_factory=dict)
+    # Process-backend IPC counters (zero under threads): ring frames
+    # shipped each way (Submit batches, Done batches, control frames)
+    # and the per-root-quiescence (submit, done) frame deltas — the
+    # replay steady-state 0-message gate in bench_procs.py reads
+    # ipc_iter.
+    ipc_submit_msgs: int = 0
+    ipc_done_msgs: int = 0
+    ipc_ctrl_msgs: int = 0
+    ipc_iter: List[Tuple[int, int]] = field(default_factory=list)
 
 
 # Backward-compatible alias: the lock lives in queues.py so every layer
@@ -131,6 +140,17 @@ class TaskRuntime:
             rt.taskwait()
     """
 
+    def __new__(cls, *args, backend: str = "threads", **kwargs):
+        # Backend dispatch: ``TaskRuntime(backend="processes")`` builds
+        # the multi-process sibling driver (core.procs). ProcessRuntime
+        # is deliberately NOT a subclass — it returns fully constructed
+        # from here, so this __init__ never runs on it and the two
+        # drivers cannot half-share thread state by accident.
+        if cls is TaskRuntime and backend == "processes":
+            from .procs import ProcessRuntime
+            return ProcessRuntime(*args, backend=backend, **kwargs)
+        return super().__new__(cls)
+
     def __init__(self, num_workers: int = 4, mode: str = "ddast",
                  params: Optional[DDASTParams] = None,
                  trace: bool = False,
@@ -139,7 +159,10 @@ class TaskRuntime:
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
                  replay: bool = False,
-                 num_clients: int = 0) -> None:
+                 num_clients: int = 0,
+                 backend: str = "threads") -> None:
+        if backend not in ("threads", "processes"):
+            raise ValueError("backend must be 'threads' or 'processes'")
         if mode not in _MODES:
             raise ValueError(f"mode must be one of {_MODES}")
         if num_shards is not None and num_shards < 1:

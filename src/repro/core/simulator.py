@@ -111,6 +111,14 @@ class SimCosts:
     # traced-vs-untraced overhead gate in bench_traces.py measures a
     # real cost instead of zero by construction.
     trace_event: float = 0.05
+    # Cross-process mailbox traffic (core.procs ring buffers), so the
+    # simulator can model backend="processes" before buying cores: one
+    # Submit batch encoded + pushed onto an exec ring, and one Done
+    # batch popped + decoded off a done ring. Measure on the current
+    # host with ``bench_contention.py --calibrate`` (real shm-ring
+    # round-trips against an echo process).
+    ipc_submit_us: float = 12.0  # encode_submit_batch + ring push
+    ipc_done_us: float = 8.0     # ring pop + decode_done_batch
 
 
 @dataclass

@@ -90,6 +90,9 @@ class NullTraceRecorder:
     def quiesce(self, data=None) -> None:
         pass
 
+    def ingest(self, events) -> None:
+        pass
+
     def events(self) -> List[TraceEvent]:
         return []
 
@@ -147,6 +150,16 @@ class TraceRecorder:
 
     def quiesce(self, data=None) -> None:
         self.mgr_event(EV_QUIESCE, -1, data)
+
+    def ingest(self, events) -> None:
+        """Merge pre-stamped tuples recorded in another process (the
+        process backend's per-worker rings, shipped at shutdown, and its
+        replay-plane start/end stamps). Tuples must already be in the
+        standard 7-field schema on this recorder's clock; the slot is
+        read from the tuple, so worker events land in their own rings
+        and the usual overflow accounting applies."""
+        for e in events:
+            self._emit(e[3], tuple(e))
 
     # -- consumers (cold path) -----------------------------------------
     @property
