@@ -160,8 +160,14 @@ class _ReplayImage:
 
     def reset(self) -> int:
         """Arm the plane for one iteration; returns the new generation.
-        Runs at a quiescent point (workers idle), before the ITER
-        broadcast, so no lock is needed."""
+        Runs at a quiescent point (remaining==0, no task in flight),
+        before the ITER broadcast — but the caller must hold the plane
+        lock: a straggler worker can still be inside ``_run_plane``
+        (micro-sleeping in its empty-ring branch) and re-read the plane
+        mid-reset. Workers only read remaining/head/tail under the same
+        lock, so the lock's barriers guarantee they observe either the
+        fully-old or fully-new plane — on any memory model, not just
+        x86-TSO."""
         ints = self.arrays.buf.cast("i")
         dbls = self.arrays.buf.cast("d")
         off = self.off
@@ -322,6 +328,9 @@ def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
                  parent_pid: int) -> None:
     exec_ring = ShmRing.attach(exec_name, fallback=exec_fbq)
     done_ring = ShmRing.attach(done_name, fallback=done_fbq)
+    # the Done ring's consumer is the parent's reaper thread: keep
+    # pushing while the parent process lives
+    done_ring.consumer_alive = lambda: os.getppid() == parent_pid
     trace: deque = deque(maxlen=trace_cap)
     planes: Dict[str, _PlaneView] = {}
 
@@ -521,7 +530,7 @@ class ProcessRuntime:
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
                  replay: bool = False,
-                 num_clients: int = 0,
+                 num_clients: int = 0, *,
                  backend: str = "processes",
                  ring_capacity: int = 1 << 20,
                  ipc_batch: int = 8,
@@ -644,6 +653,9 @@ class ProcessRuntime:
                       self.trace_capacity, parent_pid),
                 name=f"procworker-{i}", daemon=True)
             p.start()
+            # a full exec ring + live worker means a slow consumer (long
+            # task body), not a dead one: let push() keep waiting
+            exec_ring.consumer_alive = p.is_alive
             self._procs.append(p)
         self._reaper = threading.Thread(target=self._reaper_loop,
                                         name="proc-reaper", daemon=True)
@@ -680,6 +692,10 @@ class ProcessRuntime:
             self._manager_thread.join(timeout=5.0)
         for ring in self._exec_rings:
             try:
+                # drop the liveness probe for teardown: a stuck-but-
+                # alive worker must not spin this push forever — it is
+                # terminated just below anyway
+                ring.consumer_alive = None
                 ring.push(frame_ctrl(OP_SHUTDOWN), spin_s=0.2)
                 self.ctrl_msgs += 1
             except BufferError:          # pragma: no cover - dead worker
@@ -828,7 +844,8 @@ class ProcessRuntime:
         one CTRL(ITER) frame per worker — zero Submit/Done messages."""
         pol = self.policy
         d = self._dispatch
-        img.reset()
+        with self._plane_lock:
+            img.reset()
         for widx, ring in enumerate(self._exec_rings):
             ring.push(frame_ctrl(OP_ITER, dict(img.desc)))
             self.ctrl_msgs += 1

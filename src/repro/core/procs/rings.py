@@ -5,9 +5,14 @@ must cross an address-space boundary, so the in-process ``SPSCQueue``
 (a plain deque) is replaced by a shared-memory ring of length-prefixed
 frames:
 
-    [ head u64 | tail u64 |  data region (capacity bytes) ... ]
+    [ head u64 | tail u64 | capacity u64 | data region ... ]
 
-``head``/``tail`` are *monotonic byte counters* (never wrapped); the
+The creator writes the *logical* capacity into the header and attachers
+read it back from there — never from ``shm.size``, which platforms that
+page-round segments (macOS ``ftruncate``) report larger than requested;
+a derived capacity would differ between the two sides and corrupt the
+ring at the first wrap. ``head``/``tail`` are *monotonic byte counters*
+(never wrapped); the
 data offset is ``counter % capacity``. The producer owns ``tail``, the
 consumer owns ``head`` — single writer per cursor, so no cross-process
 lock is needed. 8-byte aligned cursor stores are effectively atomic on
@@ -37,7 +42,7 @@ from typing import Optional
 _U64 = struct.Struct("<Q")
 _U32 = struct.Struct("<I")
 
-_HDR = 16                      # head u64 @0, tail u64 @8
+_HDR = 24                      # head u64 @0, tail u64 @8, capacity @16
 WRAP = 0xFFFFFFFF              # skip to data-region start
 FALLBACK = 0xFFFFFFFE          # pop one frame from the fallback queue
 
@@ -74,12 +79,16 @@ class ShmRing:
                 create=True, size=_HDR + capacity)
             self.capacity = capacity
             self.shm.buf[:_HDR] = b"\0" * _HDR
+            _U64.pack_into(self.shm.buf, 16, capacity)
         else:
             self.shm = attach_shm(name)
-            self.capacity = self.shm.size - _HDR
+            # read the creator's logical capacity from the header:
+            # shm.size may be page-rounded above what was requested
+            self.capacity = _U64.unpack_from(self.shm.buf, 16)[0]
         self.name = self.shm.name
         self.owner = create
         self.fallback = fallback         # SimpleQueue for oversize frames
+        self.consumer_alive = None       # optional liveness probe; see push
         # local-side counters (not shared; each side counts its own ops)
         self.pushed = 0
         self.popped = 0
@@ -119,8 +128,13 @@ class ShmRing:
     def push(self, frame: bytes, spin_s: float = 0.5) -> None:
         """Blocking append: spin (with micro-sleeps) until the consumer
         frees space, then degrade to the fallback lane if one exists.
-        Raises BufferError only when there is no fallback and the ring
-        stays full for ``spin_s`` (a dead consumer)."""
+        A ring that stays full past ``spin_s`` is not by itself a dead
+        consumer — a worker grinding through a long task body with a
+        full exec ring is alive and will drain eventually — so when a
+        ``consumer_alive`` probe is wired (the driver points it at
+        ``Process.is_alive`` / a getppid check) the producer keeps
+        waiting while it returns True. BufferError is raised only when
+        the probe says dead, or no probe exists to say otherwise."""
         deadline = time.perf_counter() + spin_s
         while True:
             if self.try_push(frame):
@@ -129,6 +143,10 @@ class ShmRing:
                 if self.fallback is not None and \
                         self._push_fallback(frame, spin_s):
                     return
+                if self.consumer_alive is not None \
+                        and self.consumer_alive():
+                    deadline = time.perf_counter() + spin_s
+                    continue             # slow consumer, not a dead one
                 raise BufferError(
                     f"ring {self.name} full for {spin_s}s "
                     f"(consumer dead?)")
@@ -162,9 +180,17 @@ class ShmRing:
 
     def _push_fallback(self, frame: bytes, spin_s: float = 0.5) -> bool:
         """Route the frame through the pipe, keeping its FIFO slot with
-        an in-ring marker (put BEFORE the marker: the consumer's get()
-        can then never block on an unsent item)."""
-        self.fallback.put(frame)
+        an in-ring marker. Ordering matters, twice over. The marker is
+        secured and published BEFORE the put(): (a) a timed-out attempt
+        then leaves NOTHING behind — enqueueing first would orphan the
+        queue entry on timeout and the caller's retry would enqueue a
+        duplicate, desynchronizing every later FALLBACK pop from its
+        frame; (b) put() on a ``multiprocessing.SimpleQueue`` blocks
+        once the frame outgrows the pipe buffer and only unblocks when
+        the consumer get()s — the consumer must already be able to see
+        the marker that tells it to, or both sides deadlock. The
+        consumer's get() at worst blocks briefly on a put() still in
+        flight, which is harmless."""
         deadline = time.perf_counter() + spin_s
         cap = self.capacity
         while True:
@@ -177,6 +203,7 @@ class ShmRing:
             if contig >= 4 and cap - (tail - head) >= 4:
                 _U32.pack_into(self.shm.buf, _HDR + off, FALLBACK)
                 self._set_tail(tail + 4)
+                self.fallback.put(frame)  # put AFTER the marker publish
                 self.pushed += 1
                 self.fallbacks += 1
                 return True

@@ -159,8 +159,11 @@ class TaskRuntime:
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
                  replay: bool = False,
-                 num_clients: int = 0,
+                 num_clients: int = 0, *,
                  backend: str = "threads") -> None:
+        # keyword-only on purpose: __new__ dispatches on the *keyword*
+        # backend, so a positional value would silently select the
+        # threaded driver — make that a TypeError instead
         if backend not in ("threads", "processes"):
             raise ValueError("backend must be 'threads' or 'processes'")
         if mode not in _MODES:

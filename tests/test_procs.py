@@ -292,6 +292,9 @@ def test_backend_dispatch_and_validation():
     rt.shutdown()
     with pytest.raises(ValueError, match="backend"):
         TaskRuntime(backend="sidecars")
+    with pytest.raises(TypeError):       # backend is keyword-only
+        TaskRuntime(1, "sync", None, False, None, None, None,
+                    "round_robin", False, 0, "processes")
     with pytest.raises(ValueError, match="scopes"):
         ProcessRuntime(num_clients=2)
     with pytest.raises(ValueError, match="mode"):
@@ -345,6 +348,66 @@ def test_ring_oversize_falls_back_in_order():
         assert ring.pop() == big         # FIFO preserved via marker
         assert ring.pop() == b"last"
         assert ring.fallbacks == 1
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_ring_attach_reads_header_capacity():
+    ring = ShmRing(capacity=256)
+    try:
+        peer = ShmRing.attach(ring.name)
+        # logical capacity comes from the header, never from shm.size
+        # (page-rounded on some platforms)
+        assert peer.capacity == ring.capacity == 256
+        peer.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_fallback_timeout_orphans_nothing():
+    import queue
+
+    fb = queue.SimpleQueue()
+    ring = ShmRing(capacity=64, fallback=fb)
+    try:
+        while ring.try_push(b"x" * 12):  # 16-byte frames pack the ring
+            pass                         # solid: no room for a marker
+        big = b"B" * 60                  # oversize: fallback lane only
+        assert ring._push_fallback(big, spin_s=0.01) is False
+        assert fb.empty()                # timed out without enqueueing
+        with pytest.raises(BufferError):
+            ring.push(big, spin_s=0.01)  # retries may not double-enqueue
+        assert fb.empty()
+        assert ring.fallbacks == 0
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_push_waits_for_slow_but_live_consumer():
+    ring = ShmRing(capacity=64)
+    try:
+        while ring.try_push(b"x" * 12):
+            pass
+        ring.consumer_alive = lambda: False
+        with pytest.raises(BufferError):
+            ring.push(b"y" * 12, spin_s=0.01)
+
+        def probe():                     # live consumer making progress
+            ring.pop()
+            return True
+
+        ring.consumer_alive = probe
+        ring.push(b"y" * 12, spin_s=0.01)   # pre-fix: BufferError
+        last = None
+        while True:
+            frame = ring.pop()
+            if frame is None:
+                break
+            last = frame
+        assert last == b"y" * 12
     finally:
         ring.close()
         ring.unlink()
