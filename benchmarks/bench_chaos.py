@@ -1,0 +1,251 @@
+"""Fault-tolerance benchmark: the price of surviving worker kills.
+
+Two sections, both driven by the deterministic
+:class:`~repro.core.procs.chaos.FaultPlan` harness:
+
+  correctness   an idempotent ping-pong stencil (assign-only bodies,
+                physical-cell region keys) under a seeded k=2 kill
+                plan — the surviving run must equal the serial oracle
+                bit-for-bit with zero leaked shm segments.
+  recovery      the CPU-bound 8-worker spin graph (independent inout
+                chains) run fault-free and again under a seeded k=2
+                kill plan with retries: every task must still execute,
+                and the faulty makespan must stay within the recovery
+                budget of the clean one.
+
+CI gates (--smoke, exit status):
+  (a) kill-plan run serial-exact + no leaked shm — always enforced;
+  (b) faulty wall <= 2.0x fault-free wall on the spin graph with every
+      task executed — always enforced (both runs share the host, so
+      load noise cancels in the ratio).
+
+Standalone:
+
+    PYTHONPATH=src python benchmarks/bench_chaos.py            # full
+    PYTHONPATH=src python benchmarks/bench_chaos.py --smoke    # CI
+    ... [--out BENCH_chaos.json]
+
+or inside ``python -m benchmarks.run --only chaos``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import FaultPlan, ProcessRuntime  # noqa: E402
+from repro.core.procs import apps  # noqa: E402
+
+GATE = {"workers": 8, "chains": 8, "kills": 2, "recovery_ratio": 2.0}
+
+FULL = {"chain_len": 24, "spin_us": 15000.0, "repeats": 3,
+        "pp_cells": 8, "pp_stages": 8, "pp_spin_us": 1500.0,
+        "seeds": (1, 2, 3)}
+SMOKE = {"chain_len": 30, "spin_us": 5000.0, "repeats": 2,
+         "pp_cells": 8, "pp_stages": 6, "pp_spin_us": 1000.0,
+         "seeds": (1,)}
+
+
+# ------------------------------------------------------------ oracle app
+# Idempotent ping-pong stencil (same contract as tests/test_chaos.py):
+# generation g ASSIGNS its cell of buffer (g+1)%2 from buffer g%2, and
+# regions key physical cells, so a retried body recomputes the same
+# value — the at-least-once contract that makes kill-plan runs
+# comparable bit-for-bit against a serial oracle.
+
+def pp_step(n0, n1, n, g, i, spin_us=0.0):
+    bufs = (apps._attach(n0), apps._attach(n1))
+    if spin_us:
+        apps.spin(spin_us)
+    src, dst = bufs[g % 2], bufs[(g + 1) % 2]
+    dst[i] = (src[(i - 1) % n] + src[i] + src[(i + 1) % n]) * 0.5 + 1.0
+
+
+def _submit_pingpong(rt, n0, n1, n, stages, retries, spin_us):
+    for g in range(stages):
+        for i in range(n):
+            deps = [(("cell", (g + 1) % 2, i), "inout"),
+                    (("cell", g % 2, (i - 1) % n), "in"),
+                    (("cell", g % 2, i), "in"),
+                    (("cell", g % 2, (i + 1) % n), "in")]
+            rt.task(pp_step, n0, n1, n, g, i, spin_us, deps=deps,
+                    label=f"pp[{g},{i}]", retries=retries)
+
+
+def _serial_pingpong(init, n, stages):
+    bufs = [list(init), [0.0] * n]
+    for g in range(stages):
+        src, dst = bufs[g % 2], bufs[(g + 1) % 2]
+        for i in range(n):
+            dst[i] = (src[(i - 1) % n] + src[i] + src[(i + 1) % n]) \
+                * 0.5 + 1.0
+    return bufs[stages % 2]
+
+
+def correctness_section(cfg: dict) -> dict:
+    """Seeded k=2 kill plans over the ping-pong stencil: serial-exact
+    completion, respawn/retry counts, shm leak scan."""
+    n, stages = cfg["pp_cells"], cfg["pp_stages"]
+    runs = []
+    for seed in cfg["seeds"]:
+        b0, b1 = apps.ShmArray(n), apps.ShmArray(n)
+        apps.fill_deterministic(b0, seed)
+        init = b0.tolist()
+        try:
+            plan = FaultPlan.seeded_kills(seed, num_workers=2,
+                                          total_tasks=n * stages,
+                                          kills=GATE["kills"])
+            t0 = time.perf_counter()
+            with ProcessRuntime(num_workers=2, mode="sharded",
+                                ipc_batch=1, fault_plan=plan) as rt:
+                _submit_pingpong(rt, b0.name, b1.name, n, stages,
+                                 retries=3, spin_us=cfg["pp_spin_us"])
+                rt.taskwait()
+            wall = time.perf_counter() - t0
+            final = b0.tolist() if stages % 2 == 0 else b1.tolist()
+            runs.append({
+                "seed": seed,
+                "tasks": n * stages,
+                "wall_s": round(wall, 4),
+                "serial_exact": final == _serial_pingpong(init, n,
+                                                          stages),
+                "worker_respawns": rt.stats.worker_respawns,
+                "task_retries": rt.stats.task_retries,
+                "leaked_shm": rt.stats.leaked_shm,
+            })
+        finally:
+            b0.close_unlink()
+            b1.close_unlink()
+    return {"kills": GATE["kills"], "runs": runs}
+
+
+def _spin_graph(rt, chains: int, chain_len: int, spin_us: float,
+                retries: int) -> int:
+    for c in range(chains):
+        for i in range(chain_len):
+            rt.task(apps.spin, spin_us, deps=[(("chain", c), "inout")],
+                    label=f"spin[{c},{i}]", retries=retries)
+    return chains * chain_len
+
+
+def recovery_section(cfg: dict) -> dict:
+    """Fault-free vs kill-plan makespan on the 8-worker spin graph.
+    ``apps.spin`` is pure arithmetic (idempotent for free), so the only
+    cost of a kill is the respawn plus the lost in-flight bodies."""
+    total = GATE["chains"] * cfg["chain_len"]
+
+    def once(plan):
+        with ProcessRuntime(num_workers=GATE["workers"], mode="sharded",
+                            ipc_batch=1, fault_plan=plan) as rt:
+            t0 = time.perf_counter()
+            _spin_graph(rt, GATE["chains"], cfg["chain_len"],
+                        cfg["spin_us"], retries=3)
+            rt.taskwait()
+            wall = time.perf_counter() - t0
+        return wall, rt.stats
+
+    clean_walls, faulty_walls = [], []
+    faulty_stats = None
+    for r in range(cfg["repeats"]):
+        wall, _ = once(None)
+        clean_walls.append(round(wall, 4))
+        plan = FaultPlan.seeded_kills(41 + r, GATE["workers"], total,
+                                      kills=GATE["kills"])
+        wall, st = once(plan)
+        faulty_walls.append(round(wall, 4))
+        faulty_stats = st
+    clean, faulty = min(clean_walls), min(faulty_walls)
+    return {
+        "workers": GATE["workers"], "tasks": total,
+        "spin_us": cfg["spin_us"],
+        "clean_wall_s": clean_walls,
+        "faulty_wall_s": faulty_walls,
+        "recovery_ratio": round(faulty / clean, 3) if clean else 0.0,
+        "tasks_executed": faulty_stats.tasks_executed,
+        "worker_respawns": faulty_stats.worker_respawns,
+        "task_retries": faulty_stats.task_retries,
+        "leaked_shm": faulty_stats.leaked_shm,
+    }
+
+
+def acceptance(correct: dict, recov: dict) -> dict:
+    runs = correct["runs"]
+    return {
+        "kills": GATE["kills"],
+        "serial_exact_all": all(r["serial_exact"] for r in runs),
+        "no_leaked_shm": all(not r["leaked_shm"] for r in runs)
+        and not recov["leaked_shm"],
+        "all_tasks_executed": recov["tasks_executed"] == recov["tasks"],
+        "recovery_ratio": recov["recovery_ratio"],
+        "recovery_target": GATE["recovery_ratio"],
+        "recovery_ok": recov["recovery_ratio"]
+        <= GATE["recovery_ratio"],
+    }
+
+
+def collect(smoke: bool) -> dict:
+    cfg = SMOKE if smoke else FULL
+    t0 = time.time()
+    correct = correctness_section(cfg)
+    recov = recovery_section(cfg)
+    return {
+        "bench": "chaos",
+        "smoke": smoke,
+        "correctness": correct,
+        "recovery": recov,
+        "acceptance": acceptance(correct, recov),
+        "bench_wall_s": round(time.time() - t0, 2),
+    }
+
+
+def run(csv_rows: list) -> None:
+    """benchmarks.run suite entry point."""
+    out = collect(smoke=True)
+    acc = out["acceptance"]
+    for r in out["correctness"]["runs"]:
+        csv_rows.append((f"chaos.correct.seed{r['seed']}.serial_exact",
+                         int(r["serial_exact"]),
+                         f"respawns={r['worker_respawns']} "
+                         f"retries={r['task_retries']}"))
+    rec = out["recovery"]
+    csv_rows.append(("chaos.recovery.ratio", rec["recovery_ratio"],
+                     f"target={acc['recovery_target']} "
+                     f"respawns={rec['worker_respawns']} "
+                     f"retries={rec['task_retries']}"))
+    csv_rows.append(("chaos.recovery.tasks_executed",
+                     rec["tasks_executed"], f"of {rec['tasks']}"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep, same gates (~10 s, CI)")
+    ap.add_argument("--out", default="BENCH_chaos.json",
+                    help="JSON output path")
+    args = ap.parse_args()
+    out = collect(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    acc = out["acceptance"]
+    print(f"wrote {args.out} ({out['bench_wall_s']}s)")
+    print(f"correctness under k={acc['kills']} kills: serial_exact="
+          f"{acc['serial_exact_all']} no_leaked_shm="
+          f"{acc['no_leaked_shm']} -> "
+          + ("OK" if acc["serial_exact_all"] and acc["no_leaked_shm"]
+             else "REGRESSION"))
+    print(f"recovery: faulty/clean wall ratio={acc['recovery_ratio']} "
+          f"(target <= {acc['recovery_target']}), all_tasks_executed="
+          f"{acc['all_tasks_executed']} -> "
+          + ("OK" if acc["recovery_ok"] and acc["all_tasks_executed"]
+             else "REGRESSION"))
+    if not (acc["serial_exact_all"] and acc["no_leaked_shm"]
+            and acc["recovery_ok"] and acc["all_tasks_executed"]):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,10 +11,10 @@ import time
 
 sys.path.insert(0, "src")
 
-from benchmarks import (bench_contention, bench_procs,  # noqa: E402
-                        bench_replay, bench_roofline, bench_scalability,
-                        bench_sched, bench_scopes, bench_shards,
-                        bench_traces, bench_tuning)
+from benchmarks import (bench_chaos, bench_contention,  # noqa: E402
+                        bench_procs, bench_replay, bench_roofline,
+                        bench_scalability, bench_sched, bench_scopes,
+                        bench_shards, bench_traces, bench_tuning)
 
 SUITES = {
     "contention": bench_contention.run,     # §1 motivation + calibration
@@ -27,6 +27,7 @@ SUITES = {
     "sched": bench_sched.run,               # placement x replay sweep
     "scopes": bench_scopes.run,             # multi-tenant scopes
     "procs": bench_procs.run,               # multi-process GIL escape
+    "chaos": bench_chaos.run,               # fault-tolerance recovery
 }
 
 

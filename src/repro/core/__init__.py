@@ -18,7 +18,8 @@ from .engine import (CostCharger, CriticalPathPlacement, DastPolicy,
 from .sched import bottom_levels, list_schedule, quantize_bands
 from .messages import (DoneBatchMessage, DoneTaskMessage,
                        SubmitBatchMessage, SubmitTaskMessage)
-from .procs import ProcessRuntime, ShmRing, TaskFailed, WorkerLost
+from .errors import RingCorruption, ScopeExpired, TaskFailed, WorkerLost
+from .procs import FaultPlan, ProcessRuntime, ShmRing
 from .queues import InstrumentedLock, SPSCQueue, WorkerQueues
 from .runtime import RuntimeStats, TaskRuntime
 from .scopes import (FairAdmission, JobScope, ScopedPolicy, ScopedRegion,
@@ -45,6 +46,7 @@ __all__ = [
     "SubmitTaskMessage",
     "InstrumentedLock", "SPSCQueue", "WorkerQueues",
     "ProcessRuntime", "ShmRing", "TaskFailed", "WorkerLost",
+    "FaultPlan", "RingCorruption", "ScopeExpired",
     "RuntimeStats", "TaskRuntime",
     "FairAdmission", "JobScope", "ScopedPolicy", "ScopedRegion",
     "scoped_deps",

@@ -4,9 +4,11 @@ parent; cross-process traffic is the §3.1 message shapes in compact
 binary form over shared-memory SPSC rings; frozen replay graphs map
 into every worker so steady-state replayed iterations ship only latch
 generations. See ``driver.py`` for the full design notes."""
+from .chaos import FaultPlan
 from .driver import (ProcessDispatch, ProcessRuntime, TaskFailed,
                      WorkerLost)
-from .rings import ShmRing, attach_shm
+from .rings import RingCorruption, ShmRing, attach_shm
 
 __all__ = ["ProcessRuntime", "ProcessDispatch", "WorkerLost",
-           "TaskFailed", "ShmRing", "attach_shm"]
+           "TaskFailed", "FaultPlan", "RingCorruption", "ShmRing",
+           "attach_shm"]

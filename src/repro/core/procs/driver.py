@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import os
 import pickle
+import signal
 import threading
 import time
 import traceback
@@ -54,30 +55,25 @@ from ..ddast import DDASTParams
 from ..dispatcher import FunctionalityDispatcher
 from ..engine import make_policy
 from ..engine.replay import RECORDING, REPLAYING
+from ..errors import RingCorruption, TaskFailed, WorkerLost
 from ..messages import (DONE_ERROR, DONE_NO_RESULT, DONE_OK,
                         DONE_PLANE_ERROR, decode_done_batch,
                         decode_submit_batch, encode_done_batch)
-from ..trace import (EV_CREATED, EV_END, EV_READY, EV_START, NULL_TRACER,
-                     TraceRecorder, replay_iterations_of)
+from ..trace import (EV_CREATED, EV_END, EV_READY, EV_RESPAWN, EV_RETRY,
+                     EV_START, EV_TIMEOUT_KILL, EV_TRACE_LOST,
+                     EV_WORKER_LOST, NULL_TRACER, TraceRecorder,
+                     replay_iterations_of)
 from ..wd import TaskState, WorkDescriptor
 from . import serial
+from .chaos import FaultPlan
 from .rings import ShmRing
 from .serial import (K_CTRL, K_DONE, K_EXEC, K_TRACE, OP_ITER,
-                     OP_SHUTDOWN, frame_ctrl, frame_exec, frame_trace)
+                     OP_SHUTDOWN, frame_ctrl, frame_exec)
 
 PROC_MODES = ("sync", "dast", "ddast", "sharded")
 
-
-class WorkerLost(RuntimeError):
-    """A worker process died with tasks in flight. Raised at the next
-    ``taskwait`` (instead of hanging its quiescence wait) naming the
-    in-flight task(s)."""
-
-
-class TaskFailed(RuntimeError):
-    """A task body raised in a worker process. Carries the worker-side
-    traceback; raised at the next ``taskwait`` after quiescence (the
-    graph stays consistent: the failing task completes, successors run)."""
+__all__ = ["ProcessDispatch", "ProcessRuntime", "TaskFailed",
+           "WorkerLost", "RingCorruption", "FaultPlan", "PROC_MODES"]
 
 
 # ---------------------------------------------------------------------------
@@ -272,7 +268,7 @@ class _PlaneView:
 
 def _run_plane(desc: dict, planes: Dict[str, _PlaneView], lock,
                done_ring: ShmRing, clock, slot: int,
-               trace: Optional[deque]) -> None:
+               stalls, stall_counts) -> None:
     view = planes.get(desc["arrays"])
     if view is None:
         view = planes[desc["arrays"]] = _PlaneView(desc)
@@ -288,10 +284,17 @@ def _run_plane(desc: dict, planes: Dict[str, _PlaneView], lock,
             if h != ints[_PL_TAIL]:
                 sid = ints[_PL_RING0 + (h % n)]
                 ints[_PL_HEAD] = h + 1
+                # claim stamped at POP, under the lock: if this worker
+                # dies mid-body the parent's recovery can tell exactly
+                # which sid it owed (exec_slot set, end time still 0)
+                ints[view.exec_i + sid] = slot
+                dbls[view.times_i + 2 * sid] = clock()
         if sid < 0:
             time.sleep(2e-6)
             continue
         func, args, label = view.task(sid)
+        if stalls:
+            _maybe_stall(stalls, stall_counts, label)
         t0 = clock()
         try:
             func(*args)
@@ -302,7 +305,6 @@ def _run_plane(desc: dict, planes: Dict[str, _PlaneView], lock,
         t1 = clock()
         dbls[view.times_i + 2 * sid] = t0
         dbls[view.times_i + 2 * sid + 1] = t1
-        ints[view.exec_i + sid] = slot
         with lock:
             for k in range(view.succ_off[sid], view.succ_off[sid + 1]):
                 tgt = view.succ_tgt[k]
@@ -322,17 +324,28 @@ def frame_done_one(wd_id: int, t0: float, t1: float, status: int,
         [(wd_id, t0, t1, status, blob)])
 
 
+def _maybe_stall(stalls, counts: Dict[int, int], label: str) -> None:
+    """Chaos hook: sleep before a body whose label matches a stall spec
+    (per process — a respawned worker starts its counts over)."""
+    for i, (substr, stall_s, times) in enumerate(stalls):
+        if substr in label and counts.get(i, 0) < times:
+            counts[i] = counts.get(i, 0) + 1
+            time.sleep(stall_s)
+
+
 def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
                  exec_fbq, done_fbq, plane_lock, epoch: float,
-                 trace_enabled: bool, trace_cap: int,
-                 parent_pid: int) -> None:
+                 parent_pid: int, stalls=(),
+                 ignore_sigterm: bool = False) -> None:
+    if ignore_sigterm:                   # chaos: force the kill path
+        signal.signal(signal.SIGTERM, signal.SIG_IGN)
     exec_ring = ShmRing.attach(exec_name, fallback=exec_fbq)
     done_ring = ShmRing.attach(done_name, fallback=done_fbq)
     # the Done ring's consumer is the parent's reaper thread: keep
     # pushing while the parent process lives
     done_ring.consumer_alive = lambda: os.getppid() == parent_pid
-    trace: deque = deque(maxlen=trace_cap)
     planes: Dict[str, _PlaneView] = {}
+    stall_counts: Dict[int, int] = {}
 
     def clock() -> float:
         # perf_counter is CLOCK_MONOTONIC on Linux: one epoch, every
@@ -342,7 +355,13 @@ def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
     try:
         idle_checks = 0
         while True:
-            frame = exec_ring.pop()
+            try:
+                frame = exec_ring.pop()
+            except RingCorruption:
+                # a corrupt submit cannot be attributed to a task: die
+                # quietly (exitcode 3) and let the supervisor respawn
+                # this worker and retry/poison its in-flight tasks
+                raise SystemExit(3)
             if frame is None:
                 time.sleep(2e-5)
                 idle_checks += 1
@@ -356,6 +375,8 @@ def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
                 entries = decode_submit_batch(frame, 1)
                 dones = []
                 for wd_id, payload, label in entries:
+                    if stalls:
+                        _maybe_stall(stalls, stall_counts, label)
                     t0 = clock()
                     status, blob = DONE_OK, b""
                     try:
@@ -370,22 +391,15 @@ def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
                         status = DONE_ERROR
                         blob = traceback.format_exc().encode("utf-8")
                     t1 = clock()
-                    if trace_enabled:
-                        trace.append((t0, EV_START, wd_id, slot, label,
-                                      None, None))
-                        trace.append((t1, EV_END, wd_id, slot, label,
-                                      None, None))
                     dones.append((wd_id, t0, t1, status, blob))
                 done_ring.push(bytes([K_DONE]) + encode_done_batch(dones))
             elif kind == K_CTRL:
                 op, body = serial.parse(frame)[1]
                 if op == OP_SHUTDOWN:
-                    if trace_enabled:
-                        done_ring.push(frame_trace(list(trace)))
                     return
                 if op == OP_ITER:
                     _run_plane(body, planes, plane_lock, done_ring,
-                               clock, slot, trace)
+                               clock, slot, stalls, stall_counts)
     finally:
         for view in planes.values():
             view.close()
@@ -419,13 +433,27 @@ class ProcessDispatch:
         self.captured: List[Tuple[WorkDescriptor, int]] = []
         self.record_payloads = False     # keep payloads for image builds
         self.payload_of: Dict[int, Tuple[bytes, str]] = {}
-        self.inflight: Dict[int, Tuple[WorkDescriptor, int]] = {}
+        # wd_id -> (wd, widx, dispatch time); the dispatch time anchors
+        # per-task timeout= enforcement (dispatch-to-done deadline)
+        self.inflight: Dict[int, Tuple[WorkDescriptor, int, float]] = {}
         W = rt.num_workers
         self._load = [0] * W
         self._buffers: List[List[Tuple[int, bytes, str]]] = \
             [[] for _ in range(W)]
-        self._locks = [threading.Lock() for _ in range(W)]
+        # RLocks: a worker-death harvest holds its worker's lock while
+        # draining done frames, whose completions may push back through
+        # the same lock on the same (reaper) thread
+        self._locks = [threading.RLock() for _ in range(W)]
+        # paused[widx]: the supervisor is swapping this worker's rings;
+        # buffer but do not ship (the buffer flushes to the replacement)
+        self.paused = [False] * W
         self.sub_msgs = [0] * W          # exec frames shipped, per ring
+        # plane-recovery routing: when an aborted plane iteration falls
+        # back to live analysis, sids that already finished (or were
+        # poisoned) on the plane are completed from here instead of
+        # being re-shipped to a worker
+        self.plane_done: Optional[Dict[int, str]] = None
+        self.plane_ready: deque = deque()
 
     # -- PlacementPolicy surface ---------------------------------------
     def push(self, wd: WorkDescriptor) -> None:
@@ -439,17 +467,26 @@ class ProcessDispatch:
         load = self._load
         widx = min(range(len(load)), key=load.__getitem__)
         load[widx] += 1
-        self.inflight[wd.wd_id] = (wd, widx)
         if self.tracer.enabled:
             self.tracer.task_event(EV_READY, wd, 2 + widx)
         with self._locks[widx]:
+            # inflight registration under the ring lock: the supervisor
+            # harvests inflight-vs-buffered under the same lock, so a
+            # task is never both "lost" (retried) and still buffered
+            # for the replacement worker (double execution)
+            self.inflight[wd.wd_id] = (wd, widx, time.perf_counter())
             buf = self._buffers[widx]
             buf.append((wd.wd_id, payload, wd.label))
-            if len(buf) >= self.rt.ipc_batch:
+            if len(buf) >= self.rt.ipc_batch and not self.paused[widx]:
                 self._ship(widx)
 
     def push_replay(self, wd: WorkDescriptor, sid: int) -> None:
         if self.discard:
+            return
+        if self.plane_done is not None and sid in self.plane_done:
+            # this sid already ran (or was poisoned) on the aborted
+            # plane generation: complete it, don't re-execute it
+            self.plane_ready.append((wd, sid))
             return
         if self.capture:
             self.captured.append((wd, sid))
@@ -481,17 +518,23 @@ class ProcessDispatch:
         if not buf:
             return
         self._buffers[widx] = []
-        self.rt._exec_rings[widx].push(frame_exec(buf))
+        ring = self.rt._exec_rings[widx]
+        plan = self.rt.fault_plan
+        if plan is not None and plan.exec_frame_corrupt(widx):
+            ring._corrupt_next = True
+        ring.push(frame_exec(buf))
         self.sub_msgs[widx] += 1
         if self.charge is not None:
             self.charge.ipc_submit()
+        if plan is not None:
+            self.rt._chaos_shipped(len(buf))
 
     def flush_all(self) -> int:
         n = 0
         for widx in range(len(self._buffers)):
-            if self._buffers[widx]:
+            if self._buffers[widx] and not self.paused[widx]:
                 with self._locks[widx]:
-                    if self._buffers[widx]:
+                    if self._buffers[widx] and not self.paused[widx]:
                         self._ship(widx)
                         n += 1
         return n
@@ -534,7 +577,10 @@ class ProcessRuntime:
                  backend: str = "processes",
                  ring_capacity: int = 1 << 20,
                  ipc_batch: int = 8,
-                 trace_capacity: int = 1 << 14) -> None:
+                 trace_capacity: int = 1 << 14,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_respawns: int = 16,
+                 shutdown_grace: float = 5.0) -> None:
         if backend != "processes":
             raise ValueError("ProcessRuntime is the backend='processes' "
                              "driver")
@@ -559,6 +605,12 @@ class ProcessRuntime:
         self.ipc_batch = max(1, ipc_batch)
         self.ring_capacity = ring_capacity
         self.trace_capacity = trace_capacity
+        # fault tolerance: the (test-only) injection plan, the respawn
+        # budget (a crash-looping worker must not respawn forever), and
+        # the teardown drain grace before escalation
+        self.fault_plan = fault_plan
+        self.max_respawns = max_respawns
+        self.shutdown_grace = shutdown_grace
 
         # slots: 0 = reaper/manager thread, 1 = main thread, 2+i = worker
         # process i (trace attribution only — workers hold no policy
@@ -605,6 +657,24 @@ class ProcessRuntime:
         self._errors_lock = threading.Lock()
         self._lost: Optional[str] = None           # WorkerLost message
         self._last_check = 0.0
+        self._shm_created: set = set()   # every segment ever created;
+        #                                  the teardown leak scan's base
+        # supervision state: serializes ring-list access between the
+        # reaper (pump, single-worker respawn) and the main thread
+        # (plane recovery swaps every ring)
+        self._rings_lock = threading.RLock()
+        self._plane_active = False
+        self._plane_dead: Optional[int] = None     # widx seen dead
+        self._recover_img: Optional[_ReplayImage] = None
+        self._parent_pid = os.getpid()
+        self.respawns = 0
+        self.retries = 0
+        self.poisoned = 0
+        self.timeout_kills = 0
+        self.transport_errors = 0
+        self.trace_lost_n = 0
+        self.zombies = 0
+        self.leaked_shm: List[str] = []
         self.done_msgs = 0
         self.ctrl_msgs = 0
         self.iter_ipc: List[Tuple[int, int]] = []  # (submit, done) per
@@ -634,28 +704,14 @@ class ProcessRuntime:
         self._trace_t0 = time.perf_counter()
         self._main_thread = threading.current_thread()
         # ONE lock, created before the workers exist, guards every
-        # replay-plane mutation (latches, ready ring, remaining)
+        # replay-plane mutation (latches, ready ring, remaining); a
+        # plane recovery replaces it (the dead worker may have held it)
         self._plane_lock = self._ctx.Lock()
-        parent_pid = os.getpid()
+        self._parent_pid = os.getpid()
         for i in range(self.num_workers):
-            exec_fbq = self._ctx.SimpleQueue()
-            done_fbq = self._ctx.SimpleQueue()
-            exec_ring = ShmRing(self.ring_capacity, fallback=exec_fbq)
-            done_ring = ShmRing(self.ring_capacity, fallback=done_fbq)
+            p, exec_ring, done_ring = self._spawn_worker(i)
             self._exec_rings.append(exec_ring)
             self._done_rings.append(done_ring)
-            self._fbqs += [exec_fbq, done_fbq]
-            p = self._ctx.Process(
-                target=_worker_main,
-                args=(i, 2 + i, exec_ring.name, done_ring.name,
-                      exec_fbq, done_fbq, self._plane_lock,
-                      self._trace_t0, self.trace_enabled,
-                      self.trace_capacity, parent_pid),
-                name=f"procworker-{i}", daemon=True)
-            p.start()
-            # a full exec ring + live worker means a slow consumer (long
-            # task body), not a dead one: let push() keep waiting
-            exec_ring.consumer_alive = p.is_alive
             self._procs.append(p)
         self._reaper = threading.Thread(target=self._reaper_loop,
                                         name="proc-reaper", daemon=True)
@@ -666,6 +722,50 @@ class ProcessRuntime:
                 daemon=True)
             self._manager_thread.start()
         self._started = True
+
+    def _spawn_worker(self, widx: int) -> Tuple[Any, ShmRing, ShmRing]:
+        """Create one worker process with a fresh exec/done ring pair.
+        Used both at start() and by the supervisor's respawn path."""
+        exec_fbq = self._ctx.SimpleQueue()
+        done_fbq = self._ctx.SimpleQueue()
+        exec_ring = ShmRing(self.ring_capacity, fallback=exec_fbq)
+        done_ring = ShmRing(self.ring_capacity, fallback=done_fbq)
+        self._fbqs += [exec_fbq, done_fbq]
+        self._shm_created.update((exec_ring.name, done_ring.name))
+        plan = self.fault_plan
+        p = self._ctx.Process(
+            target=_worker_main,
+            args=(widx, 2 + widx, exec_ring.name, done_ring.name,
+                  exec_fbq, done_fbq, self._plane_lock, self._trace_t0,
+                  self._parent_pid,
+                  plan.worker_stalls() if plan is not None else (),
+                  plan.ignore_sigterm if plan is not None else False),
+            name=f"procworker-{widx}", daemon=True)
+        p.start()
+        # a full exec ring + live worker means a slow consumer (long
+        # task body), not a dead one: let push() keep waiting
+        exec_ring.consumer_alive = p.is_alive
+        return p, exec_ring, done_ring
+
+    def _respawn_worker(self, widx: int, count: bool = True) -> None:
+        """Swap in a fresh process + ring pair at ``widx``. The caller
+        holds ``_rings_lock``, has joined the old process, and keeps
+        ``dispatch.paused[widx]`` set until the swap lands (so no frame
+        ships to the ring being retired)."""
+        old_exec = self._exec_rings[widx]
+        old_done = self._done_rings[widx]
+        p, exec_ring, done_ring = self._spawn_worker(widx)
+        self._exec_rings[widx] = exec_ring
+        self._done_rings[widx] = done_ring
+        self._procs[widx] = p
+        for ring in (old_exec, old_done):
+            ring.close()
+            ring.unlink()
+        if count:
+            self.respawns += 1
+        if self.tracer.enabled:
+            self.tracer.mgr_event(EV_RESPAWN, 2 + widx,
+                                  {"widx": widx, "pid": p.pid})
 
     def shutdown(self) -> None:
         if self._torn_down:
@@ -700,17 +800,29 @@ class ProcessRuntime:
                 self.ctrl_msgs += 1
             except BufferError:          # pragma: no cover - dead worker
                 pass
-        # drain final Done/trace frames while the workers exit
-        deadline = time.perf_counter() + 5.0
+        # escalation ladder: drain-join -> SIGTERM -> SIGKILL. Each
+        # rung only fires for workers the previous one failed to stop;
+        # a worker still alive at the SIGKILL rung counts as a zombie
+        # (it ignored or blocked SIGTERM) in RuntimeStats.
+        grace = max(0.1, self.shutdown_grace)
+        deadline = time.perf_counter() + grace
         while any(p.is_alive() for p in self._procs) \
                 and time.perf_counter() < deadline:
-            self._pump_dones()
+            self._pump_dones()           # drain final Done frames
             time.sleep(1e-3)
         for p in self._procs:
-            if p.is_alive():             # pragma: no cover - stuck worker
-                p.terminate()
+            if p.is_alive():
+                p.terminate()            # SIGTERM
+        for p in self._procs:
+            if p.is_alive():
+                p.join(timeout=min(2.0, grace))
+        for p in self._procs:
+            if p.is_alive():             # survived SIGTERM: escalate
+                self.zombies += 1
+                p.kill()                 # SIGKILL
+        for p in self._procs:
             p.join(timeout=2.0)
-        self._pump_dones()               # trace frames land here
+        self._pump_dones()
         for ring in self._exec_rings + self._done_rings:
             ring.close()
             ring.unlink()
@@ -721,6 +833,15 @@ class ProcessRuntime:
                 q.close()
             except Exception:            # pragma: no cover - teardown
                 pass
+        # post-unlink leak scan: any segment this runtime ever created
+        # that still exists in /dev/shm leaked (reported, not raised —
+        # the chaos soak asserts the list is empty)
+        try:
+            live = set(os.listdir("/dev/shm"))
+        except OSError:                  # pragma: no cover - non-Linux
+            live = set()
+        self.leaked_shm = sorted(
+            n for n in self._shm_created if n.lstrip("/") in live)
 
     def _aggregate_stats(self) -> None:
         self.stats.wall_s = time.perf_counter() - self._trace_t0
@@ -737,6 +858,14 @@ class ProcessRuntime:
         self.stats.ipc_done_msgs = self.done_msgs
         self.stats.ipc_ctrl_msgs = self.ctrl_msgs
         self.stats.ipc_iter = list(self.iter_ipc)
+        self.stats.worker_respawns = self.respawns
+        self.stats.task_retries = self.retries
+        self.stats.tasks_poisoned = self.poisoned
+        self.stats.timeout_kills = self.timeout_kills
+        self.stats.transport_errors = self.transport_errors
+        self.stats.trace_lost = self.trace_lost_n
+        self.stats.zombie_workers = self.zombies
+        self.stats.leaked_shm = list(self.leaked_shm)
         if self.tracer.enabled:
             self.stats.events = self.tracer.events()
             self.stats.trace_dropped = self.tracer.dropped
@@ -757,8 +886,16 @@ class ProcessRuntime:
 
     # ------------------------------------------------------------------
     # task API
-    def task(self, func, *args, deps=(), label: str = "task"
+    def task(self, func, *args, deps=(), label: str = "task",
+             retries: int = 0, timeout: Optional[float] = None
              ) -> WorkDescriptor:
+        """Submit one task. ``retries=N`` lets the supervisor re-dispatch
+        the task up to N times after a worker death, per-task timeout, or
+        body exception (at-least-once: retried bodies must be
+        idempotent); 0 preserves fail-fast ``WorkerLost`` semantics.
+        ``timeout=`` (seconds, dispatch-to-done) makes the supervisor
+        SIGKILL a worker stuck past the deadline and retry or poison the
+        task."""
         if not self._started:
             raise RuntimeError("ProcessRuntime.task() before start(): "
                                "use it as a context manager")
@@ -774,7 +911,8 @@ class ProcessRuntime:
                 f"(task {label!r}): {e}") from e
         from ..runtime import _parse_deps
         wd = WorkDescriptor(func=func, args=args, deps=_parse_deps(deps),
-                            label=label, parent=self._root)
+                            label=label, parent=self._root,
+                            retries=max(0, retries), timeout=timeout)
         wd._proc_payload = payload
         self._maybe_enter_capture()
         if self.tracer.enabled:
@@ -792,22 +930,32 @@ class ProcessRuntime:
             g = getattr(pol, "replay_graph", None)
             img = self._images.get(id(g)) if g is not None else None
             if img is not None and pol.steady_iteration_complete():
-                self._plane_iteration(img)
-                return
-            d.flush_capture_live()
+                if self._plane_iteration(img):
+                    return
+                # the plane aborted mid-iteration (worker death):
+                # recovery routed already-finished sids through
+                # d.plane_done and re-shipped the rest live — fall
+                # through to the generic drain loop
+            else:
+                d.flush_capture_live()
         d.flush_all()
         while True:
             if self._lost is not None:
                 raise WorkerLost(self._lost)
             if self._root.num_children_alive == 0 and not pol.pending() \
-                    and not d.inflight:
+                    and not d.inflight and not d.plane_ready:
                 break
-            worked = pol.callback(1) if pol.uses_idle_managers else 0
+            worked = self._drain_plane_ready()
+            worked += pol.callback(1) if pol.uses_idle_managers else 0
             if pol.pending() and not worked:
                 worked += pol.drain_all()
             worked += d.flush_all()
             if not worked:
                 time.sleep(2e-5)
+        if d.plane_done is not None:     # recovery iteration finished
+            d.plane_done = None
+            d.plane_ready.clear()
+            self._recover_img = None
         self._quiesce()
         self._raise_task_errors()
 
@@ -838,23 +986,47 @@ class ProcessRuntime:
                 or g is None or id(g) not in self._images:
             d.flush_capture_live()
 
-    def _plane_iteration(self, img: _ReplayImage) -> None:
+    def _plane_iteration(self, img: _ReplayImage) -> bool:
         """Steady-state replayed iteration: every task of the frozen
         graph runs worker-side off the shared plane. Cross-process cost:
-        one CTRL(ITER) frame per worker — zero Submit/Done messages."""
+        one CTRL(ITER) frame per worker — zero Submit/Done messages.
+
+        Returns True when the iteration completed on the plane; False
+        when a worker died mid-iteration and :meth:`_recover_plane`
+        invalidated this generation (the caller falls back to the live
+        drain loop to finish the iteration)."""
         pol = self.policy
         d = self._dispatch
-        with self._plane_lock:
-            img.reset()
-        for widx, ring in enumerate(self._exec_rings):
-            ring.push(frame_ctrl(OP_ITER, dict(img.desc)))
-            self.ctrl_msgs += 1
-        while img.remaining() != 0:
-            if self._lost is not None:
-                stuck = ", ".join(img.unfinished_labels()[:4])
-                raise WorkerLost(f"{self._lost} (replay plane stalled; "
-                                 f"unfinished: {stuck})")
-            time.sleep(2e-5)
+        self._plane_dead = None
+        self._plane_active = True
+        try:
+            with self._plane_lock:
+                img.reset()
+            with self._rings_lock:
+                for widx, ring in enumerate(self._exec_rings):
+                    ring.push(frame_ctrl(OP_ITER, dict(img.desc)))
+                    self.ctrl_msgs += 1
+            plan = self.fault_plan
+            if plan is not None:
+                doomed = plan.on_iter_broadcast()
+                if doomed:
+                    time.sleep(5e-3)     # let workers claim some sids
+                    for w in doomed:
+                        self._kill_worker_proc(w)
+            fired: set = set()
+            while img.remaining() != 0:
+                if self._lost is not None:
+                    stuck = ", ".join(img.unfinished_labels()[:4])
+                    raise WorkerLost(
+                        f"{self._lost} (replay plane stalled; "
+                        f"unfinished: {stuck})")
+                if self._plane_dead is not None:
+                    self._recover_plane(img)
+                    return False
+                self._plane_timeouts(img, fired)
+                time.sleep(2e-5)
+        finally:
+            self._plane_active = False
         d.capture = False
         d.captured = []
         d.discard = True
@@ -867,7 +1039,7 @@ class ProcessRuntime:
                 wd.exec_span = (t0, t1)
                 wd.mark_finished()
                 if tr.enabled:
-                    slot = 2 + img.exec_slot(sid)
+                    slot = img.exec_slot(sid)
                     tr.ingest([(t0, EV_START, wd.wd_id, slot, wd.label,
                                 wd.scope, None),
                                (t1, EV_END, wd.wd_id, slot, wd.label,
@@ -878,6 +1050,171 @@ class ProcessRuntime:
             d.discard = False
         self._quiesce()
         self._raise_task_errors()
+        return True
+
+    def _plane_timeouts(self, img: _ReplayImage, fired: set) -> None:
+        """Per-task ``timeout=`` enforcement during a plane iteration:
+        a sid claimed (t0 stamped at pop) but unfinished past its
+        deadline gets its worker SIGKILLed; the death flows through
+        :meth:`_recover_plane`, which classifies the sid as a culprit
+        and retries or poisons it."""
+        wds = getattr(self.policy, "_iter_wds", None)
+        if not wds:
+            return
+        now = time.perf_counter() - self._trace_t0
+        for sid in range(img.n):
+            if sid in fired:
+                continue
+            wd = wds[sid]
+            if wd is None or wd.timeout is None:
+                continue
+            t0, t1 = img.times(sid)
+            if t0 == 0.0 or t1 != 0.0 or now - t0 <= wd.timeout:
+                continue
+            slot = img.exec_slot(sid)
+            if slot < 2:                 # pragma: no cover - defensive
+                continue
+            fired.add(sid)
+            wd._timed_out = True
+            self.timeout_kills += 1
+            if self.tracer.enabled:
+                self.tracer.task_event(EV_TIMEOUT_KILL, wd, slot,
+                                       {"timeout": wd.timeout})
+            self._kill_worker_proc(slot - 2)
+
+    def _recover_plane(self, img: _ReplayImage) -> None:
+        """A worker died mid plane iteration. Invalidate ONLY this
+        generation: wait for the survivors to stall, kill + join every
+        worker (a survivor may be blocked on the plane lock the dead
+        worker held), classify each sid — finished, culprit (claimed by
+        a genuinely dead worker: retry or poison), or innocent (claimed
+        by a worker we killed ourselves: rerun free) — then respawn the
+        fleet against a fresh plane lock and route the remainder of the
+        iteration through live analysis via ``dispatch.plane_done``."""
+        pol = self.policy
+        d = self._dispatch
+        prev = img.remaining()
+        stable = time.perf_counter()
+        deadline = stable + 2.0
+        while time.perf_counter() < deadline and img.remaining() != 0:
+            rem = img.remaining()
+            if rem != prev:
+                prev, stable = rem, time.perf_counter()
+            elif time.perf_counter() - stable > 0.05:
+                break                    # progress stalled: harvest now
+            time.sleep(1e-3)
+        with self._rings_lock:
+            dead = {w for w, p in enumerate(self._procs)
+                    if not p.is_alive()}
+            for w in range(self.num_workers):
+                self._kill_worker_proc(w)
+            for p in self._procs:
+                p.join(timeout=5.0)
+            self._pump_dones()           # final DONE_PLANE_ERROR frames
+            done_map: Dict[int, str] = {}
+            culprits: List[int] = []
+            for sid in range(img.n):
+                t0, t1 = img.times(sid)
+                slot = img.exec_slot(sid)
+                if t1 != 0.0:
+                    done_map[sid] = "done"
+                elif slot >= 2 and (slot - 2) in dead:
+                    culprits.append(sid)
+                # else: never claimed, or claimed by a worker we killed
+                # ourselves — reruns live without burning a retry
+            wds = pol._iter_wds
+            hard = [sid for sid in culprits
+                    if wds[sid].retries == 0
+                    and not getattr(wds[sid], "_timed_out", False)]
+            if hard:
+                labels = ", ".join(wds[sid].label for sid in hard[:4])
+                self._lost = (
+                    f"worker process(es) {sorted(dead)} died mid "
+                    f"replay-plane iteration with {len(culprits)} "
+                    f"claimed task(s) in flight: {labels}")
+                raise WorkerLost(self._lost)
+            if self.tracer.enabled:
+                for w in sorted(dead):
+                    self.tracer.mgr_event(
+                        EV_WORKER_LOST, 2 + w,
+                        {"widx": w, "plane": True,
+                         "lost": [wds[sid].label for sid in culprits
+                                  if img.exec_slot(sid) == 2 + w]})
+            self.trace_lost_n += len(culprits)
+            for sid in culprits:
+                wd = wds[sid]
+                reason = "timeout" if getattr(wd, "_timed_out", False) \
+                    else "worker_lost"
+                wd.attempts.append(
+                    {"worker": img.exec_slot(sid) - 2, "reason": reason,
+                     "t": time.perf_counter() - self._trace_t0})
+                if self.tracer.enabled:
+                    self.tracer.task_event(
+                        EV_TRACE_LOST, wd, img.exec_slot(sid), None)
+                if wd.retries_left > 0:
+                    wd.retries_left -= 1
+                    wd._timed_out = False
+                    self.retries += 1
+                    if self.tracer.enabled:
+                        self.tracer.task_event(
+                            EV_RETRY, wd, 1,
+                            {"attempt": len(wd.attempts),
+                             "reason": reason})
+                else:
+                    done_map[sid] = "poisoned"
+                    self.poisoned += 1
+                    with self._errors_lock:
+                        self._errors.append(
+                            (wd.label,
+                             f"{reason} on the replay plane (retries "
+                             f"exhausted)", list(wd.attempts)))
+            if self.respawns + len(dead) > self.max_respawns:
+                self._lost = (f"respawn budget ({self.max_respawns}) "
+                              f"exhausted during plane recovery")
+                raise WorkerLost(self._lost)
+            # fresh plane lock: the old one may be held by a dead
+            # process, which would deadlock every future iteration
+            self._plane_lock = self._ctx.Lock()
+            for w in range(self.num_workers):
+                self._respawn_worker(w, count=(w in dead))
+        # route the rest of the iteration through live analysis: roots
+        # re-enter via push_replay, which completes plane-finished (and
+        # poisoned) sids from plane_done instead of re-executing them
+        d.plane_done = done_map
+        self._recover_img = img
+        d.capture = False
+        cap, d.captured = d.captured, []
+        for wd, sid in cap:
+            d.push_replay(wd, sid)
+
+    def _drain_plane_ready(self) -> int:
+        """Complete tasks the aborted plane generation already ran (or
+        poisoned): stamp their plane times, ingest trace stamps, and
+        cascade through the policy so successors become ready."""
+        d = self._dispatch
+        if not d.plane_ready:
+            return 0
+        pol = self.policy
+        img = self._recover_img
+        n = 0
+        while d.plane_ready:
+            wd, sid = d.plane_ready.popleft()
+            if d.plane_done.get(sid) == "done" and img is not None:
+                t0, t1 = img.times(sid)
+                wd.exec_dur = t1 - t0
+                wd.exec_span = (t0, t1)
+                if self.tracer.enabled:
+                    slot = img.exec_slot(sid)
+                    self.tracer.ingest(
+                        [(t0, EV_START, wd.wd_id, slot, wd.label,
+                          wd.scope, None),
+                         (t1, EV_END, wd.wd_id, slot, wd.label,
+                          wd.scope, None)])
+                self.stats.tasks_executed += 1
+            wd.mark_finished()
+            pol.complete(wd, 0)
+            n += 1
+        return n
 
     def _quiesce(self) -> None:
         pol = self.policy
@@ -940,7 +1277,8 @@ class ProcessRuntime:
     def _reaper_loop(self) -> None:
         pol = self.policy
         while not self._stop.is_set():
-            n = self._pump_dones()
+            with self._rings_lock:
+                n = self._pump_dones()
             n += self._dispatch.flush_all()
             if pol.uses_idle_managers:
                 n += pol.callback(0)
@@ -949,19 +1287,38 @@ class ProcessRuntime:
                 time.sleep(2e-5)
 
     def _pump_dones(self) -> int:
+        """Drain every Done ring. Callers hold ``_rings_lock`` (except
+        teardown, which runs after the reaper joined). A CRC failure on
+        a frame is a structured transport error: count it and kill the
+        producing worker — the supervision path respawns it and retries
+        its in-flight tasks."""
         n = 0
-        for ring in self._done_rings:
+        plan = self.fault_plan
+        for widx in range(len(self._done_rings)):
+            ring = self._done_rings[widx]
             while True:
-                frame = ring.pop()
+                try:
+                    frame = ring.pop()
+                except RingCorruption:
+                    self.transport_errors += 1
+                    if not self._torn_down:
+                        self._kill_worker_proc(widx)
+                    break
                 if frame is None:
                     break
+                if plan is not None:
+                    act = plan.on_done_frame(widx)
+                    if act == "drop":    # lost done: only timeout=
+                        continue         # recovers the task
+                    if isinstance(act, tuple):
+                        time.sleep(act[1])
                 n += 1
-                self._handle_frame(frame)
+                self._handle_frame(frame, widx)
         return n
 
-    def _handle_frame(self, frame: bytes) -> None:
+    def _handle_frame(self, frame: bytes, widx: int) -> None:
         kind = frame[0]
-        if kind == K_TRACE:
+        if kind == K_TRACE:              # pragma: no cover - legacy
             if self.tracer.enabled:
                 self.tracer.ingest(serial.parse(frame)[1])
             return
@@ -975,52 +1332,194 @@ class ProcessRuntime:
                 with self._errors_lock:
                     self._errors.append(
                         (f"replay sid {wd_id}",
-                         blob.decode("utf-8", "replace")))
+                         blob.decode("utf-8", "replace"), []))
                 continue
             entry = self._dispatch.task_done(wd_id)
             if entry is None:            # pragma: no cover - defensive
                 continue
-            wd, _widx = entry
+            wd, w, _t_enq = entry
             wd.exec_dur = t1 - t0
             wd.exec_span = (t0, t1)
+            if self.tracer.enabled:
+                # parent-side lifecycle reconstruction: workers ship no
+                # trace frames; START/END come from the done stamps, so
+                # a crashed worker costs only its un-acked tasks' events
+                self.tracer.ingest(
+                    [(t0, EV_START, wd.wd_id, 2 + w, wd.label,
+                      wd.scope, None),
+                     (t1, EV_END, wd.wd_id, 2 + w, wd.label,
+                      wd.scope, None)])
             if status == DONE_OK and blob:
                 try:
                     wd.result = pickle.loads(blob)
                 except Exception:        # pragma: no cover - defensive
                     pass
             elif status == DONE_ERROR:
+                if wd.retries_left > 0:
+                    self._retry(wd, w, "error")
+                    continue             # not finished: re-dispatched
+                self.poisoned += 1
                 with self._errors_lock:
                     self._errors.append(
-                        (wd.label, blob.decode("utf-8", "replace")))
+                        (wd.label, blob.decode("utf-8", "replace"),
+                         list(wd.attempts)))
             wd.mark_finished()
             self.policy.complete(wd, 0)
             self.stats.tasks_executed += 1
 
+    # ------------------------------------------------------------------
+    # supervision: death detection, timeouts, respawn, retry/poison
     def _check_workers(self) -> None:
         now = time.perf_counter()
         if now - self._last_check < 5e-3 or self._lost is not None:
             return
         self._last_check = now
+        if not self._plane_active:
+            self._timeout_scan(now)
         for widx, p in enumerate(self._procs):
             if p.is_alive():
                 continue
-            stuck = [wd.label for wd, w in self._dispatch.inflight.values()
-                     if w == widx]
-            self._lost = (
-                f"worker process {widx} (pid {p.pid}, exitcode "
-                f"{p.exitcode}) died with {len(stuck)} task(s) in "
-                f"flight: {', '.join(stuck[:4]) or 'none'}")
+            if self._plane_active:
+                # the main thread owns plane recovery: just flag it
+                self._plane_dead = widx
+                return
+            self._handle_worker_death(widx)
+            return                       # one death per tick; the next
+            #                              tick catches any others
+
+    def _timeout_scan(self, now: float) -> None:
+        """Enforce per-task ``timeout=``: a task dispatched longer ago
+        than its deadline gets its worker SIGKILLed (the only way to
+        interrupt a stuck body in another process); the death handler
+        then retries or poisons it with reason ``timeout``."""
+        for wd, widx, t_enq in list(self._dispatch.inflight.values()):
+            if wd.timeout is None or getattr(wd, "_timed_out", False):
+                continue
+            if now - t_enq <= wd.timeout:
+                continue
+            wd._timed_out = True
+            self.timeout_kills += 1
+            if self.tracer.enabled:
+                self.tracer.task_event(EV_TIMEOUT_KILL, wd, 2 + widx,
+                                       {"timeout": wd.timeout})
+            self._kill_worker_proc(widx)
+
+    def _handle_worker_death(self, widx: int) -> None:
+        """Runs on the reaper thread when worker ``widx`` is found dead
+        outside a plane iteration: harvest its final done frames, split
+        its in-flight tasks into buffered (never shipped — they flush
+        to the replacement) and lost, fail fast if a lost task has
+        ``retries=0`` (and did not time out), otherwise respawn the
+        worker and retry or poison each lost task."""
+        d = self._dispatch
+        p = self._procs[widx]
+        p.join(timeout=5.0)
+        pid, exitcode = p.pid, p.exitcode
+        with d._locks[widx]:
+            d.paused[widx] = True        # buffer, don't ship, while the
+            #                              rings are being swapped
+        with self._rings_lock:
+            self._pump_dones()           # completed != lost
+            with d._locks[widx]:
+                buffered = {e[0] for e in d._buffers[widx]}
+                lost = [wd for wd_id, (wd, w, _t)
+                        in list(d.inflight.items())
+                        if w == widx and wd_id not in buffered]
+                for wd in lost:
+                    d.task_done(wd.wd_id)
+            hard = [wd for wd in lost if wd.retries == 0
+                    and not getattr(wd, "_timed_out", False)]
+            if hard:
+                labels = ", ".join(wd.label for wd in hard[:4])
+                self._lost = (
+                    f"worker process {widx} (pid {pid}, exitcode "
+                    f"{exitcode}) died with {len(lost)} task(s) in "
+                    f"flight: {labels or 'none'}")
+                return                   # retries=0 keeps fail-fast
+            #                              semantics: no respawn
+            if self.tracer.enabled:
+                self.tracer.mgr_event(
+                    EV_WORKER_LOST, 2 + widx,
+                    {"widx": widx, "pid": pid, "exitcode": exitcode,
+                     "lost": [wd.label for wd in lost]})
+                for wd in lost:
+                    # their START events can never be reconstructed:
+                    # the done stamps died with the worker
+                    self.tracer.task_event(EV_TRACE_LOST, wd,
+                                           2 + widx, None)
+            self.trace_lost_n += len(lost)
+            if self.respawns >= self.max_respawns:
+                self._lost = (f"respawn budget ({self.max_respawns}) "
+                              f"exhausted after worker {widx} died")
+                return
+            self._respawn_worker(widx)
+        with d._locks[widx]:
+            d.paused[widx] = False       # buffered tasks flush to the
+            #                              replacement via flush_all
+        for wd in lost:
+            reason = "timeout" if getattr(wd, "_timed_out", False) \
+                else "worker_lost"
+            self._retry_or_poison(wd, widx, reason)
+
+    def _retry(self, wd: WorkDescriptor, widx: int, reason: str) -> None:
+        wd.retries_left -= 1
+        wd._timed_out = False            # fresh deadline on re-dispatch
+        wd.attempts.append({"worker": widx, "reason": reason,
+                            "t": time.perf_counter() - self._trace_t0})
+        self.retries += 1
+        if self.tracer.enabled:
+            self.tracer.task_event(EV_RETRY, wd, 2 + widx,
+                                   {"attempt": len(wd.attempts),
+                                    "reason": reason})
+        self._dispatch.push(wd)
+
+    def _retry_or_poison(self, wd: WorkDescriptor, widx: int,
+                         reason: str) -> None:
+        if wd.retries_left > 0:
+            self._retry(wd, widx, reason)
             return
+        wd.attempts.append({"worker": widx, "reason": reason,
+                            "t": time.perf_counter() - self._trace_t0})
+        self.poisoned += 1
+        with self._errors_lock:
+            self._errors.append(
+                (wd.label,
+                 f"{reason} (retries exhausted after "
+                 f"{len(wd.attempts)} attempt(s))", list(wd.attempts)))
+        wd.mark_finished()
+        self.policy.complete(wd, 0)
+
+    def _kill_worker_proc(self, widx: int) -> None:
+        p = self._procs[widx]
+        if p.pid is None:                # pragma: no cover - defensive
+            return
+        try:
+            os.kill(p.pid, signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            pass                         # already gone
+
+    def _chaos_shipped(self, count: int) -> None:
+        """Fault-plan hook, called by dispatch after shipping a frame of
+        ``count`` tasks: fire any kill whose threshold was crossed."""
+        plan = self.fault_plan
+        if plan is None:                 # pragma: no cover - defensive
+            return
+        doomed = plan.on_task_shipped(count)
+        if doomed:
+            time.sleep(2e-3)             # let the victim pop the frame
+            for widx in doomed:
+                self._kill_worker_proc(widx)
 
     def _raise_task_errors(self) -> None:
         with self._errors_lock:
             if not self._errors:
                 return
             errors, self._errors = self._errors, []
-        where, tb = errors[0]
+        where, tb, attempts = errors[0]
         more = f" (+{len(errors) - 1} more)" if len(errors) > 1 else ""
+        att = f" after {len(attempts)} attempt(s)" if attempts else ""
         raise TaskFailed(f"task {where!r} raised in a worker "
-                         f"process{more}:\n{tb}")
+                         f"process{att}{more}:\n{tb}", failures=errors)
 
     def _manager_loop(self) -> None:
         while not self._stop.is_set():

@@ -23,26 +23,36 @@ syscall-free memoryview writes keeps ARM happy too. This is the same
 "good-enough SPSC" contract real runtimes (e.g. AMReX/Perilla forwarders)
 use for worker mailboxes.
 
-Frames are ``u32 length`` + payload, always contiguous: when a frame
-does not fit before the end of the data region the producer writes a
-``WRAP`` marker (or, with < 4 bytes left, nothing) and skips to the
-region start; the consumer mirrors the skip. Frames larger than half
-the capacity — or pushes that time out against a full ring — take the
-**fallback lane**: the raw frame goes through a ``SimpleQueue`` (pipe)
-and a 4-byte ``FALLBACK`` marker keeps its position in the ring, so
-FIFO order is preserved even for payloads the ring cannot hold.
+Frames are ``u32 length | u32 crc32`` + payload, always contiguous:
+when a frame does not fit before the end of the data region the
+producer writes a ``WRAP`` marker (or, with < 4 bytes left, nothing)
+and skips to the region start; the consumer mirrors the skip. The CRC
+covers the payload; a mismatch at pop raises
+:class:`~repro.core.errors.RingCorruption` *after* advancing past the
+frame, so one corrupt frame costs one structured error, not a desynced
+ring — the process driver treats it as a worker fault (kill + respawn
++ retry). Frames larger than half the capacity — or pushes that time
+out against a full ring — take the **fallback lane**: the raw frame
+goes through a ``SimpleQueue`` (pipe) and a 4-byte ``FALLBACK`` marker
+keeps its position in the ring (the pipe transport has its own
+integrity, so fallback frames carry no ring-side CRC), preserving FIFO
+order even for payloads the ring cannot hold.
 """
 from __future__ import annotations
 
 import struct
 import time
+import zlib
 from multiprocessing import shared_memory
 from typing import Optional
+
+from ..errors import RingCorruption
 
 _U64 = struct.Struct("<Q")
 _U32 = struct.Struct("<I")
 
 _HDR = 24                      # head u64 @0, tail u64 @8, capacity @16
+_FHDR = 8                      # frame header: u32 length + u32 crc32
 WRAP = 0xFFFFFFFF              # skip to data-region start
 FALLBACK = 0xFFFFFFFE          # pop one frame from the fallback queue
 
@@ -93,6 +103,10 @@ class ShmRing:
         self.pushed = 0
         self.popped = 0
         self.fallbacks = 0
+        # fault-injection hook (core.procs.chaos): flip one payload byte
+        # of the next inline push AFTER its CRC is computed, so the
+        # consumer's check fires deterministically
+        self._corrupt_next = False
 
     @classmethod
     def attach(cls, name: str, fallback=None) -> "ShmRing":
@@ -121,7 +135,7 @@ class ShmRing:
         Returns False when the ring lacks space right now."""
         n = len(frame)
         if self.fallback is not None and \
-                n + 4 > self.capacity // _MAX_INLINE_FRAC:
+                n + _FHDR > self.capacity // _MAX_INLINE_FRAC:
             return self._push_fallback(frame)
         return self._push_inline(frame)
 
@@ -155,26 +169,31 @@ class ShmRing:
     def _push_inline(self, frame: bytes) -> bool:
         n = len(frame)
         cap = self.capacity
-        if n + 4 > cap // _MAX_INLINE_FRAC:
+        if n + _FHDR > cap // _MAX_INLINE_FRAC:
             return False                 # never fits: caller's problem
         head, tail = self._head(), self._tail()
         free = cap - (tail - head)
         off = tail % cap
         contig = cap - off
-        if contig < n + 4:
+        if contig < n + _FHDR:
             # frame would straddle the region end: burn `contig` bytes
             # (with a WRAP marker when the length field fits)
-            if free < contig + n + 4:
+            if free < contig + n + _FHDR:
                 return False
             if contig >= 4:
                 _U32.pack_into(self.shm.buf, _HDR + off, WRAP)
             tail += contig
             off = 0
-        elif free < n + 4:
+        elif free < n + _FHDR:
             return False
         _U32.pack_into(self.shm.buf, _HDR + off, n)
-        self.shm.buf[_HDR + off + 4:_HDR + off + 4 + n] = frame
-        self._set_tail(tail + 4 + n)     # publish AFTER the payload
+        _U32.pack_into(self.shm.buf, _HDR + off + 4,
+                       zlib.crc32(frame) & 0xFFFFFFFF)
+        self.shm.buf[_HDR + off + _FHDR:_HDR + off + _FHDR + n] = frame
+        if self._corrupt_next and n:
+            self.shm.buf[_HDR + off + _FHDR] ^= 0xFF
+            self._corrupt_next = False
+        self._set_tail(tail + _FHDR + n)  # publish AFTER the payload
         self.pushed += 1
         return True
 
@@ -213,7 +232,10 @@ class ShmRing:
 
     # -- consumer -------------------------------------------------------
     def pop(self) -> Optional[bytes]:
-        """Dequeue one frame, or None when the ring is empty."""
+        """Dequeue one frame, or None when the ring is empty. Raises
+        :class:`RingCorruption` when a frame's payload fails its CRC32
+        check — the head has already advanced past the bad frame, so
+        the next pop reads the next frame."""
         while True:
             head, tail = self._head(), self._tail()
             if head == tail:
@@ -232,10 +254,18 @@ class ShmRing:
                 self._set_head(head + 4)
                 self.popped += 1
                 return self.fallback.get()
-            frame = bytes(self.shm.buf[_HDR + off + 4:
-                                       _HDR + off + 4 + n])
-            self._set_head(head + 4 + n)
+            crc = _U32.unpack_from(self.shm.buf, _HDR + off + 4)[0]
+            frame = bytes(self.shm.buf[_HDR + off + _FHDR:
+                                       _HDR + off + _FHDR + n])
+            self._set_head(head + _FHDR + n)
             self.popped += 1
+            actual = zlib.crc32(frame) & 0xFFFFFFFF
+            if actual != crc:
+                raise RingCorruption(
+                    f"ring {self.name}: frame at offset {off} failed "
+                    f"CRC32 (stored {crc:#010x}, computed "
+                    f"{actual:#010x})", ring=self.name,
+                    expected=crc, actual=actual)
             return frame
 
     # -- lifecycle ------------------------------------------------------

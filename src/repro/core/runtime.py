@@ -55,6 +55,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+import traceback as _tb
 from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
@@ -62,11 +63,13 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 from .ddast import DDASTParams
 from .dispatcher import FunctionalityDispatcher
 from .engine import make_placement, make_policy, mode_uses_shards
+from .errors import ScopeExpired, TaskFailed
 from .queues import InstrumentedLock
 from .scopes import (FairAdmission, JobScope, ScopedPolicy, scope_rollup,
                      scoped_deps)
-from .trace import (EV_CREATED, EV_END, EV_START, NULL_TRACER,
-                    TraceEvent, TraceRecorder, replay_iterations_of)
+from .trace import (EV_CREATED, EV_END, EV_RETRY, EV_SCOPE_EXPIRED,
+                    EV_START, NULL_TRACER, TraceEvent, TraceRecorder,
+                    replay_iterations_of)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 _MODES = ("sync", "dast", "ddast", "sharded")
@@ -125,6 +128,19 @@ class RuntimeStats:
     ipc_done_msgs: int = 0
     ipc_ctrl_msgs: int = 0
     ipc_iter: List[Tuple[int, int]] = field(default_factory=list)
+    # Fault-tolerance counters. Respawns, timeout kills, transport
+    # errors, zombies and shm leaks are process-backend quantities;
+    # retries/poisoned also count threaded body-error retries, and
+    # scopes_expired counts deadline/budget expiries (threads).
+    worker_respawns: int = 0
+    task_retries: int = 0
+    tasks_poisoned: int = 0
+    timeout_kills: int = 0
+    transport_errors: int = 0
+    trace_lost: int = 0
+    zombie_workers: int = 0
+    leaked_shm: List[str] = field(default_factory=list)
+    scopes_expired: int = 0
 
 
 # Backward-compatible alias: the lock lives in queues.py so every layer
@@ -235,6 +251,16 @@ class TaskRuntime:
         self._free_client_slots = list(range(num_workers + 1, num_slots))
         self._client_slot_of: Dict[int, int] = {}   # thread ident -> slot
         self._client_slot_refs: Dict[int, int] = {}  # slot -> open scopes
+        # per-scope failure isolation: body errors keyed by the failing
+        # task's scope (None = the default root context) and raised only
+        # from that scope's taskwait — one tenant's crash never surfaces
+        # in another tenant's wait
+        self._task_errors: Dict[Optional[int],
+                                List[Tuple[str, str, list]]] = {}
+        self._error_lock = threading.Lock()
+        self._scope_by_id: Dict[int, JobScope] = {}
+        self._retry_count = 0
+        self._poisoned_count = 0
 
     # ------------------------------------------------------------------
     # historical accessors (the policy owns the structures now)
@@ -283,10 +309,21 @@ class TaskRuntime:
     def shutdown(self) -> None:
         # scope roots are NOT children of the runtime root: drain every
         # still-open tenant before the final root taskwait (close() is
-        # a no-op for scopes the client already closed)
+        # a no-op for scopes the client already closed). A failing
+        # tenant must not abort the teardown of the others: collect the
+        # first error, finish draining and joining, then re-raise.
+        err: Optional[BaseException] = None
         for sc in self._scopes:
-            sc.close()
-        self.taskwait()
+            try:
+                sc.close()
+            except (TaskFailed, ScopeExpired) as e:
+                if err is None:
+                    err = e
+        try:
+            self.taskwait()
+        except (TaskFailed, ScopeExpired) as e:
+            if err is None:
+                err = e
         self._stop.set()
         for t in self._threads:
             t.join(timeout=5.0)
@@ -322,7 +359,14 @@ class TaskRuntime:
                      "wall_s": sc.wall_s}
             entry.update(scope_rollup(self.placement, self.policy,
                                       sc.scope_id))
+            if sc._expired_reason is not None:
+                entry["expired"] = sc._expired_reason
+                entry["budget_used_s"] = sc._budget_used
             self.stats.scopes[sc.name] = entry
+        self.stats.task_retries += self._retry_count
+        self.stats.tasks_poisoned += self._poisoned_count
+        if err is not None:
+            raise err
 
     # ------------------------------------------------------------------
     # ready pool / occupancy probes (delegated)
@@ -345,20 +389,30 @@ class TaskRuntime:
     # public task API
     def task(self, func: Callable[..., Any], *args,
              deps: Sequence[Tuple[Any, Union[str, DepMode]]] = (),
-             label: str = "task") -> WorkDescriptor:
-        """Create + submit a task (life-cycle steps 1-2)."""
+             label: str = "task", retries: int = 0,
+             timeout: Optional[float] = None) -> WorkDescriptor:
+        """Create + submit a task (life-cycle steps 1-2). ``retries=N``
+        re-runs a body that raises up to N times before the error is
+        recorded (at-least-once: retried bodies must be idempotent);
+        exhausted retries surface as :class:`TaskFailed` at the owning
+        scope's taskwait. ``timeout=`` is advisory under threads (a
+        thread cannot be killed mid-body); the process backend enforces
+        it by killing and respawning the stuck worker."""
         parent = getattr(_tls, "current", None) or self._root
-        return self._submit_task(parent, func, args, deps, label)
+        return self._submit_task(parent, func, args, deps, label,
+                                 retries=retries, timeout=timeout)
 
     def _submit_task(self, parent: WorkDescriptor, func, args, deps,
-                     label: str) -> WorkDescriptor:
+                     label: str, retries: int = 0,
+                     timeout: Optional[float] = None) -> WorkDescriptor:
         # the ONE keying shim (core.scopes): a task created under a
         # scope declares scope-qualified regions, so tenants can never
         # alias each other's keys anywhere downstream
         wd = WorkDescriptor(func=func, args=args,
                             deps=_parse_deps(scoped_deps(parent.scope,
                                                          deps)),
-                            label=label, parent=parent)
+                            label=label, parent=parent,
+                            retries=max(0, retries), timeout=timeout)
         wid = self._current_wid()
         if self.tracer.enabled:
             self.tracer.task_event(EV_CREATED, wd, wid)
@@ -420,6 +474,8 @@ class TaskRuntime:
                              self.policy, sid)})
                 if not scope_root:
                     self.dispatcher.notify_quiescent(wid)
+                if root:
+                    self._raise_wait_errors(sid, scope_root)
                 return
             wd = self.placement.pop(wid)
             if wd is not None:
@@ -432,11 +488,19 @@ class TaskRuntime:
     # multi-tenant scope API (core.scopes)
     def open_scope(self, name: Optional[str] = None, *,
                    weight: float = 1.0,
-                   max_inflight: Optional[int] = None) -> JobScope:
+                   max_inflight: Optional[int] = None,
+                   deadline: Optional[float] = None,
+                   budget: Optional[float] = None) -> JobScope:
         """Open an independent root context for one tenant. Requires a
         multi-tenant runtime (``num_clients >= 1``): client threads each
         own a submit slot there, and the scope layers (per-scope replay
-        slots + fair admission) are in place."""
+        slots + fair admission) are in place.
+
+        ``deadline=`` (wall seconds from open) and ``budget=`` (summed
+        body-execution seconds) bound the scope: once either expires,
+        FairAdmission drains the scope's queued tasks unrun and the
+        scope's own taskwait raises :class:`ScopeExpired` — other
+        tenants are untouched."""
         if self.num_clients <= 0:
             raise ValueError(
                 "open_scope needs TaskRuntime(num_clients=N): client "
@@ -445,15 +509,18 @@ class TaskRuntime:
         slot = self._ensure_client_slot()
         sid = next(self._scope_seq)
         sc = JobScope(self, sid, name or f"scope{sid}",
-                      weight=weight, max_inflight=max_inflight)
+                      weight=weight, max_inflight=max_inflight,
+                      deadline=deadline, budget=budget)
         if slot > self.num_workers:     # an allocated client slot:
             sc._client_slot = slot      # returned once the owning
             with self._client_slot_lock:  # thread's last scope closes
                 self._client_slot_refs[slot] = \
                     self._client_slot_refs.get(slot, 0) + 1
         self.policy.register_scope(sid)
-        self.placement.register_scope(sid, weight, max_inflight)
+        self.placement.register_scope(sid, weight, max_inflight,
+                                      expired_fn=sc.is_expired)
         self._scopes.append(sc)
+        self._scope_by_id[sid] = sc
         return sc
 
     def _release_client_slot(self, scope: JobScope) -> None:
@@ -478,12 +545,14 @@ class TaskRuntime:
             self._free_client_slots.append(slot)
 
     def _scope_task(self, scope: JobScope, func, args, deps,
-                    label: str) -> WorkDescriptor:
+                    label: str, retries: int = 0,
+                    timeout: Optional[float] = None) -> WorkDescriptor:
         cur = getattr(_tls, "current", None)
         parent = (cur if cur is not None
                   and getattr(cur, "scope", None) == scope.scope_id
                   else scope.root)
-        return self._submit_task(parent, func, args, deps, label)
+        return self._submit_task(parent, func, args, deps, label,
+                                 retries=retries, timeout=timeout)
 
     def _scope_taskwait(self, scope: JobScope) -> None:
         self._taskwait_on(scope.root)
@@ -553,22 +622,112 @@ class TaskRuntime:
         if tr.enabled:
             tr.task_event(EV_START, wd, worker_id)
         t0 = time.perf_counter()
+        executed = False
         try:
-            if wd.func is not None:
-                wd.result = wd.func(*wd.args)
+            # a raising body must NOT kill the worker thread (that hung
+            # every later taskwait): capture it, retry in place while
+            # retries remain, then record it against the owning scope
+            while wd.func is not None and not wd.cancelled:
+                try:
+                    wd.result = wd.func(*wd.args)
+                    executed = True
+                    break
+                except Exception:
+                    if wd.retries_left > 0:
+                        # attempt history records RETRIED attempts only
+                        # (the terminal failure is the traceback itself
+                        # — same convention as the process backend)
+                        wd.attempts.append(
+                            {"worker": worker_id, "reason": "error",
+                             "t": time.perf_counter() - self._trace_t0})
+                        wd.retries_left -= 1
+                        self._retry_count += 1
+                        if tr.enabled:
+                            tr.task_event(
+                                EV_RETRY, wd, worker_id,
+                                {"attempt": len(wd.attempts),
+                                 "reason": "error"})
+                        continue
+                    self._poisoned_count += 1
+                    with self._error_lock:
+                        self._task_errors.setdefault(
+                            wd.scope, []).append(
+                                (wd.label, _tb.format_exc(),
+                                 list(wd.attempts)))
+                    break
         finally:
             # measured body time feeds the replay scheduler's cost EMA
             wd.exec_dur = time.perf_counter() - t0
             wd.mark_finished()
             _tls.current, _tls.worker_id = prev_task, prev_wid
+        self._charge_scope(wd)
         if tr.enabled:
             # end BEFORE complete(): successors' ready events must sort
             # after their predecessor's end
             tr.task_event(EV_END, wd, worker_id)
-        self.stats.tasks_executed += 1
+        if executed or wd.func is None:
+            self.stats.tasks_executed += 1
         self.placement.note_executed(wd, worker_id)
         self.policy.complete(wd, worker_id)
         self._sample_trace()
+
+    def _charge_scope(self, wd: WorkDescriptor) -> None:
+        """Charge a finished body against its scope's execution-time
+        budget and fire the expiry transition the first time the scope
+        is seen expired."""
+        if wd.scope is None:
+            return
+        sc = self._scope_by_id.get(wd.scope)
+        if sc is None:
+            return
+        if not wd.cancelled:
+            sc._budget_used += wd.exec_dur
+        if sc.is_expired():
+            self._note_expiry(sc)
+
+    def _note_expiry(self, sc: JobScope) -> None:
+        """Record a scope's deadline/budget expiry exactly once (stats
+        counter + trace event); safe to call repeatedly."""
+        if sc._expiry_traced:
+            return
+        sc._expiry_traced = True
+        self.stats.scopes_expired += 1
+        if self.tracer.enabled:
+            self.tracer.mgr_event(
+                EV_SCOPE_EXPIRED, self._current_wid(),
+                {"scope": sc.scope_id, "name": sc.name,
+                 "reason": sc._expired_reason})
+
+    def _raise_wait_errors(self, sid: Optional[int],
+                           scope_root: bool) -> None:
+        """Surface failures at the owning wait only: a scope taskwait
+        raises its own scope's errors (ScopeExpired once, then any
+        TaskFailed); the default root taskwait raises only scope-less
+        task errors. One tenant's failure never escapes into another
+        tenant's — or the root's — wait."""
+        if scope_root:
+            sc = self._scope_by_id.get(sid)
+            if sc is not None and sc.is_expired() \
+                    and not sc._expiry_raised:
+                sc._expiry_raised = True
+                self._note_expiry(sc)
+                with self._error_lock:
+                    self._task_errors.pop(sid, None)
+                raise ScopeExpired(
+                    f"scope {sc.name!r} expired ({sc._expired_reason}); "
+                    f"{sc.drained} queued task(s) drained unrun",
+                    scope=sc.name, reason=sc._expired_reason,
+                    drained=sc.drained)
+        with self._error_lock:
+            errors = self._task_errors.pop(sid, None)
+        if not errors:
+            return
+        label, tb, attempts = errors[0]
+        more = f" (+{len(errors) - 1} more)" if len(errors) > 1 else ""
+        att = f" after {len(attempts)} attempt(s)" if attempts else ""
+        where = "" if sid is None else " in its scope"
+        raise TaskFailed(f"task {label!r} raised{where}{att}{more}:\n{tb}",
+                         failures=errors)
 
     def _worker_loop(self, worker_id: int) -> None:
         _tls.current = self._root

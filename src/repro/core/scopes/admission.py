@@ -53,10 +53,11 @@ from ..wd import WorkDescriptor
 class _ScopeRing:
     __slots__ = ("scope_id", "weight", "max_inflight", "ring", "deficit",
                  "inflight", "admitted", "pushed", "admission_waits",
-                 "max_queued")
+                 "max_queued", "expired_fn", "drained")
 
     def __init__(self, scope_id: int, weight: float,
-                 max_inflight: Optional[int]) -> None:
+                 max_inflight: Optional[int],
+                 expired_fn=None) -> None:
         self.scope_id = scope_id
         self.weight = weight
         self.max_inflight = max_inflight
@@ -69,6 +70,10 @@ class _ScopeRing:
         #: each waited in the ring for at least one later admission pass
         self.admission_waits = 0
         self.max_queued = 0
+        #: expiry probe (JobScope.is_expired): once it answers True the
+        #: scope's queued tasks drain-and-fail instead of admitting
+        self.expired_fn = expired_fn
+        self.drained = 0
 
 
 class FairAdmission(PlacementPolicy):
@@ -90,10 +95,11 @@ class FairAdmission(PlacementPolicy):
 
     # -- scope registry -------------------------------------------------
     def register_scope(self, scope_id: int, weight: float = 1.0,
-                       max_inflight: Optional[int] = None) -> None:
+                       max_inflight: Optional[int] = None,
+                       expired_fn=None) -> None:
         if scope_id in self._rings:
             raise ValueError(f"scope {scope_id} already registered")
-        r = _ScopeRing(scope_id, weight, max_inflight)
+        r = _ScopeRing(scope_id, weight, max_inflight, expired_fn)
         self._rings[scope_id] = r
         self._ring_list.append(r)
 
@@ -158,7 +164,28 @@ class FairAdmission(PlacementPolicy):
         return {"admitted": r.admitted,
                 "admission_waits": r.admission_waits,
                 "max_queued": r.max_queued,
+                "drained": r.drained,
                 "weight": r.weight}
+
+    def _drain_one(self, r: _ScopeRing, wd: WorkDescriptor) -> None:
+        """Route one task of an expired scope straight to the inner
+        placement as a cancelled no-op: workers pop it and skip the
+        body, so the scope's graph drains without executing — and
+        without occupying a window slot (``_fair_admitted`` stays
+        unset, so the pop-side release skips it too)."""
+        wd.cancelled = True
+        r.drained += 1
+        self.inner.push(wd)
+
+    def _drain_expired(self) -> None:
+        for r in self._ring_list:
+            if r.ring and r.expired_fn is not None and r.expired_fn():
+                while True:
+                    try:
+                        wd = r.ring.popleft()
+                    except IndexError:
+                        break
+                    self._drain_one(r, wd)
 
     def _admit(self) -> None:
         """Weighted-deficit drain of the scope rings into the inner
@@ -171,6 +198,7 @@ class FairAdmission(PlacementPolicy):
         passes interleave harmlessly (each ring entry is popped exactly
         once — deque atomicity — and deficit skew from racing += is
         bounded by one round)."""
+        self._drain_expired()
         rings = self._ring_list
         while True:
             if self._inflight.value >= self._window:
@@ -198,6 +226,7 @@ class FairAdmission(PlacementPolicy):
             best.inflight.add(1)
             self._inflight.add(1)
             best.admitted += 1
+            wd._fair_admitted = True    # pop releases only real grants
             self.inner.push(wd)
 
     def push(self, wd: WorkDescriptor) -> None:
@@ -205,6 +234,9 @@ class FairAdmission(PlacementPolicy):
         if r is None:
             self.inner.push(wd)
             return
+        if r.expired_fn is not None and r.expired_fn():
+            self._drain_one(r, wd)      # expired: drain-and-fail, no
+            return                      # ring residency, no admission
         r.ring.append(wd)
         r.pushed += 1
         seq = r.pushed
@@ -234,7 +266,9 @@ class FairAdmission(PlacementPolicy):
         if self._ring_list:
             self._admit()
         wd = self.inner.pop(slot)
-        if wd is not None and wd.scope is not None:
+        if wd is not None and wd.scope is not None \
+                and getattr(wd, "_fair_admitted", False):
+            wd._fair_admitted = False
             r = self._rings.get(wd.scope)
             if r is not None:           # backpressure releases at pop
                 r.inflight.add(-1)

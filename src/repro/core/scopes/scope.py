@@ -62,16 +62,32 @@ class JobScope:
 
     def __init__(self, runtime, scope_id: int, name: str,
                  weight: float = 1.0,
-                 max_inflight: Optional[int] = None) -> None:
+                 max_inflight: Optional[int] = None,
+                 deadline: Optional[float] = None,
+                 budget: Optional[float] = None) -> None:
         if weight <= 0:
             raise ValueError("weight must be > 0")
         if max_inflight is not None and max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if deadline is not None and deadline <= 0:
+            raise ValueError("deadline must be > 0 seconds")
+        if budget is not None and budget <= 0:
+            raise ValueError("budget must be > 0 seconds")
         self._rt = runtime
         self.scope_id = scope_id
         self.name = name
         self.weight = weight
         self.max_inflight = max_inflight
+        # expiry bounds: wall-clock seconds from open, and summed
+        # body-execution seconds (charged by the runtime per finished
+        # task). Once either runs out, FairAdmission drains this
+        # scope's queued tasks unrun and taskwait raises ScopeExpired.
+        self.deadline = deadline
+        self.budget = budget
+        self._budget_used = 0.0
+        self._expired_reason: Optional[str] = None
+        self._expiry_traced = False     # counted/traced once (runtime)
+        self._expiry_raised = False     # ScopeExpired raised once
         self.root = WorkDescriptor(func=None, label=f"scope:{name}",
                                    scope=scope_id)
         self.root.state = TaskState.RUNNING
@@ -83,14 +99,47 @@ class JobScope:
         # allocated for it (recycled at close — see runtime)
         self._client_slot: Optional[int] = None
 
+    def is_expired(self) -> bool:
+        """True once the scope's wall deadline or execution budget ran
+        out (sticky). This is the ``expired_fn`` FairAdmission polls:
+        its drain path consults only this scope's state, so one
+        tenant's expiry never touches another's admission."""
+        if self._expired_reason is not None:
+            return True
+        if self.deadline is not None and \
+                time.perf_counter() - self.opened_s > self.deadline:
+            self._expired_reason = (
+                f"deadline {self.deadline:.3f}s exceeded")
+            return True
+        if self.budget is not None and self._budget_used > self.budget:
+            self._expired_reason = (
+                f"budget {self.budget:.3f}s exhausted "
+                f"({self._budget_used:.3f}s used)")
+            return True
+        return False
+
+    @property
+    def drained(self) -> int:
+        """Tasks FairAdmission drained unrun after this scope expired."""
+        adm = getattr(self._rt.placement, "scope_admission", None)
+        if adm is None:
+            return 0
+        try:
+            return adm(self.scope_id).get("drained", 0)
+        except KeyError:                # pragma: no cover - defensive
+            return 0
+
     # ------------------------------------------------------------------
     def task(self, func: Optional[Callable[..., Any]], *args,
              deps: Sequence[Tuple[Any, Any]] = (),
-             label: str = "task") -> WorkDescriptor:
+             label: str = "task", retries: int = 0,
+             timeout: Optional[float] = None) -> WorkDescriptor:
         """Create + submit a task under this scope. The parent is the
         calling thread's current task when that task already belongs to
-        this scope (nested creation), else the scope root."""
-        return self._rt._scope_task(self, func, args, deps, label)
+        this scope (nested creation), else the scope root. ``retries``/
+        ``timeout`` behave as in :meth:`TaskRuntime.task`."""
+        return self._rt._scope_task(self, func, args, deps, label,
+                                    retries=retries, timeout=timeout)
 
     def taskwait(self) -> None:
         """Block until all of THIS scope's tasks completed; the blocked
@@ -103,11 +152,16 @@ class JobScope:
 
     def close(self) -> None:
         """Taskwait, stop accounting wall time, and recycle the owning
-        thread's client slot once its last scope closes."""
+        thread's client slot once its last scope closes. The slot is
+        released even when the final taskwait raises (an expired or
+        failed scope must not leak its client slot)."""
         if self.closed_s is None:
-            self.taskwait()
             self.closed_s = time.perf_counter()
-            self._rt._release_client_slot(self)
+            try:
+                self.taskwait()
+            finally:
+                self.closed_s = time.perf_counter()
+                self._rt._release_client_slot(self)
 
     @property
     def wall_s(self) -> float:

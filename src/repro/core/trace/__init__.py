@@ -12,9 +12,12 @@ from .detect import (AFFINITY_MISS, INVERSION, STARVATION, Finding,
                      replay_windows)
 from .recorder import (EV_ADMIT_DEFER, EV_CREATED, EV_DEPS, EV_END,
                        EV_MSG_DRAIN, EV_MSG_ENQ, EV_QUIESCE, EV_READY,
-                       EV_START, EV_STEAL, NULL_TRACER, TASK_LIFECYCLE,
-                       NullTraceRecorder, TraceEvent, TraceRecorder,
-                       load_trace, replay_iterations_of, save_trace)
+                       EV_RESPAWN, EV_RETRY, EV_SCOPE_EXPIRED, EV_START,
+                       EV_STEAL, EV_TIMEOUT_KILL, EV_TRACE_LOST,
+                       EV_WORKER_LOST, FAULT_EVENTS, NULL_TRACER,
+                       TASK_LIFECYCLE, NullTraceRecorder, TraceEvent,
+                       TraceRecorder, load_trace, replay_iterations_of,
+                       save_trace)
 
 __all__ = [
     "TraceRecorder", "NullTraceRecorder", "NULL_TRACER", "TraceEvent",
@@ -22,6 +25,8 @@ __all__ = [
     "EV_CREATED", "EV_DEPS", "EV_READY", "EV_START", "EV_END",
     "EV_MSG_ENQ", "EV_MSG_DRAIN", "EV_STEAL", "EV_ADMIT_DEFER",
     "EV_QUIESCE",
+    "EV_WORKER_LOST", "EV_RESPAWN", "EV_RETRY", "EV_TIMEOUT_KILL",
+    "EV_SCOPE_EXPIRED", "EV_TRACE_LOST", "FAULT_EVENTS",
     "Finding", "detect_all", "detect_starvation",
     "detect_priority_inversion", "detect_affinity_misses",
     "replay_windows", "STARVATION", "INVERSION", "AFFINITY_MISS",

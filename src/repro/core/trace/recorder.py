@@ -62,7 +62,24 @@ EV_STEAL = "steal"                # popped from another slot's deque;
 EV_ADMIT_DEFER = "admission_defer"  # FairAdmission held the task back
 EV_QUIESCE = "quiesce"            # root-taskwait quiescence boundary
 
+# -- fault-tolerance events (core.errors; process-backend supervisor
+#    and the threaded retry path) ---------------------------------------
+EV_WORKER_LOST = "worker_lost"    # a worker process died; data: pid,
+#                                   exitcode, in-flight task labels
+EV_RESPAWN = "respawn"            # supervisor replaced the worker;
+#                                   slot = the respawned worker's slot
+EV_RETRY = "retry"                # a task was re-dispatched after a
+#                                   fault; data: attempt no. + reason
+EV_TIMEOUT_KILL = "timeout_kill"  # per-task timeout expired: the stuck
+#                                   worker was killed
+EV_SCOPE_EXPIRED = "scope_expired"  # a scope's deadline/budget ran out;
+#                                   its unrun tasks drain-and-fail
+EV_TRACE_LOST = "trace_lost"      # a crashed worker's in-flight task
+#                                   events could not be reconstructed
+
 TASK_LIFECYCLE = (EV_CREATED, EV_DEPS, EV_READY, EV_START, EV_END)
+FAULT_EVENTS = (EV_WORKER_LOST, EV_RESPAWN, EV_RETRY, EV_TIMEOUT_KILL,
+                EV_SCOPE_EXPIRED, EV_TRACE_LOST)
 
 
 class TraceEvent(NamedTuple):

@@ -64,6 +64,26 @@ class WorkDescriptor:
     # scope root routes through that scope's policy slot and admission
     # ring without per-submit lookups.
     scope: Optional[int] = None
+    # Fault tolerance (core.errors): how many times the runtime may
+    # re-dispatch this task after a worker loss / timeout / body error
+    # before poisoning it (0 = fail fast, today's semantics). Retries
+    # are at-least-once: a body may have partially run before the
+    # retry, so retryable bodies must be idempotent.
+    retries: int = 0
+    # Dispatch-to-done deadline in seconds, enforced by the process
+    # backend's supervisor (the stuck worker is killed + respawned and
+    # the task retried or poisoned). Advisory under threads: a Python
+    # thread cannot be preempted mid-body.
+    timeout: Optional[float] = None
+    # Remaining retry budget (counts down from `retries`) and the
+    # attempt history: one {"worker", "reason", "t"} dict per failed
+    # attempt, surfaced in TaskFailed when the budget runs out.
+    retries_left: int = 0
+    attempts: list = field(default_factory=list)
+    # Set when the owning scope expired before this task ran: the body
+    # is skipped (drain-and-fail) and the scope's taskwait raises
+    # ScopeExpired.
+    cancelled: bool = False
 
     wd_id: int = field(default_factory=lambda: next(_wd_ids))
     state: TaskState = TaskState.CREATED
@@ -93,6 +113,7 @@ class WorkDescriptor:
         default_factory=threading.Lock, repr=False)
 
     def __post_init__(self) -> None:
+        self.retries_left = self.retries
         if self.parent is not None:
             if self.scope is None:
                 self.scope = self.parent.scope

@@ -372,7 +372,7 @@ def test_fallback_timeout_orphans_nothing():
     fb = queue.SimpleQueue()
     ring = ShmRing(capacity=64, fallback=fb)
     try:
-        while ring.try_push(b"x" * 12):  # 16-byte frames pack the ring
+        while ring.try_push(b"x" * 8):   # 16-byte frames pack the ring
             pass                         # solid: no room for a marker
         big = b"B" * 60                  # oversize: fallback lane only
         assert ring._push_fallback(big, spin_s=0.01) is False
@@ -389,25 +389,25 @@ def test_fallback_timeout_orphans_nothing():
 def test_push_waits_for_slow_but_live_consumer():
     ring = ShmRing(capacity=64)
     try:
-        while ring.try_push(b"x" * 12):
+        while ring.try_push(b"x" * 8):
             pass
         ring.consumer_alive = lambda: False
         with pytest.raises(BufferError):
-            ring.push(b"y" * 12, spin_s=0.01)
+            ring.push(b"y" * 8, spin_s=0.01)
 
         def probe():                     # live consumer making progress
             ring.pop()
             return True
 
         ring.consumer_alive = probe
-        ring.push(b"y" * 12, spin_s=0.01)   # pre-fix: BufferError
+        ring.push(b"y" * 8, spin_s=0.01)    # pre-fix: BufferError
         last = None
         while True:
             frame = ring.pop()
             if frame is None:
                 break
             last = frame
-        assert last == b"y" * 12
+        assert last == b"y" * 8
     finally:
         ring.close()
         ring.unlink()
