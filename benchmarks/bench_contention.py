@@ -7,9 +7,11 @@ plus lock-wait statistics for sync vs ddast with real threads.
 Standalone::
 
     PYTHONPATH=src python benchmarks/bench_contention.py --calibrate
+    PYTHONPATH=src python benchmarks/bench_contention.py \
+        [--smoke] [--out BENCH_contention.json]
 
-prints the measured per-shard-portion overhead — the constant that
-``SimCosts.portion_overhead`` models. The simulator used to charge an
+``--calibrate`` prints the measured per-shard-portion overhead — the
+constant that ``SimCosts.portion_overhead`` models. The simulator used to charge an
 idealized ``submit_cs / k`` per shard portion of a cross-shard task,
 i.e. splitting a task across k shards was free; in the real runtime each
 extra portion pays for mailbox dispatch, join-latch arithmetic and an
@@ -17,11 +19,24 @@ extra lock acquisition. The calibration isolates exactly that: the same
 tasks with the same dependence count are pushed through a 1-shard router
 (one portion per task) and a many-shard router (~k portions per task),
 so the per-dependence cost cancels and the slope is the per-portion
-overhead.
+overhead. It also measures the delegation fast-path constants
+(``SimCosts.delegate_us`` / ``combine_us``): a delegate is one request
+publication against a HELD shard lock (GIL-atomic append + failed
+trylock — the whole wait-free path), a combine is the session-fixed
+cost of draining the request list, separated from the per-portion
+apply cost by a two-point intercept.
+
+The default run adds the delegation sweep: the simulator's
+16-core x 8-shard contended workloads under delegation vs blocking
+shard locks. Exit status doubles as the CI gate: non-zero when
+(a) delegated shard-lock wait exceeds 0.7x the blocking wait on any
+gated app, or (b) the delegated run's per-region dependence orderings
+(write order + read-sees-writer) diverge from the ``sync`` oracle.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import multiprocessing
 import os
 import pickle
@@ -32,7 +47,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: F401,E402  (parity with sibling benches)
 
-from repro.core import DDASTParams, TaskRuntime  # noqa: F401,E402
+from repro.core import (DDASTParams, RuntimeSimulator,  # noqa: F401,E402
+                        SimTaskSpec, TaskRuntime)
+from repro.core.taskgraph_apps import sim_app_specs  # noqa: E402
 from repro.core.depgraph import DependenceGraph  # noqa: E402
 from repro.core.messages import (DONE_NO_RESULT,  # noqa: E402
                                  decode_done_batch, decode_submit_batch,
@@ -113,6 +130,138 @@ def calibrate_portion(tasks: int = 4000, k: int = 4) -> dict:
         "per_task_single_us": t1 / tasks,
         "per_task_spread_us": tk / tasks,
     }
+
+
+def calibrate_delegation() -> dict:
+    """Measure ``SimCosts.delegate_us`` / ``combine_us`` on this host.
+
+    delegate: the shard lock is held by this thread, so every
+    ``route_submit`` takes the wait-free path — GIL-atomic append onto
+    the shard's request list plus one failed trylock — and returns.
+    combine: strand k requests behind the held lock, release, then time
+    one ``_try_combine`` session for k=1 and k=16; the session-fixed
+    cost (staging, bucket rotation, lock traffic) is the two-point
+    intercept of ``t(k) = session + k * apply``, so the per-portion
+    graph-insert work cancels.
+    """
+    from repro.core.shards import ShardedDependenceGraph, ShardRouter
+    graph = ShardedDependenceGraph(1)
+    router = ShardRouter(graph, on_ready=lambda wd: None)
+    root = WorkDescriptor(func=None, label="root")
+    shard = graph.shards[0]
+
+    def fresh(n):
+        return [WorkDescriptor(func=None, parent=root,
+                               deps=((("d", i % 61), DepMode.INOUT),))
+                for i in range(n)]
+
+    def retire(wds):
+        for wd in wds:
+            wd.mark_finished()
+            router.route_done(wd)
+        router.drain_all()
+
+    n = 20_000
+    wds = fresh(n)
+    assert shard.lock.try_acquire()
+    t0 = time.perf_counter()
+    for wd in wds:
+        router.route_submit(wd)
+    delegate_us = (time.perf_counter() - t0) / n * 1e6
+    shard.lock.release()
+    router.drain_all()
+    retire(wds)
+
+    def combine_session_us(k: int, reps: int) -> float:
+        total = 0.0
+        for _ in range(reps):
+            wds = fresh(k)
+            assert shard.lock.try_acquire()
+            for wd in wds:
+                router.route_submit(wd)     # stranded behind held lock
+            shard.lock.release()
+            t0 = time.perf_counter()
+            router._try_combine(0)
+            total += time.perf_counter() - t0
+            retire(wds)
+        return total / reps * 1e6
+
+    combine_session_us(8, 200)               # warm-up
+    t1 = combine_session_us(1, 2000)
+    t16 = combine_session_us(16, 500)
+    # intercept of t(k) = session + k*apply through (1, t1), (16, t16)
+    combine_us = max(0.0, (16.0 * t1 - 1.0 * t16) / 15.0)
+    return {"delegate_us": delegate_us, "combine_us": combine_us,
+            "combine_t1_us": t1, "combine_t16_us": t16}
+
+
+def _sim_canonical(specs, result) -> dict:
+    """Reduce a simulator run to its dependence semantics: per region,
+    the write order and each read's last-seen writer, derived from
+    ``exec_order`` (execution-start order; the event loop is
+    deterministic, and a read can only start after its writer finished,
+    before any successor writer starts — so a start-order scan
+    reconstructs exactly which writer each read observed). Specs must
+    carry unique integer labels."""
+    by_label = {s.label: (i, s) for i, s in enumerate(specs)}
+    events: dict = {}
+    for lbl in result.exec_order:
+        idx, s = by_label[lbl]
+        for region, m in s.deps:
+            events.setdefault(region, []).append(
+                (idx, "w" if m.writes else "r"))
+    out = {}
+    for region, evs in events.items():
+        writes = tuple(i for i, k in evs if k == "w")
+        last = {}
+        cur = -1
+        for i, k in evs:
+            if k == "w":
+                cur = i
+            else:
+                last[i] = cur
+        out[region] = (writes, tuple(sorted(last.items())))
+    return out
+
+
+def delegation_sweep(cfg: dict) -> tuple:
+    """Simulator: contended paper apps on ``cores`` x ``shards``,
+    delegation vs blocking shard locks. Returns (records, gates):
+    gate (a) delegated shard-lock wait <= 0.7x blocking at the top
+    core count, (b) per-region dependence orderings identical to the
+    ``sync`` oracle for both transports."""
+    shards = cfg["shards"]
+    gate_cores = max(cfg["cores"])
+    records, gates = [], {}
+    for app, scale in cfg["apps"].items():
+        specs = [SimTaskSpec(dur=s.dur, deps=s.deps, label=str(i))
+                 for i, s in enumerate(sim_app_specs(app, scale))]
+        oracle = _sim_canonical(
+            specs, RuntimeSimulator(4, "sync").run(specs))
+        for cores in cfg["cores"]:
+            runs = {}
+            for deleg in (True, False):
+                r = RuntimeSimulator(cores, "sharded", num_shards=shards,
+                                     delegation=deleg).run(specs)
+                runs[deleg] = r
+                records.append({
+                    "app": app, "cores": cores, "shards": shards,
+                    "delegation": deleg,
+                    "makespan_us": round(r.makespan_us, 1),
+                    "lock_wait_us": round(r.lock_wait_us, 1),
+                    "lock_handoffs": sum(r.lock_handoffs),
+                    "delegated_portions": r.delegated_portions,
+                    "combined_drains": r.combined_drains,
+                })
+            if cores == gate_cores:
+                d, b = runs[True], runs[False]
+                gates[f"lock_wait_{app}"] = (
+                    d.lock_wait_us <= 0.7 * b.lock_wait_us
+                    if b.lock_wait_us > 0 else d.lock_wait_us == 0.0)
+                gates[f"ordering_{app}"] = (
+                    _sim_canonical(specs, d) == oracle
+                    and _sim_canonical(specs, b) == oracle)
+    return records, gates
 
 
 def _ipc_echo_child(exec_name: str, done_name: str,
@@ -221,8 +370,11 @@ def calibrate_ipc(rounds: int = 400, batch: int = 8) -> dict:
 
 
 def lock_contention(num_workers: int = 4, tasks: int = 600) -> dict:
-    """Real threads: same independent-task workload under sync vs ddast;
-    report graph-lock acquisitions + wait time."""
+    """Real threads: same independent-task workload under sync vs ddast,
+    plus the sharded manager with delegated vs blocking shard locks
+    (informational — wall-clock on real threads is noisy; the sim sweep
+    is the gated comparison). Reports lock acquisitions + wait time;
+    the sharded rows add handoffs and delegated-portion counts."""
     out = {}
 
     def spin():
@@ -242,10 +394,43 @@ def lock_contention(num_workers: int = 4, tasks: int = 600) -> dict:
             "wall_s": rt.stats.wall_s,
             "msgs": rt.stats.messages_processed,
         }
+    for deleg in (True, False):
+        with TaskRuntime(num_workers=num_workers, mode="sharded",
+                         num_shards=8, delegation=deleg) as rt:
+            for i in range(tasks):
+                rt.task(spin, deps=[((i % 97,), DepMode.INOUT)])
+            rt.taskwait()
+        st = rt.stats
+        out["sharded+delegation" if deleg else "sharded+blocking"] = {
+            "lock_acq": st.lock_acquisitions,
+            "lock_wait_ms": (st.lock_wait_s
+                             + sum(st.shard_lock_wait_s)) * 1e3,
+            "wall_s": st.wall_s,
+            "msgs": st.messages_processed,
+            "handoffs": sum(st.shard_lock_handoffs),
+            "delegated_portions": st.delegated_portions,
+            "combined_drains": st.combined_drains,
+        }
     return out
 
 
-def run(csv_rows: list) -> None:
+FULL = {
+    "apps": {"matmul": 8, "sparselu": 10},
+    "cores": (4, 16),
+    "shards": 8,
+}
+SMOKE = {
+    "apps": {"matmul": 6, "sparselu": 8},
+    "cores": (16,),
+    "shards": 8,
+}
+
+
+def run(csv_rows: list, smoke: bool = True, out: str = None) -> bool:
+    """``benchmarks.run`` suite entry point (single-arg call = smoke
+    config, like the sibling suites; the standalone CLI picks via
+    ``--smoke``). Returns the combined delegation-gate verdict."""
+    cfg = SMOKE if smoke else FULL
     cal = calibrate()
     for key, v in cal.items():
         csv_rows.append((f"calibrate.{key}", v, ""))
@@ -259,21 +444,52 @@ def run(csv_rows: list) -> None:
         csv_rows.append((f"calibrate.{key}", ipc[key],
                          f"rtt/task={ipc['rtt_task_us']:.2f}us "
                          f"batch={ipc['batch']}"))
+    dele = calibrate_delegation()
+    for key in ("delegate_us", "combine_us"):
+        csv_rows.append((f"calibrate.{key}", dele[key], ""))
     lc = lock_contention()
     for mode, st in lc.items():
         csv_rows.append((f"contention.{mode}.lock_wait_ms",
                          st["lock_wait_ms"],
                          f"acq={st['lock_acq']} msgs={st['msgs']}"))
+    sweep, gates = delegation_sweep(cfg)
+    for rec in sweep:
+        tag = "delegation" if rec["delegation"] else "blocking"
+        csv_rows.append(
+            (f"contention.sim.{rec['app']}.p{rec['cores']}.{tag}"
+             f".lock_wait_us", rec["lock_wait_us"],
+             f"handoffs={rec['lock_handoffs']} "
+             f"portions={rec['delegated_portions']}"))
+    gates["ok"] = all(gates.values())
+    csv_rows.append(("contention.gates.ok", int(gates["ok"]), str(gates)))
+    if out:
+        with open(out, "w") as f:
+            json.dump({"calibrate": {**cal, **por, **ipc, **dele},
+                       "lock_contention": lc, "delegation_sweep": sweep,
+                       "gates": gates,
+                       "config": {k: list(v) if isinstance(v, tuple)
+                                  else v for k, v in cfg.items()}},
+                      f, indent=2, default=str)
+    return gates["ok"]
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--calibrate", action="store_true",
-                    help="measure the per-shard-portion overhead and the "
-                         "process-backend IPC frame costs on this host; "
+                    help="measure the per-shard-portion overhead, the "
+                         "process-backend IPC frame costs, and the "
+                         "delegation fast-path costs on this host; "
                          "print the values to use for "
                          "SimCosts.portion_overhead / ipc_submit_us / "
-                         "ipc_done_us")
+                         "ipc_done_us / delegate_us / combine_us")
+    ap.add_argument("--delegation", action="store_true",
+                    help="run only the delegation-vs-blocking case: the "
+                         "simulated cores x shards sweep (lock-wait + "
+                         "delegated-portion ratio vs the blocking "
+                         "baseline, with the ordering/0.7x gates) plus "
+                         "the real-threaded sharded contention rows")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.calibrate:
         por = calibrate_portion()
@@ -288,16 +504,44 @@ def main() -> None:
               f"(codec {ipc['sub_codec_us']:.3f})   "
               f"done leg: {ipc['ipc_done_us']:.3f} us "
               f"(codec {ipc['done_codec_us']:.3f})")
+        dele = calibrate_delegation()
+        print(f"measured delegation: delegate {dele['delegate_us']:.3f} "
+              f"us/publication, combine session "
+              f"{dele['combine_us']:.3f} us "
+              f"(t(1)={dele['combine_t1_us']:.3f}, "
+              f"t(16)={dele['combine_t16_us']:.3f})")
         print(f"suggested: SimCosts(portion_overhead="
               f"{por['portion_overhead_us']:.2f}, "
               f"ipc_submit_us={ipc['ipc_submit_us']:.2f}, "
-              f"ipc_done_us={ipc['ipc_done_us']:.2f})")
-        return
+              f"ipc_done_us={ipc['ipc_done_us']:.2f}, "
+              f"delegate_us={dele['delegate_us']:.2f}, "
+              f"combine_us={dele['combine_us']:.2f})")
+        return 0
+    if args.delegation:
+        cfg = SMOKE if args.smoke else FULL
+        sweep, gates = delegation_sweep(cfg)
+        for rec in sweep:
+            tag = "delegation" if rec["delegation"] else "blocking"
+            print(f"sim.{rec['app']}.p{rec['cores']}x{rec['shards']}."
+                  f"{tag:10s} lock_wait={rec['lock_wait_us']:10.1f}us "
+                  f"portions={rec['delegated_portions']:5d} "
+                  f"handoffs={rec['lock_handoffs']}")
+        lc = lock_contention()
+        for mode in ("sharded+delegation", "sharded+blocking"):
+            st = lc[mode]
+            print(f"real.{mode:22s} lock_wait={st['lock_wait_ms']:8.3f}ms "
+                  f"portions={st['delegated_portions']:5d} "
+                  f"handoffs={st['handoffs']}")
+        gates["ok"] = all(gates.values())
+        print(f"# gates {'PASS' if gates['ok'] else 'FAIL'}: {gates}")
+        return 0 if gates["ok"] else 1
     rows: list = []
-    run(rows)
+    ok = run(rows, smoke=args.smoke, out=args.out)
     for name, value, note in rows:
-        print(f"{name:42s} {value:10.4f}  {note}")
+        print(f"{name:52s} {value:10.4f}  {note}")
+    print(f"# gates {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -40,7 +40,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import RuntimeSimulator, SimTaskSpec, TaskRuntime  # noqa: E402
+from repro.core import (DDASTParams, RuntimeSimulator,  # noqa: E402
+                        SimTaskSpec, TaskRuntime)
 from repro.core.taskgraph_apps import sim_app_specs  # noqa: E402
 from repro.core.wd import DepMode  # noqa: E402
 
@@ -113,6 +114,36 @@ def sim_fairness(cfg: dict) -> dict:
     }
 
 
+def sim_fairness_flood(cfg: dict) -> dict:
+    """Fairness under flood through the MANAGED modes (ddast AND
+    sharded): a weight-2 victim with n tasks against a weight-1 tenant
+    flooding 3n, measured on ``contended_grants`` — admission grants
+    taken while both rings were backlogged, the only window where the
+    2:1 weight is defined. ``min_ready_tasks`` is raised so dependence
+    analysis runs eagerly and the rings actually backlog: with the
+    default MIN_READY discipline readiness production is the
+    bottleneck and admission never contends (the sync-mode prefix gate
+    above covers that regime)."""
+    n = cfg["flood"]
+    params = DDASTParams(min_ready_tasks=100_000)
+    out = {"victim_tasks": n, "flood_tasks": 3 * n,
+           "weights": [2.0, 1.0], "modes": {}}
+    for mode in ("ddast", "sharded"):
+        r = RuntimeSimulator(4, mode, params=params).run_scopes(
+            [_flood(n, "v"), _flood(3 * n, "f")], weights=[2.0, 1.0],
+            names=["victim", "flood"])
+        cg_v = r.scopes["victim"]["contended_grants"]
+        cg_f = r.scopes["flood"]["contended_grants"]
+        out["modes"][mode] = {
+            "contended_grants": {"victim": cg_v, "flood": cg_f},
+            "grant_ratio": round(cg_v / max(cg_f, 1), 3),
+            "victim_finish_us": round(
+                r.scopes["victim"]["finish_us"], 1),
+            "flood_finish_us": round(r.scopes["flood"]["finish_us"], 1),
+        }
+    return out
+
+
 def real_threads(cfg: dict) -> dict:
     """Two client threads, each iterating its own scope's graph with
     per-scope replay, on real threads (informational: wall time; the
@@ -151,13 +182,16 @@ def real_threads(cfg: dict) -> dict:
     }
 
 
-def acceptance(concurrency: list, fairness: dict) -> dict:
+def acceptance(concurrency: list, fairness: dict, flood: dict) -> dict:
     gates = {}
     for rec in concurrency:
         if rec["app"] == "matmul" and rec["mode"] in ("ddast", "sharded"):
             gates[f"throughput_{rec['mode']}"] = (
                 rec["concurrency_ratio"] <= MAX_CONC_RATIO)
     gates["fairness_2to1"] = FAIR_LO <= fairness["grant_ratio"] <= FAIR_HI
+    for mode, rec in flood["modes"].items():
+        gates[f"fairness_flood_{mode}"] = (
+            FAIR_LO <= rec["grant_ratio"] <= FAIR_HI)
     gates["ok"] = all(gates.values())
     return gates
 
@@ -168,14 +202,21 @@ def run(rows: list, smoke: bool = True, out: str = None) -> bool:
     cfg = SMOKE if smoke else FULL
     concurrency = sim_concurrency(cfg)
     fairness = sim_fairness(cfg)
+    flood = sim_fairness_flood(cfg)
     real = real_threads(cfg)
-    gates = acceptance(concurrency, fairness)
+    gates = acceptance(concurrency, fairness, flood)
     for rec in concurrency:
         rows.append((f"scopes.{rec['app']}.{rec['mode']}.conc_ratio",
                      rec["concurrency_ratio"],
                      f"solo={rec['solo_makespan_us']}us"))
     rows.append(("scopes.fairness.grant_ratio", fairness["grant_ratio"],
                  "weights 2:1"))
+    for mode, rec in flood["modes"].items():
+        cg = rec["contended_grants"]
+        rows.append((f"scopes.fairness.flood.{mode}.grant_ratio",
+                     rec["grant_ratio"],
+                     f"contended {cg['victim']}:{cg['flood']} "
+                     f"weights 2:1"))
     rows.append(("scopes.real.wall_s", real["wall_s"],
                  f"{real['tasks_per_iter']}x{real['iters']} x 2 scopes"))
     for k, v in real["scopes"].items():
@@ -185,6 +226,7 @@ def run(rows: list, smoke: bool = True, out: str = None) -> bool:
     if out:
         with open(out, "w") as f:
             json.dump({"concurrency": concurrency, "fairness": fairness,
+                       "fairness_flood": flood,
                        "real_threads": real, "gates": gates,
                        "config": {k: v for k, v in cfg.items()
                                   if not isinstance(v, dict)}},

@@ -31,10 +31,11 @@ import json
 import sys
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.trace import (EV_ADMIT_DEFER, EV_CREATED, EV_DEPS, EV_END,
-                              EV_MSG_DRAIN, EV_MSG_ENQ, EV_QUIESCE,
-                              EV_READY, EV_START, EV_STEAL, TraceEvent,
-                              detect_all, load_trace)
+from repro.core.trace import (EV_ADMIT_DEFER, EV_COMBINE, EV_CREATED,
+                              EV_DELEGATE, EV_DEPS, EV_END, EV_MSG_DRAIN,
+                              EV_MSG_ENQ, EV_QUIESCE, EV_READY, EV_START,
+                              EV_STEAL, TraceEvent, detect_all,
+                              load_trace)
 
 # chrome://tracing reserved color names, cycled per scope (None = the
 # driver's own root context gets the first entry)
@@ -94,18 +95,27 @@ def to_chrome_trace(events: Sequence[TraceEvent],
                         "pid": _WORKERS_PID,
                         "tid": e.slot if e.slot >= 0 else 0,
                         "ts": e.t * k, "cat": "lifecycle", "args": args})
-        elif e.ev in (EV_MSG_ENQ, EV_MSG_DRAIN):
+        elif e.ev in (EV_MSG_ENQ, EV_MSG_DRAIN, EV_DELEGATE):
+            # delegated publications are backlog like mailbox entries;
+            # the combiner's per-message msg_drained events balance them
             d = e.data
             if isinstance(d, (tuple, list)) and len(d) >= 3:
                 key, n = d[1], int(d[2])
             else:
                 key, n = -1, 1
             backlog[key] = backlog.get(key, 0) \
-                + (n if e.ev == EV_MSG_ENQ else -n)
+                + (-n if e.ev == EV_MSG_DRAIN else n)
             queues_seen.add(key)
             out.append({"name": f"mailbox {key}", "ph": "C",
                         "pid": _QUEUES_PID, "tid": 0, "ts": e.t * k,
                         "args": {"backlog": max(backlog[key], 0)}})
+        elif e.ev == EV_COMBINE:
+            d = e.data
+            n = int(d[2]) if isinstance(d, (tuple, list)) \
+                and len(d) >= 3 else 1
+            out.append({"name": "combine", "ph": "i", "s": "t",
+                        "pid": _QUEUES_PID, "tid": 0, "ts": e.t * k,
+                        "cat": "sync", "args": {"portions": n}})
         elif e.ev == EV_QUIESCE:
             args = dict(e.data) if isinstance(e.data, dict) else {}
             out.append({"name": "quiesce", "ph": "i", "s": "g",

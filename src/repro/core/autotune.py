@@ -85,6 +85,7 @@ class DynamicTuner:
         self._shard_prev_metric: Optional[float] = None
         self._m0 = 0                   # messages at last adjustment
         self._w0 = 0.0                 # lock wait at last adjustment
+        self._h0 = 0                   # lock handoffs at last adjustment
         if cfg.tune_shards and hasattr(runtime.policy, "resize"):
             runtime.dispatcher.register_quiescent(
                 "shard-autotune", self.quiescent_callback, priority=0)
@@ -155,11 +156,22 @@ class DynamicTuner:
             return False
         msgs = int(stats["messages_processed"])
         wait = float(stats["lock_wait_s"])
+        handoffs = sum(stats.get("shard_lock_handoffs", []) or [0])
         dm = msgs - self._m0
         if dm < c.shard_min_messages:
             return False                 # not enough new signal yet
-        metric = (wait - self._w0) / dm  # lock-wait cost per message
-        self._m0, self._w0 = msgs, wait
+        if getattr(pol, "delegation", False):
+            # Wait-free hot path: lock waits are ~0 by construction, so
+            # the contention signal is combiner HANDOFFS per message —
+            # each handoff is a post-release re-acquisition forced by
+            # requests published behind the combiner's back, i.e. the
+            # delegation-era analogue of a blocked acquire. All three
+            # counters are cumulative across resize (the policy's
+            # _carried merge), so the deltas stay monotone.
+            metric = (handoffs - self._h0) / dm
+        else:
+            metric = (wait - self._w0) / dm  # lock-wait cost per message
+        self._m0, self._w0, self._h0 = msgs, wait, handoffs
         prev = self._shard_prev_metric
         self._shard_prev_metric = metric
         bracketed = False

@@ -29,6 +29,11 @@ class DDASTParams:
     max_spins: int = 1
     max_ops_thread: int = 8
     min_ready_tasks: int = 4
+    # Scope-fair drain rotation: max dependence-analysis portions one
+    # scope may consume per drain pass (ddast queue sweep / sharded
+    # combine session) before the drainer rotates to another tenant's
+    # backlog. 0 disables the quantum (pure FIFO drain order).
+    drain_quantum: int = 16
 
     def resolved_max_threads(self, num_threads: int) -> int:
         if self.max_ddast_threads is None:

@@ -97,6 +97,19 @@ class CostCharger:
         """One Done batch decoded off a process-boundary ring (the
         process backend's done rings); see :meth:`ipc_submit`."""
 
+    def delegate(self) -> None:
+        """One Submit/Done portion published to a shard's MPSC request
+        list (delegation/combining): a GIL-atomic deque append + a
+        trylock attempt — never a blocking wait. Free on real threads;
+        priced as ``SimCosts.delegate_us`` in the simulator."""
+
+    def combine(self) -> None:
+        """One combine session: the lock holder stages the published
+        requests into per-scope buckets and applies them all in a single
+        combined critical section. The per-message CS work is still
+        charged through the ``*_cs`` hooks; this prices only the session
+        setup (``SimCosts.combine_us``)."""
+
 
 class VirtualLock:
     """Serializes critical sections in virtual time (FIFO-handover
@@ -117,6 +130,16 @@ class VirtualLock:
         self.free_at = end
         return end
 
+    def delegated(self, t: float, hold: float, overhead: float) -> None:
+        """Wait-free occupancy (delegation/combining): the shard still
+        serializes the critical-section work — ``free_at`` advances past
+        any in-progress holder — but the acting core never queues on it,
+        so no wait accrues. This is the simulator's model of the trylock
+        + publication-list protocol."""
+        start = max(t, self.free_at)
+        self.acquisitions += 1
+        self.free_at = start + hold + overhead
+
 
 class SimCharger(CostCharger):
     """Virtual-time charger: prices every protocol step with
@@ -124,9 +147,10 @@ class SimCharger(CostCharger):
     :class:`VirtualLock` per lock key (``"graph"`` for the global-lock
     policies, ``("shard", i)`` per shard for the sharded one)."""
 
-    __slots__ = ("costs", "now", "slot", "vlocks", "polluted")
+    __slots__ = ("costs", "now", "slot", "vlocks", "polluted",
+                 "delegation")
 
-    def __init__(self, costs) -> None:
+    def __init__(self, costs, delegation: bool = False) -> None:
         self.costs = costs
         self.now = 0.0
         self.slot = -1
@@ -134,6 +158,10 @@ class SimCharger(CostCharger):
         # cores whose next task body runs ``costs.pollution`` slower
         # because they touched runtime structures (paper §6.1)
         self.polluted: Set[int] = set()
+        # delegation/combining on: shard critical sections are applied
+        # through the publication-list protocol, so they occupy the
+        # shard's VirtualLock without making the acting core wait.
+        self.delegation = delegation
 
     # -- driver side ----------------------------------------------------
     def begin(self, slot: int, now: float) -> None:
@@ -154,7 +182,15 @@ class SimCharger(CostCharger):
         vl = self.vlocks.get(key)
         if vl is None:
             vl = self.vlocks[key] = VirtualLock()
-        self.now = vl.acquire(self.now, hold, self.costs.lock_overhead)
+        if self.delegation and type(key) is tuple and key[0] == "shard":
+            # wait-free: the combiner pays the CS work on its own clock
+            # (someone must do it) but never queues behind the shard —
+            # the published portion would simply be applied later.
+            vl.delegated(self.now, hold, self.costs.lock_overhead)
+            self.now += hold + self.costs.lock_overhead
+        else:
+            self.now = vl.acquire(self.now, hold,
+                                  self.costs.lock_overhead)
         self.polluted.add(self.slot)
 
     def submit_cs(self, key: Hashable, ndeps: int) -> None:
@@ -231,6 +267,15 @@ class SimCharger(CostCharger):
 
     def ipc_done(self) -> None:
         self.now += self.costs.ipc_done_us
+
+    # Delegation/combining: the publication append is lock-free
+    # (local-time cost only); the combine-session setup is paid by the
+    # lock holder, whose CS occupancy flows through _acquire above.
+    def delegate(self) -> None:
+        self.now += self.costs.delegate_us
+
+    def combine(self) -> None:
+        self.now += self.costs.combine_us
 
     # -- result aggregation ---------------------------------------------
     def lock_wait_us(self) -> float:

@@ -141,6 +141,11 @@ def _blank_stats() -> Dict[str, object]:
         "total_edges": 0,
         "shard_messages": [],
         "shard_lock_wait_s": [],
+        # delegation/combining (zero/empty outside the sharded policy)
+        "delegated_portions": 0,
+        "combined_drains": 0,
+        "shard_lock_handoffs": [],
+        "scope_portions": {},
     }
 
 
@@ -278,6 +283,15 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
         self._init_graphs()
         self.worker_queues: List[WorkerQueues] = [
             WorkerQueues(i) for i in range(self.num_slots)]
+        # cumulative per-scope drained-message tally (combiner-free
+        # analogue of the sharded router's scope_portions); int += under
+        # the GIL, informational — folded into scope_rollup
+        self.scope_drained: Dict[object, int] = {}
+        # rotating first-served queue for _drain_once: a pass that stops
+        # early (MIN_READY satisfied) must not always have served queue 0
+        # first, or the tenant producing there owns readiness production
+        # (unguarded += is a benign race — any start index is valid)
+        self._drain_rr = 0
 
     # -- producer side --------------------------------------------------
     def submit(self, wd: WorkDescriptor, slot: int) -> None:
@@ -296,20 +310,51 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
 
     # -- manager side ---------------------------------------------------
     def _drain_once(self, worker_id: int) -> int:
-        """One pass over the per-worker queues (Listing 2 lines 6-15)."""
+        """One pass over the per-worker queues (Listing 2 lines 6-15),
+        with per-scope round-robin quanta: each scope gets at most
+        ``params.drain_quantum`` messages analyzed per pass, so one
+        tenant's submission flood cannot monopolize dependence analysis —
+        its queue stops being drained for the rest of the pass while the
+        other tenants' queues still get their turn. Per-queue FIFO is
+        preserved: an over-quantum head is left *queued* (peeked, not
+        popped), never skipped over. The pass starts at the queue where
+        the previous pass stopped: MIN_READY stops most passes after one
+        queue, so a fixed (or naively rotating) start lets the producer
+        of a favored queue own readiness production — the continuation
+        cursor makes first service a true round-robin over queues."""
         del worker_id
         p = self.params
+        quantum = p.drain_quantum
+        consumed: Dict[object, int] = {}
         total_cnt = 0
-        for wq in self.worker_queues:
+        qs = self.worker_queues
+        nq = len(qs)
+        start = self._drain_rr % nq
+        self._drain_rr = start + 1      # full pass: rotate one anyway
+        for k in range(nq):
+            wq = qs[(start + k) % nq]
             if self.placement.ready_count() >= p.min_ready_tasks:
+                # resume HERE next pass — this queue was not served
+                self._drain_rr = start + k
                 break
             cnt = 0
             if wq.acquire_submit():
                 try:
                     while cnt < p.max_ops_thread:
+                        nxt = wq.submit.peek()
+                        if nxt is None:
+                            break
+                        if quantum and consumed.get(nxt.wd.scope,
+                                                    0) >= quantum:
+                            break       # scope exhausted its quantum:
+                        #                 rotate to the next queue
                         msg = wq.submit.pop()
                         if msg is None:
                             break
+                        sc = msg.wd.scope
+                        consumed[sc] = consumed.get(sc, 0) + 1
+                        self.scope_drained[sc] = \
+                            self.scope_drained.get(sc, 0) + 1
                         self.charge.message()
                         if self.tracer.enabled:
                             self.tracer.task_event(
@@ -320,9 +365,20 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
                 finally:
                     wq.release_submit()
             while cnt < p.max_ops_thread:
+                # Done pops race across managers, so the peeked head may
+                # not be the popped message — quantum accounting uses the
+                # actual popped scope; the peek only decides rotation.
+                nxt = wq.done.peek()
+                if nxt is None:
+                    break
+                if quantum and consumed.get(nxt.wd.scope, 0) >= quantum:
+                    break
                 msg = wq.done.pop()
                 if msg is None:
                     break
+                sc = msg.wd.scope
+                consumed[sc] = consumed.get(sc, 0) + 1
+                self.scope_drained[sc] = self.scope_drained.get(sc, 0) + 1
                 self.charge.message()
                 if self.tracer.enabled:
                     self.tracer.task_event(EV_MSG_DRAIN, msg.wd, -1,
@@ -378,6 +434,11 @@ class DdastPolicy(_GlobalGraphMixin, _ManagedPolicy):
         st["messages_processed"] = self.messages_processed
         return st
 
+    def scope_drain_share(self, scope_id) -> int:
+        """Cumulative messages drained on this tenant's behalf (see
+        ``scope_drained``); surfaced through ``scope_rollup``."""
+        return self.scope_drained.get(scope_id, 0)
+
 
 class DastPolicy(DdastPolicy):
     """The authors' earlier centralized design [7]: same queues, but ONE
@@ -407,7 +468,8 @@ class ShardedPolicy(_ManagedPolicy):
     uses_idle_managers = True
 
     def __init__(self, *args, num_shards: int = 4,
-                 batch_size: Optional[int] = None, **kw) -> None:
+                 batch_size: Optional[int] = None,
+                 delegation: bool = True, **kw) -> None:
         super().__init__(*args, **kw)
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
@@ -415,11 +477,14 @@ class ShardedPolicy(_ManagedPolicy):
             raise ValueError("batch_size must be >= 1")
         self.num_shards = num_shards
         self.batch_size = batch_size
+        self.delegation = delegation
         self.graph = ShardedDependenceGraph(num_shards)
         self.router = ShardRouter(self.graph,
                                   on_ready=self.placement.push,
                                   charge=self.charge,
-                                  tracer=self.tracer)
+                                  tracer=self.tracer,
+                                  delegation=delegation,
+                                  drain_quantum=self.params.drain_quantum)
         # Per-slot submit + done buffers. The owning slot appends; flush
         # may additionally be invoked by OTHER threads (drain_all at
         # taskwait/shutdown edges), so each buffer's read-swap and the
@@ -529,8 +594,11 @@ class ShardedPolicy(_ManagedPolicy):
             if self.placement.ready_count() >= p.min_ready_tasks:
                 break
             idx = (worker_id + off) % n
-            if router.mailboxes[idx].pending() == 0:
-                continue                # cheap peek before claiming
+            # cheap peek before claiming: under delegation, published
+            # portions live on the shard's request list, not the mailbox
+            if router.mailboxes[idx].pending() == 0 \
+                    and not self.graph.shards[idx].requests:
+                continue
             total_cnt += router.drain_shard(idx, p.max_ops_thread)
         return total_cnt
 
@@ -567,7 +635,7 @@ class ShardedPolicy(_ManagedPolicy):
             return False
         old = self.stats()
         for k in ("messages_processed", "lock_acquisitions", "lock_wait_s",
-                  "total_edges"):
+                  "total_edges", "delegated_portions", "combined_drains"):
             self._carried[k] = old[k]
         self._carried["max_in_graph"] = old["max_in_graph"]
         # per-shard counter lists survive the swap too — stats() already
@@ -575,12 +643,16 @@ class ShardedPolicy(_ManagedPolicy):
         # merged lists keeps them cumulative across repeated resizes
         self._carried["shard_messages"] = old["shard_messages"]
         self._carried["shard_lock_wait_s"] = old["shard_lock_wait_s"]
+        self._carried["shard_lock_handoffs"] = old["shard_lock_handoffs"]
+        self._carried["scope_portions"] = old["scope_portions"]
         self.num_shards = num_shards
         self.graph = ShardedDependenceGraph(num_shards)
         self.router = ShardRouter(self.graph,
                                   on_ready=self.placement.push,
                                   charge=self.charge,
-                                  tracer=self.tracer)
+                                  tracer=self.tracer,
+                                  delegation=self.delegation,
+                                  drain_quantum=self.params.drain_quantum)
         # shard-id-keyed affinity must follow the new partition function
         rekey = getattr(self.placement, "set_num_shards", None)
         if rekey is not None:
@@ -603,7 +675,24 @@ class ShardedPolicy(_ManagedPolicy):
         st["max_in_graph"] = max(c["max_in_graph"],
                                  self.graph.max_in_graph)
         st["total_edges"] = c["total_edges"] + self.graph.total_edges
+        # delegation/combining counters (zero in blocking-mailbox mode)
+        st["delegated_portions"] = (c["delegated_portions"]
+                                    + self.router.delegated_portions)
+        st["combined_drains"] = (c["combined_drains"]
+                                 + self.router.combined_drains)
+        st["shard_lock_handoffs"] = _merge_shard_lists(
+            c["shard_lock_handoffs"], self.router.lock_handoffs)
+        merged: Dict[object, int] = dict(c["scope_portions"])
+        for sc, k in self.router.scope_portions().items():
+            merged[sc] = merged.get(sc, 0) + k
+        st["scope_portions"] = merged
         return st
+
+    def scope_drain_share(self, scope_id) -> int:
+        """Cumulative dependence-analysis portions this tenant consumed
+        through the combiners — folded into ``scope_rollup`` so per-tenant
+        drain shares are visible alongside admission stats."""
+        return self.stats()["scope_portions"].get(scope_id, 0)
 
 
 _POLICIES = {
@@ -643,9 +732,9 @@ def mode_needs_manager_thread(mode: str) -> bool:
 
 def make_policy(mode: str, num_slots: int, replay: bool = False,
                 **kw) -> DependencePolicy:
-    """Build the policy for ``mode``. ``num_shards``/``batch_size`` are
-    accepted for every mode and silently dropped where meaningless, so
-    drivers stay free of per-mode branching. With ``replay=True`` (or a
+    """Build the policy for ``mode``. ``num_shards``/``batch_size``/
+    ``delegation`` are accepted for every mode and silently dropped where
+    meaningless, so drivers stay free of per-mode branching. With ``replay=True`` (or a
     ``"replay:<mode>"`` mode string) the policy is wrapped in a
     :class:`~repro.core.engine.replay.ReplayPolicy`, which records the
     first iteration's task structure through the live policy and elides
@@ -660,6 +749,7 @@ def make_policy(mode: str, num_slots: int, replay: bool = False,
     if not issubclass(cls, ShardedPolicy):
         kw.pop("num_shards", None)
         kw.pop("batch_size", None)
+        kw.pop("delegation", None)
     pol = cls(num_slots, **kw)
     if replay:
         from .replay import ReplayPolicy

@@ -251,18 +251,21 @@ class ReplayPolicy(DependencePolicy):
     keep working."""
 
     def __init__(self, inner: DependencePolicy,
-                 publish_priorities: bool = True) -> None:
+                 publish_priorities: bool = True,
+                 scope: Optional[int] = None) -> None:
         # deliberately NOT calling super().__init__: the wrapped policy
         # owns slots/params/placement/charge; we delegate.
         self.inner = inner
         self.name = f"replay({inner.name})"
         # Whether this wrapper may drive the placement's banded priority
-        # lane. Multi-tenant scope wrappers (core.scopes) share ONE
-        # placement across several independent replay graphs whose sids
-        # index different band tables, so they run with this off: ready
-        # replayed tasks take the normal lane and no bottom levels are
-        # published (the placement degrades to its non-replay behavior).
+        # lane. Multi-tenant scope wrappers (core.scopes) set ``scope``
+        # so their bottom levels land in a per-scope band table merged
+        # into the placement's shared band-occupancy counters (see
+        # CriticalPathPlacement) — several independent replay graphs
+        # then rank their critical work on one global axis instead of
+        # degrading to the normal lane.
         self.publish_priorities = publish_priorities
+        self._scope = scope
         self._state = RECORDING
         # -- recording side (guarded by _rec_lock; slow path) ----------
         self._rec_lock = threading.Lock()
@@ -601,7 +604,7 @@ class ReplayPolicy(DependencePolicy):
         if g is None:
             return
         self.placement.set_replay_priorities(
-            bottom_levels(g.succs, g.costs))
+            bottom_levels(g.succs, g.costs), scope=self._scope)
 
     def _reset_iteration(self) -> None:
         self._gen += 1
@@ -627,7 +630,7 @@ class ReplayPolicy(DependencePolicy):
         the live replay state, and return to RECORDING."""
         if self.publish_priorities and \
                 getattr(self.placement, "wants_replay_priorities", False):
-            self.placement.clear_replay_priorities()
+            self.placement.clear_replay_priorities(scope=self._scope)
         self.replay_graph = None
         self._diverged = False
         self._div_buffers = {}

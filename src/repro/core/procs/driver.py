@@ -502,10 +502,10 @@ class ProcessDispatch:
     def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
         pass
 
-    def set_replay_priorities(self, levels) -> None:
+    def set_replay_priorities(self, levels, scope=None) -> None:
         pass                             # workers self-schedule the plane
 
-    def clear_replay_priorities(self) -> None:
+    def clear_replay_priorities(self, scope=None) -> None:
         pass
 
     def stats(self) -> Dict[str, int]:
@@ -573,7 +573,8 @@ class ProcessRuntime:
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
                  replay: bool = False,
-                 num_clients: int = 0, *,
+                 num_clients: int = 0,
+                 delegation: bool = True, *,
                  backend: str = "processes",
                  ring_capacity: int = 1 << 20,
                  ipc_batch: int = 8,
@@ -602,6 +603,7 @@ class ProcessRuntime:
         self.num_shards = num_shards or max(2, num_workers)
         self.batch_size = batch_size
         self.replay = replay
+        self.delegation = delegation
         self.ipc_batch = max(1, ipc_batch)
         self.ring_capacity = ring_capacity
         self.trace_capacity = trace_capacity
@@ -632,6 +634,7 @@ class ProcessRuntime:
             main_slot=1,
             num_shards=self.num_shards,
             batch_size=batch_size,
+            delegation=delegation,
             replay=replay,
             tracer=self.tracer)
         self.dispatcher = FunctionalityDispatcher()
@@ -854,6 +857,10 @@ class ProcessRuntime:
         self.stats.total_edges = st["total_edges"]
         self.stats.shard_messages = st.get("shard_messages", [])
         self.stats.shard_lock_wait_s = st.get("shard_lock_wait_s", [])
+        self.stats.delegated_portions = st.get("delegated_portions", 0)
+        self.stats.combined_drains = st.get("combined_drains", 0)
+        self.stats.shard_lock_handoffs = list(
+            st.get("shard_lock_handoffs", []))
         self.stats.ipc_submit_msgs = sum(self._dispatch.sub_msgs)
         self.stats.ipc_done_msgs = self.done_msgs
         self.stats.ipc_ctrl_msgs = self.ctrl_msgs

@@ -46,6 +46,21 @@ class InstrumentedLock:
         self._lock.release()
         return False
 
+    # -- delegation/combining fast path --------------------------------
+    def try_acquire(self) -> bool:
+        """Non-blocking acquire: counts the acquisition on success and
+        never accrues wait time — a failed trylock is exactly the wait
+        the delegation/combining protocol turns into a published request
+        (``shards.router``), so by construction ``wait_s`` stays zero on
+        that path."""
+        if self._lock.acquire(blocking=False):
+            self.acquisitions += 1
+            return True
+        return False
+
+    def release(self) -> None:
+        self._lock.release()
+
 
 class SPSCQueue(Generic[T]):
     __slots__ = ("_q", "pushed", "popped")
@@ -66,6 +81,16 @@ class SPSCQueue(Generic[T]):
             return None
         self.popped += 1
         return item
+
+    def peek(self) -> Optional[T]:
+        """Head without removal (GIL-atomic index read). Stable only for
+        the exclusive Submit drainer; a racing Done drainer may observe a
+        head another manager pops first — callers there must re-read the
+        actual popped item."""
+        try:
+            return self._q[0]
+        except IndexError:
+            return None
 
     def __len__(self) -> int:
         return len(self._q)

@@ -110,6 +110,16 @@ class RuntimeStats:
     # Per-shard breakdowns (empty outside the sharded policy).
     shard_lock_wait_s: List[float] = field(default_factory=list)
     shard_messages: List[int] = field(default_factory=list)
+    # Delegation/combining counters (sharded mode with delegation=True;
+    # zero elsewhere). delegated_portions counts every dependence
+    # portion published onto a shard's MPSC request list (structural —
+    # identical between this driver and the simulator on the same
+    # program); combined_drains counts combine sessions; the per-shard
+    # handoff list counts post-release re-acquisitions by a combiner
+    # that found new requests published behind its back.
+    delegated_portions: int = 0
+    combined_drains: int = 0
+    shard_lock_handoffs: List[int] = field(default_factory=list)
     # Record-and-replay counters (zero unless replay=True).
     replay_iterations: int = 0         # iterations served fully by replay
     replayed_tasks: int = 0            # submits elided from live analysis
@@ -175,7 +185,8 @@ class TaskRuntime:
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
                  replay: bool = False,
-                 num_clients: int = 0, *,
+                 num_clients: int = 0,
+                 delegation: bool = True, *,
                  backend: str = "threads") -> None:
         # keyword-only on purpose: __new__ dispatches on the *keyword*
         # backend, so a positional value would silently select the
@@ -197,6 +208,7 @@ class TaskRuntime:
         self.batch_size = batch_size
         self.replay = replay
         self.num_clients = num_clients
+        self.delegation = delegation
 
         # +1: the main thread's slot; client threads (multi-tenant
         # scopes) each own one more so the single-producer submit-queue
@@ -227,6 +239,7 @@ class TaskRuntime:
             main_slot=num_workers,
             num_shards=self.num_shards,
             batch_size=batch_size,
+            delegation=delegation,
             replay=replay and num_clients == 0,
             tracer=self.tracer)
         if num_clients > 0:
@@ -339,6 +352,9 @@ class TaskRuntime:
         self.stats.total_edges = st["total_edges"]
         self.stats.shard_messages = st["shard_messages"]
         self.stats.shard_lock_wait_s = st["shard_lock_wait_s"]
+        self.stats.delegated_portions = st["delegated_portions"]
+        self.stats.combined_drains = st["combined_drains"]
+        self.stats.shard_lock_handoffs = list(st["shard_lock_handoffs"])
         pst = self.placement.stats()
         self.stats.worker_steals = [d.stolen for d in self.placement.deques]
         self.stats.load_cap_skips = int(pst.get("load_cap_skips", 0))

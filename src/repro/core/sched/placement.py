@@ -133,12 +133,16 @@ class PlacementPolicy:
         bookkeeping."""
 
     # -- replay-priority hooks (no-ops outside CriticalPathPlacement) ---
-    def set_replay_priorities(self, levels: Sequence[float]) -> None:
+    def set_replay_priorities(self, levels: Sequence[float],
+                              scope: Optional[Hashable] = None) -> None:
         """Freeze-time hook: per-sid bottom levels of the active replay
-        graph."""
+        graph. ``scope`` (multi-tenant) publishes a per-scope band table
+        instead of the exclusive single-tenant one."""
 
-    def clear_replay_priorities(self) -> None:
-        """The active recording was retired; drop priority state."""
+    def clear_replay_priorities(self,
+                                scope: Optional[Hashable] = None) -> None:
+        """The active recording was retired; drop priority state (for
+        one tenant when ``scope`` is given)."""
 
     def stats(self) -> Dict[str, int]:
         return {
@@ -305,18 +309,51 @@ class CriticalPathPlacement(ShardAffinePlacement):
         # band across the WHOLE ring, making the longest-remaining-chain
         # guarantee global instead of per-deque
         self._band_counts: Optional[List[int]] = None
+        # Multi-tenant: per-scope band tables, every value pre-scaled
+        # into one FIXED universe of ``max_bands`` bands so all tenants
+        # share the same band array and the same occupancy counters —
+        # pop's global best-band choice then ranks every tenant's
+        # critical work on one axis (longest-chain-first is global
+        # again, not per-tenant). The fixed universe is configured once
+        # (first scoped publication, priority lanes still empty) and
+        # never reallocated: a tenant freezing or retiring while others
+        # have banded work in flight must not orphan their entries.
+        self._scope_bands: Dict[Hashable, List[int]] = {}
         self.priority_pushes = 0
         self.global_band_steals = 0
 
     @property
     def replay_priorities_active(self) -> bool:
-        return self._bands_of is not None
+        return self._bands_of is not None or bool(self._scope_bands)
 
-    def set_replay_priorities(self, levels: Sequence[float]) -> None:
+    def _ensure_scope_universe(self) -> bool:
+        """Configure the fixed ``max_bands`` band array shared by all
+        scoped tables. Returns False when a single-tenant table already
+        holds the deques at a different width — reconfiguring would
+        orphan its in-flight banded tasks, so the scoped publication is
+        declined and that tenant degrades to the normal lane."""
+        if self._band_counts is not None:
+            return len(self._band_counts) == self.max_bands
+        counts = [0] * self.max_bands
+        for d in self.deques:
+            d.set_num_bands(self.max_bands, counts)
+        self._band_counts = counts
+        return True
+
+    def set_replay_priorities(self, levels: Sequence[float],
+                              scope: Optional[Hashable] = None) -> None:
         """Publish per-sid bottom levels (called at freeze time and
         refreshed from the cost EMAs at replay iteration boundaries —
-        both root-quiescent points, so the deques are empty and the band
-        swap races with nothing)."""
+        root-quiescent for the publishing tenant, so its own banded
+        entries are drained and the table swap races with nothing)."""
+        if scope is not None:
+            if not self._ensure_scope_universe():
+                return
+            bands, nbands = quantize_bands(levels, self.max_bands)
+            scale = self.max_bands
+            self._scope_bands[scope] = [b * scale // nbands
+                                        for b in bands]
+            return
         bands, nbands = quantize_bands(levels, self.max_bands)
         counts = [0] * nbands
         for d in self.deques:
@@ -324,15 +361,35 @@ class CriticalPathPlacement(ShardAffinePlacement):
         self._band_counts = counts
         self._bands_of = bands
 
-    def clear_replay_priorities(self) -> None:
+    def clear_replay_priorities(self,
+                                scope: Optional[Hashable] = None) -> None:
+        if scope is not None:
+            # drop only this tenant's table; the fixed band array stays
+            # so other tenants' banded in-flight work keeps draining
+            self._scope_bands.pop(scope, None)
+            return
         self._bands_of = None
-        self._band_counts = None
-        for d in self.deques:
-            d.set_num_bands(0)
+        if not self._scope_bands:
+            self._band_counts = None
+            for d in self.deques:
+                d.set_num_bands(0)
+
+    def _band_for(self, wd: WorkDescriptor, sid: int) -> int:
+        """The band of a ready replayed task: its tenant's table when
+        one is published, else the single-tenant table; -1 = no band."""
+        if wd.scope is not None:
+            bands = self._scope_bands.get(wd.scope)
+            if bands is not None and 0 <= sid < len(bands):
+                return bands[sid]
+            return -1
+        bands = self._bands_of
+        if bands is not None and 0 <= sid < len(bands):
+            return bands[sid]
+        return -1
 
     def push_replay(self, wd: WorkDescriptor, sid: int) -> None:
-        bands = self._bands_of
-        if bands is None or not 0 <= sid < len(bands):
+        band = self._band_for(wd, sid)
+        if band < 0:
             self.push(wd)
             return
         self.charge.prio_push()
@@ -344,7 +401,6 @@ class CriticalPathPlacement(ShardAffinePlacement):
         else:
             self.affine_pushes += 1
         self.priority_pushes += 1
-        band = bands[sid]
         self.deques[slot].push_priority(wd, band)
         if self.tracer.enabled:
             # published-band payload: the priority-inversion detector
@@ -377,7 +433,7 @@ class CriticalPathPlacement(ShardAffinePlacement):
                         self.charge.prio_pop()
                         return wd
         wd = super().pop(slot)
-        if wd is not None and self._bands_of is not None:
+        if wd is not None and self.replay_priorities_active:
             self.charge.prio_pop()      # the pop-side band scan
         return wd
 

@@ -53,7 +53,7 @@ from ..wd import WorkDescriptor
 class _ScopeRing:
     __slots__ = ("scope_id", "weight", "max_inflight", "ring", "deficit",
                  "inflight", "admitted", "pushed", "admission_waits",
-                 "max_queued", "expired_fn", "drained")
+                 "max_queued", "expired_fn", "drained", "contended_grants")
 
     def __init__(self, scope_id: int, weight: float,
                  max_inflight: Optional[int],
@@ -74,6 +74,14 @@ class _ScopeRing:
         #: scope's queued tasks drain-and-fail instead of admitting
         self.expired_fn = expired_fn
         self.drained = 0
+        #: grants taken while EVERY registered ring was backlogged —
+        #: the only window where weighted fairness is defined (an
+        #: uncontended grant is just work conservation). The per-scope
+        #: ratio of these converges to the weight ratio; the fairness
+        #: benches gate on it because exec-order ratios dilute whenever
+        #: a tenant's readiness production, not admission, is the
+        #: bottleneck.
+        self.contended_grants = 0
 
 
 class FairAdmission(PlacementPolicy):
@@ -135,11 +143,11 @@ class FairAdmission(PlacementPolicy):
     def wants_replay_priorities(self) -> bool:
         return self.inner.wants_replay_priorities
 
-    def set_replay_priorities(self, levels) -> None:
-        self.inner.set_replay_priorities(levels)
+    def set_replay_priorities(self, levels, scope=None) -> None:
+        self.inner.set_replay_priorities(levels, scope=scope)
 
-    def clear_replay_priorities(self) -> None:
-        self.inner.clear_replay_priorities()
+    def clear_replay_priorities(self, scope=None) -> None:
+        self.inner.clear_replay_priorities(scope=scope)
 
     def note_executed(self, wd: WorkDescriptor, slot: int) -> None:
         self.inner.note_executed(wd, slot)
@@ -165,6 +173,7 @@ class FairAdmission(PlacementPolicy):
                 "admission_waits": r.admission_waits,
                 "max_queued": r.max_queued,
                 "drained": r.drained,
+                "contended_grants": r.contended_grants,
                 "weight": r.weight}
 
     def _drain_one(self, r: _ScopeRing, wd: WorkDescriptor) -> None:
@@ -205,10 +214,12 @@ class FairAdmission(PlacementPolicy):
                 return                      # backlog waits for a pop
             best = None
             total_w = 0.0
+            backlogged = 0
             for r in rings:
                 if not r.ring:
                     r.deficit = 0.0
                     continue
+                backlogged += 1
                 cap = r.max_inflight
                 if cap is not None and r.inflight.value >= cap:
                     continue                # capped: no opportunity
@@ -226,8 +237,15 @@ class FairAdmission(PlacementPolicy):
             best.inflight.add(1)
             self._inflight.add(1)
             best.admitted += 1
+            if backlogged == len(rings) and backlogged > 1:
+                best.contended_grants += 1
             wd._fair_admitted = True    # pop releases only real grants
-            self.inner.push(wd)
+            sid = getattr(wd, "_replay_sid", None)
+            if sid is not None:
+                wd._replay_sid = None   # band preserved through the ring
+                self.inner.push_replay(wd, sid)
+            else:
+                self.inner.push(wd)
 
     def push(self, wd: WorkDescriptor) -> None:
         r = self._rings.get(wd.scope) if wd.scope is not None else None
@@ -254,10 +272,13 @@ class FairAdmission(PlacementPolicy):
                               data={"queued": len(r.ring)})
 
     def push_replay(self, wd: WorkDescriptor, sid: int) -> None:
-        # scope replay wrappers run with the priority lane off (their
-        # sids index per-scope graphs, not the shared band table), so a
-        # replayed ready task is admitted like any other
+        # A replayed ready task of a tenant still queues through the
+        # fair ring, but its band must survive admission: the sid is
+        # stashed on the WD so _admit (possibly on another thread, much
+        # later) can re-enter the inner placement's priority path and
+        # land the task in its tenant's band table.
         if wd.scope is not None and wd.scope in self._rings:
+            wd._replay_sid = sid
             self.push(wd)
         else:
             self.inner.push_replay(wd, sid)

@@ -13,11 +13,15 @@ inherited from the parent at creation: submit/complete go to the
 owning scope's slot; ``notify_quiescent(root, scope_id=...)`` goes to
 exactly one slot, so iteration boundaries are per-tenant.
 
-Scope wrappers run with ``publish_priorities=False``: several frozen
-graphs share one placement and their structural ids index different
-band tables, so the banded priority lane stays off and replayed ready
-tasks take the normal admission path (see
-:class:`~repro.core.scopes.admission.FairAdmission`).
+Scope wrappers publish their bottom levels with a ``scope`` tag:
+several frozen graphs share one placement, and their structural ids
+index *per-scope* band tables that
+:class:`~repro.core.sched.placement.CriticalPathPlacement` merges into
+one shared set of band-occupancy counters (a fixed band universe), so
+multi-tenant replay regains global longest-chain-first. Replayed ready
+tasks still flow through the normal admission path (see
+:class:`~repro.core.scopes.admission.FairAdmission`), which preserves
+the band through its ring via the ``_replay_sid`` stash.
 
 Manager-side behavior (idle callbacks, drain loops, flush, batching) is
 scope-blind by design — a drained Submit message carries its WD, and
@@ -45,6 +49,11 @@ def scope_rollup(placement, policy, scope_id: int) -> Dict[str, object]:
     pol = policy.scope_policy(scope_id)
     entry["replay_iterations"] = getattr(pol, "replay_iterations", 0)
     entry["replayed_tasks"] = getattr(pol, "replayed_tasks", 0)
+    # per-tenant drain share: dependence-analysis portions consumed on
+    # this scope's behalf by the scope-fair drain rotation (ddast queue
+    # quanta / sharded combiner buckets); 0 for policies without one
+    share = getattr(policy, "scope_drain_share", None)
+    entry["drained_portions"] = share(scope_id) if callable(share) else 0
     return entry
 
 
@@ -99,7 +108,7 @@ class ScopedPolicy(DependencePolicy):
         wrapper when replay is on, the shared inner policy otherwise."""
         if scope_id in self._slots:
             raise ValueError(f"scope {scope_id} already registered")
-        pol = (ReplayPolicy(self.inner, publish_priorities=False)
+        pol = (ReplayPolicy(self.inner, scope=scope_id)
                if self.replay else self.inner)
         self._slots[scope_id] = pol
         return pol

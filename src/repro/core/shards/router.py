@@ -1,21 +1,35 @@
-"""Shard router: per-shard mailboxes + the cross-shard join protocol.
+"""Shard router: per-shard delegation/combining + the cross-shard join
+protocol.
 
 Message flow in ``sharded`` mode (compare Fig. 3 of the paper, where the
-mailboxes are per *worker*):
+mailboxes are per *worker*). With delegation (the default), every
+Submit/Done portion goes through a flat-combining publication protocol:
 
-    worker creates task ──route_submit──▶ mailbox of every shard its
-                                          regions hash to (FIFO, MPSC)
-    worker finishes task ─route_done────▶ same mailboxes
-    idle worker (manager) ──claims a shard──▶ drains its mailbox,
-                                          mutating ONLY that shard
+    worker creates/finishes task ──publish──▶ ``GraphShard.requests``
+        (GIL-atomic MPSC append), then TRYLOCK the shard lock:
+          * trylock fails  → return immediately (wait-free): the current
+            holder — the **combiner** — applies the published portion
+            before or right after releasing;
+          * trylock wins   → become the combiner: drain the request list
+            and apply every published portion (own + delegated) in one
+            combined critical section, in per-scope round-robin quanta.
 
-Exactly one manager drains a given mailbox at a time (``try_claim``, the
-per-shard analogue of the per-worker Submit-queue exclusivity flag of
-Listing 2 line 8). Because a region maps to exactly one shard and a
-parent's children are created by the single thread executing the parent,
-FIFO mailbox order preserves per-region submission order — the §3.1
-invariant the dependence rules require — while different shards proceed
-fully in parallel.
+A combiner that releases re-checks the request list: a producer that
+published *during* the release window already failed its trylock and
+returned, so the releasing holder takes the lock back rather than
+strand the portion. With ``delegation=False`` the pre-existing blocking
+transport is used: per-shard mailboxes drained under a claim flag, each
+message applied under a blocking ``with shard.lock`` acquisition — the
+baseline the contention benchmark compares against.
+
+Either way, exactly one thread mutates a given shard at a time, and
+portions published by one producer are applied in publication order
+(deque FIFO + in-order combine), so per-(parent, region) submission
+order — the §3.1 invariant the dependence rules require — is preserved
+per shard, while different shards proceed fully in parallel. Portions
+of *different* scopes may be interleaved by the fairness rotation;
+that is sound because scoped dependence namespaces never share a
+(parent, region) key.
 
 Join protocol for a task whose deps span k shards:
 
@@ -50,7 +64,8 @@ from typing import Callable, List, Optional, Union
 
 from ..messages import (DoneBatchMessage, DoneTaskMessage,
                         SubmitBatchMessage, SubmitTaskMessage)
-from ..trace import EV_DEPS, EV_MSG_DRAIN, EV_MSG_ENQ, NULL_TRACER
+from ..trace import (EV_COMBINE, EV_DELEGATE, EV_DEPS, EV_MSG_DRAIN,
+                     EV_MSG_ENQ, NULL_TRACER)
 from ..wd import TaskState, WorkDescriptor
 from .sharded_graph import ShardedDependenceGraph, partition_deps
 from .steal_deque import AtomicCounter
@@ -99,12 +114,19 @@ class ShardRouter:
 
     def __init__(self, graph: ShardedDependenceGraph,
                  on_ready: Callable[[WorkDescriptor], None],
-                 charge=None, tracer=None) -> None:
+                 charge=None, tracer=None, delegation: bool = True,
+                 drain_quantum: int = 16) -> None:
         from ..engine.charge import CostCharger
         self.graph = graph
         self.on_ready = on_ready
         self.charge = charge if charge is not None else CostCharger()
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        #: delegation/combining transport (module docstring); False =
+        #: the blocking mailbox baseline.
+        self.delegation = delegation
+        #: max portions one scope's bucket contributes per rotation pass
+        #: of a combine session (DDASTParams.drain_quantum upstream).
+        self.drain_quantum = max(1, drain_quantum)
         self.mailboxes: List[ShardMailbox] = [
             ShardMailbox(i) for i in range(graph.num_shards)]
 
@@ -129,15 +151,29 @@ class ShardRouter:
             return True
         return False
 
+    def _publish(self, s: int, msg: "_Message", kind: str, n: int) -> None:
+        """Transport one message to shard ``s``. Delegation: append to
+        the shard's MPSC publication list (GIL-atomic), then compete for
+        the combiner role — losing the trylock is the wait-free return.
+        Blocking baseline: the claim-flagged mailbox."""
+        tr = self.tracer
+        if not self.delegation:
+            self.mailboxes[s].push(msg)
+            if tr.enabled:
+                tr.mgr_event(EV_MSG_ENQ, -1, data=(kind, s, n))
+            return
+        self.graph.shards[s].requests.append(msg)
+        self.charge.delegate()
+        if tr.enabled:
+            tr.mgr_event(EV_DELEGATE, -1, data=(kind, s, n))
+        self._try_combine(s)
+
     def route_submit(self, wd: WorkDescriptor) -> None:
         if self.prepare_submit(wd):
             return
         msg = SubmitTaskMessage(wd)
-        tr = self.tracer
         for s in wd.shard_parts:
-            self.mailboxes[s].push(msg)
-            if tr.enabled:
-                tr.task_event(EV_MSG_ENQ, wd, -1, data=("submit", s, 1))
+            self._publish(s, msg, "submit", 1)
 
     def push_batch(self, wds: List[WorkDescriptor]) -> None:
         """Ship already-prepared WDs (see ``prepare_submit``) as one
@@ -147,12 +183,9 @@ class ShardRouter:
         for wd in wds:
             for s in wd.shard_parts:
                 per_shard.setdefault(s, []).append(wd)
-        tr = self.tracer
         for s, group in per_shard.items():
-            self.mailboxes[s].push(SubmitBatchMessage(group))
-            if tr.enabled:
-                tr.mgr_event(EV_MSG_ENQ, -1,
-                             data=("submit_batch", s, len(group)))
+            self._publish(s, SubmitBatchMessage(group), "submit_batch",
+                          len(group))
 
     def route_done(self, wd: WorkDescriptor) -> None:
         parts = wd.shard_parts            # cached by prepare_submit
@@ -161,11 +194,8 @@ class ShardRouter:
             wd.mark_completed()
             return
         msg = DoneTaskMessage(wd)
-        tr = self.tracer
         for s in parts:
-            self.mailboxes[s].push(msg)
-            if tr.enabled:
-                tr.task_event(EV_MSG_ENQ, wd, -1, data=("done", s, 1))
+            self._publish(s, msg, "done", 1)
 
     def push_done_batch(self, wds: List[WorkDescriptor]) -> None:
         """Ship finished WDs (each with at least one shard portion) as
@@ -175,12 +205,9 @@ class ShardRouter:
         for wd in wds:
             for s in wd.shard_parts:
                 per_shard.setdefault(s, []).append(wd)
-        tr = self.tracer
         for s, group in per_shard.items():
-            self.mailboxes[s].push(DoneBatchMessage(group))
-            if tr.enabled:
-                tr.mgr_event(EV_MSG_ENQ, -1,
-                             data=("done_batch", s, len(group)))
+            self._publish(s, DoneBatchMessage(group), "done_batch",
+                          len(group))
 
     # -- consumer side (the claiming manager) --------------------------
     def _submit_local(self, shard, wd: WorkDescriptor) -> bool:
@@ -254,6 +281,159 @@ class ShardRouter:
             self._finish_done(wd, succs)
         self.mailboxes[shard_index].messages_processed += 1
 
+    # -- delegation/combining (consumer side) --------------------------
+    def _msg_scope(self, msg: "_Message"):
+        """Fairness bucket key of one published message. Batches are
+        built per producer slot, so a batch is almost always single-
+        scope; the rare mixed batch is bucketed by its first entry —
+        an approximation that only skews the rotation, never ordering."""
+        if type(msg) in (SubmitBatchMessage, DoneBatchMessage):
+            return msg.wds[0].scope
+        return msg.wd.scope
+
+    def _try_combine(self, shard_index: int) -> int:
+        """Compete for the combiner role on one shard. The caller's
+        portion (if any) is already published, so losing the trylock IS
+        the wait-free path: the current holder applies it. Returns
+        portions applied by THIS thread."""
+        shard = self.graph.shards[shard_index]
+        applied = 0
+        first = True
+        while shard.requests:
+            if not shard.lock.try_acquire():
+                # someone else holds the shard: they re-check the
+                # request list before abandoning the lock (below), so
+                # every published portion is applied by somebody
+                return applied
+            if not first:
+                shard.handoffs += 1
+            try:
+                applied += self._combine_locked(shard_index, shard)
+            finally:
+                shard.lock.release()
+            first = False
+            # post-release re-check: a producer that published after our
+            # final drain already failed its trylock and returned — loop
+            # and take the lock back rather than strand its portion.
+        return applied
+
+    def _combine_locked(self, shard_index: int, shard) -> int:
+        """One combine session (``shard.lock`` held): stage every
+        published request into per-scope buckets, then apply them in
+        round-robin quanta of ``drain_quantum`` portions per scope per
+        pass — one tenant's flood cannot monopolize this shard's
+        dependence analysis. Within a scope, publication (FIFO) order
+        is preserved, which is what carries the §3.1 per-producer
+        ordering invariant through the combiner."""
+        reqs = shard.requests
+        if not reqs:
+            return 0
+        self.charge.combine()
+        buckets: dict = {}
+        order: list = []
+        while True:
+            try:
+                msg = reqs.popleft()
+            except IndexError:      # producers only append; safe bound
+                break
+            sc = self._msg_scope(msg)
+            b = buckets.get(sc)
+            if b is None:
+                b = buckets[sc] = deque()
+                order.append(sc)
+            b.append(msg)
+        applied = 0
+        quantum = self.drain_quantum
+        share = shard.scope_portions
+        while order:
+            for sc in list(order):
+                b = buckets[sc]
+                used = 0
+                while b and used < quantum:
+                    n = self._apply(shard_index, shard, b.popleft())
+                    used += n
+                if used:
+                    applied += used
+                    share[sc] = share.get(sc, 0) + used
+                if not b:
+                    del buckets[sc]
+                    order.remove(sc)
+        if applied:
+            shard.delegated += applied
+            shard.combined += 1
+            tr = self.tracer
+            if tr.enabled:
+                tr.mgr_event(EV_COMBINE, -1,
+                             data=("combine", shard_index, applied))
+        return applied
+
+    def _apply(self, shard_index: int, shard, msg: "_Message") -> int:
+        """Apply one published message under the combiner's already-held
+        shard lock; returns the number of shard portions it carried.
+        Mirrors :meth:`process` minus the per-message lock acquisition —
+        that is the whole point of combining."""
+        self.charge.message()
+        tr = self.tracer
+        if type(msg) is SubmitBatchMessage:
+            n = len(msg.wds)
+            if tr.enabled:
+                tr.mgr_event(EV_MSG_DRAIN, -1,
+                             data=("submit", shard_index, n))
+            self.charge.submit_batch_cs(
+                ("shard", shard_index),
+                [(len(wd.shard_parts[shard_index]), len(wd.shard_parts))
+                 for wd in msg.wds])
+            newly = []
+            for wd in msg.wds:
+                if self._submit_local(shard, wd):
+                    newly.append(wd)
+            if tr.enabled:
+                for wd in msg.wds:
+                    tr.task_event(EV_DEPS, wd, -1, data=shard_index)
+            for wd in newly:
+                wd.mark_ready()
+                self.on_ready(wd)
+        elif type(msg) is SubmitTaskMessage:
+            n = 1
+            wd = msg.wd
+            if tr.enabled:
+                tr.mgr_event(EV_MSG_DRAIN, -1,
+                             data=("submit", shard_index, 1))
+            self.charge.submit_portion_cs(
+                ("shard", shard_index),
+                len(wd.shard_parts[shard_index]), len(wd.shard_parts))
+            ready = self._submit_local(shard, wd)
+            if tr.enabled:
+                tr.task_event(EV_DEPS, wd, -1, data=shard_index)
+            if ready:
+                wd.mark_ready()
+                self.on_ready(wd)
+        elif type(msg) is DoneBatchMessage:
+            n = len(msg.wds)
+            if tr.enabled:
+                tr.mgr_event(EV_MSG_DRAIN, -1,
+                             data=("done", shard_index, n))
+            self.charge.done_batch_cs(
+                ("shard", shard_index),
+                [(len(wd.shard_parts[shard_index]), len(wd.shard_parts))
+                 for wd in msg.wds])
+            for wd in msg.wds:
+                succs = shard.complete_local(wd)
+                self._finish_done(wd, succs)
+        else:
+            n = 1
+            wd = msg.wd
+            if tr.enabled:
+                tr.mgr_event(EV_MSG_DRAIN, -1,
+                             data=("done", shard_index, 1))
+            self.charge.done_portion_cs(
+                ("shard", shard_index),
+                len(wd.shard_parts[shard_index]), len(wd.shard_parts))
+            succs = shard.complete_local(wd)
+            self._finish_done(wd, succs)
+        self.mailboxes[shard_index].messages_processed += 1
+        return n
+
     def _finish_done(self, wd: WorkDescriptor,
                      succs: List[WorkDescriptor]) -> None:
         """Latch arithmetic after one shard scrubbed its Done portion of
@@ -267,8 +447,14 @@ class ShardRouter:
             wd.mark_completed()
 
     def drain_shard(self, shard_index: int, max_ops: int) -> int:
-        """Claim one shard and process up to ``max_ops`` mailbox entries.
-        Returns entries processed (0 if the shard was already claimed)."""
+        """Idle-manager drain of one shard. Delegation: become the
+        combiner if the lock is free (a combine session applies every
+        published portion — ``max_ops`` does not bound it; bounding
+        would just strand requests for the next pass). Blocking: claim
+        the mailbox and process up to ``max_ops`` entries. Returns 0 if
+        another thread already owns the shard."""
+        if self.delegation:
+            return self._try_combine(shard_index)
         mb = self.mailboxes[shard_index]
         if not mb.try_claim():
             return 0
@@ -285,7 +471,22 @@ class ShardRouter:
         return cnt
 
     def drain_all(self) -> int:
-        """Drain every shard mailbox to empty (taskwait/shutdown edges)."""
+        """Drain every shard to empty (taskwait/shutdown edges). Like
+        the blocking variant, loops only while THIS thread progresses:
+        requests held by a concurrent combiner are its to apply, and the
+        caller's quiescence loop re-polls ``pending()``."""
+        if self.delegation:
+            n = 0
+            progress = True
+            while progress:
+                progress = False
+                for i, shard in enumerate(self.graph.shards):
+                    if shard.requests:
+                        c = self._try_combine(i)
+                        if c:
+                            n += c
+                            progress = True
+            return n
         n = 0
         progress = True
         while progress:
@@ -306,8 +507,31 @@ class ShardRouter:
         return n
 
     def pending(self) -> int:
-        return sum(mb.pending() for mb in self.mailboxes)
+        return (sum(mb.pending() for mb in self.mailboxes)
+                + sum(len(s.requests) for s in self.graph.shards))
 
     @property
     def messages_processed(self) -> int:
         return sum(mb.messages_processed for mb in self.mailboxes)
+
+    # -- delegation counters (combiner-maintained, see GraphShard) -----
+    @property
+    def delegated_portions(self) -> int:
+        return sum(s.delegated for s in self.graph.shards)
+
+    @property
+    def combined_drains(self) -> int:
+        return sum(s.combined for s in self.graph.shards)
+
+    @property
+    def lock_handoffs(self) -> List[int]:
+        return [s.handoffs for s in self.graph.shards]
+
+    def scope_portions(self) -> dict:
+        """scope -> portions applied for that tenant, summed over
+        shards (None = the scope-less root context)."""
+        out: dict = {}
+        for s in self.graph.shards:
+            for sc, n in s.scope_portions.items():
+                out[sc] = out.get(sc, 0) + n
+        return out

@@ -33,6 +33,7 @@ created — the same semantics the global-lock graph provides, per shard.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Any, Dict, List, Tuple
 
 from ..depgraph import (_RegionState, collect_preds_and_register,
@@ -71,7 +72,8 @@ class GraphShard:
 
     __slots__ = ("index", "num_shards", "lock", "_regions", "_succs",
                  "in_shard", "max_in_shard", "total_submitted",
-                 "total_edges")
+                 "total_edges", "requests", "delegated", "combined",
+                 "handoffs", "scope_portions")
 
     def __init__(self, index: int, num_shards: int) -> None:
         self.index = index
@@ -85,6 +87,26 @@ class GraphShard:
         self.max_in_shard = 0
         self.total_submitted = 0
         self.total_edges = 0
+        # -- delegation/combining (see shards.router) ------------------
+        # MPSC publication list: producers append their Submit/Done
+        # portion here (deque.append is GIL-atomic) and then *compete*
+        # for ``lock`` with a trylock; the winner — the combiner —
+        # drains this list and applies every published portion in one
+        # combined critical section. The three counters are maintained
+        # by the combiner only, under ``lock``, so plain ints are safe:
+        #   delegated — portions that traversed the publication list
+        #               (structural: identical sim-vs-real),
+        #   combined  — combine sessions that applied >= 1 portion,
+        #   handoffs  — post-release re-acquisitions (the releasing
+        #               holder found late-published requests and took
+        #               the lock back rather than strand them).
+        self.requests: deque = deque()
+        self.delegated = 0
+        self.combined = 0
+        self.handoffs = 0
+        # scope -> portions this shard applied for that tenant (None =
+        # the scope-less root context); folded into scope_rollup().
+        self.scope_portions: Dict[Any, int] = {}
 
     # ------------------------------------------------------------------
     def local_deps(self, wd: WorkDescriptor):

@@ -119,6 +119,14 @@ class SimCosts:
     # round-trips against an echo process).
     ipc_submit_us: float = 12.0  # encode_submit_batch + ring push
     ipc_done_us: float = 8.0     # ring pop + decode_done_batch
+    # Delegation/combining fast path (shards.router): publishing one
+    # message onto a shard's MPSC request list (a GIL-atomic deque
+    # append + one trylock attempt), and one combine-session fixed cost
+    # on the lock-holder side (staging the drained requests into
+    # per-scope buckets). Measure with ``bench_contention.py
+    # --calibrate`` (delegate row = publish+trylock on a held lock).
+    delegate_us: float = 0.18    # request-list append + failed trylock
+    combine_us: float = 0.30     # per combine session (staging/rotation)
 
 
 @dataclass
@@ -149,6 +157,14 @@ class SimResult:
     iter_makespans_us: List[float] = field(default_factory=list)
     iter_lock_acq: List[int] = field(default_factory=list)
     iter_messages: List[int] = field(default_factory=list)
+    # Delegation/combining counters (sharded mode; zero elsewhere or
+    # with delegation=False). delegated_portions is structural — every
+    # portion that traversed a shard request list — so the threaded
+    # driver and the simulator report identical values on the same
+    # program (extends the sim-vs-real identity tests).
+    delegated_portions: int = 0
+    combined_drains: int = 0
+    lock_handoffs: List[int] = field(default_factory=list)
     # Per-scope rollups when run_scopes(...) drove multiple tenant
     # programs: scope name -> {tasks, weight, finish_us,
     # iter_makespans_us, replay_iterations, replayed_tasks, admitted,
@@ -206,7 +222,8 @@ class RuntimeSimulator:
                  num_shards: Optional[int] = None,
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
-                 replay: bool = False) -> None:
+                 replay: bool = False,
+                 delegation: bool = True) -> None:
         # mode validation lives in the policy registry (raises on an
         # unknown mode) — the driver itself stays free of mode branching
         if mode_needs_manager_thread(mode) and num_cores < 2:
@@ -227,6 +244,7 @@ class RuntimeSimulator:
         self.batch_size = batch_size
         self.placement_kind = placement
         self.replay = replay
+        self.delegation = delegation
 
     # -- public ---------------------------------------------------------
     def run(self, specs: List[SimTaskSpec],
@@ -237,7 +255,7 @@ class RuntimeSimulator:
         the shape record-and-replay (``replay=True``) exploits."""
         if iterations < 1:
             raise ValueError("iterations must be >= 1")
-        charge = SimCharger(self.costs)
+        charge = self._make_charge()
         tracer = self._make_tracer(charge)
         placement = self._make_placement()
         policy = self._make_policy(placement, charge, replay=self.replay,
@@ -277,7 +295,7 @@ class RuntimeSimulator:
             else [f"scope{i}" for i in range(S)]
         if not (len(weights) == len(caps) == len(names) == S):
             raise ValueError("weights/max_inflight/names length mismatch")
-        charge = SimCharger(self.costs)
+        charge = self._make_charge()
         tracer = self._make_tracer(charge)
         placement = FairAdmission(self._make_placement())
         # the scope multiplexer owns the replay wrapping (one recording
@@ -295,6 +313,14 @@ class RuntimeSimulator:
                                         list(scope_specs[i]), iterations,
                                         weight=weights[i]))
         return self._drive(programs, charge, placement, policy, tracer)
+
+    def _make_charge(self) -> SimCharger:
+        """Wait-free shard-lock accounting only applies where shard
+        locks exist; other modes keep the blocking model regardless of
+        the ``delegation`` flag."""
+        return SimCharger(self.costs,
+                          delegation=self.delegation
+                          and mode_uses_shards(self.mode))
 
     def _make_tracer(self, charge: SimCharger):
         """Virtual-time tracer: stamps `charge.now` and prices each
@@ -322,6 +348,7 @@ class RuntimeSimulator:
             main_slot=0,
             num_shards=self.num_shards or self.P,
             batch_size=self.batch_size,
+            delegation=self.delegation,
             replay=replay,
             tracer=tracer)
 
@@ -583,6 +610,9 @@ class RuntimeSimulator:
             messages=st["messages_processed"],
             max_in_graph=st["max_in_graph"],
             total_edges=st["total_edges"],
+            delegated_portions=st["delegated_portions"],
+            combined_drains=st["combined_drains"],
+            lock_handoffs=list(st["shard_lock_handoffs"]),
             trace=trace,
             events=tracer.events() if tracer.enabled else [],
             trace_dropped=tracer.dropped,

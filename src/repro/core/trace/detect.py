@@ -45,8 +45,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .recorder import (EV_END, EV_MSG_DRAIN, EV_MSG_ENQ, EV_QUIESCE,
-                       EV_READY, EV_START, EV_STEAL, TraceEvent)
+from .recorder import (EV_COMBINE, EV_DELEGATE, EV_END, EV_MSG_DRAIN,
+                       EV_MSG_ENQ, EV_QUIESCE, EV_READY, EV_START,
+                       EV_STEAL, TraceEvent)
 
 STARVATION = "ready_queue_starvation"
 INVERSION = "priority_inversion"
@@ -201,12 +202,20 @@ def detect_starvation(events: Sequence[TraceEvent],
             busy[e.slot] = True
         elif e.ev == EV_END:
             busy[e.slot] = False
-        elif e.ev == EV_MSG_ENQ:
+        elif e.ev in (EV_MSG_ENQ, EV_DELEGATE):
+            # a delegated portion is backlog exactly like a mailbox
+            # entry: published, not yet applied by a combiner
             backlog += _msg_count(e.data)
         elif e.ev == EV_MSG_DRAIN:
             backlog -= _msg_count(e.data)
             if span_start is not None and span_backlog_only:
                 close_span(t)           # the manager IS making progress
+        elif e.ev == EV_COMBINE:
+            # a combine session applied n published portions in one
+            # critical section; the per-portion arithmetic already rode
+            # the msg_drained events — this is pure progress evidence
+            if span_start is not None and span_backlog_only:
+                close_span(t)
         t_prev = t
     close_span(t_hi)
     return findings

@@ -57,6 +57,13 @@ EV_START = "start"                # body started on slot
 EV_END = "end"                    # body finished on slot
 EV_MSG_ENQ = "msg_enqueued"       # Submit/Done posted to a queue/mailbox
 EV_MSG_DRAIN = "msg_drained"      # a manager processed one entry
+EV_DELEGATE = "delegated"         # Submit/Done portion published to a
+#                                   shard's MPSC request list (the
+#                                   delegation analogue of msg_enqueued;
+#                                   same (kind, shard, n) payload)
+EV_COMBINE = "combined"           # one combine session: the lock holder
+#                                   applied n published portions in a
+#                                   single combined critical section
 EV_STEAL = "steal"                # popped from another slot's deque;
 #                                   slot = thief, data = victim slot
 EV_ADMIT_DEFER = "admission_defer"  # FairAdmission held the task back

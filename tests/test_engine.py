@@ -92,6 +92,11 @@ def test_sim_and_real_share_policy_protocol(app, scale, mode):
         sim_app_specs(app, scale))
     assert rt.stats.tasks_executed == sim.tasks
     assert rt.stats.messages_processed == sim.messages
+    # delegated_portions is structural (every portion that traversed a
+    # shard request list), so the two drivers must agree exactly
+    assert rt.stats.delegated_portions == sim.delegated_portions
+    if mode == "sharded":
+        assert sim.delegated_portions == sim.messages > 0
     assert len(sim.exec_order) == sim.tasks
     if app != "nbody":                  # flat graphs: full ordering check
         specs = sim_app_specs(app, scale)
@@ -158,10 +163,12 @@ def test_batched_threaded_matches_unbatched_order():
 
 def test_submit_batch_message_processed_under_one_entry():
     """A batch of k chained tasks on one shard costs ONE mailbox entry
-    and preserves submission order within the batch."""
+    and preserves submission order within the batch. Pins the blocking
+    mailbox baseline (delegation=False): under delegation the publisher
+    combines eagerly, so nothing ever sits in a mailbox to count."""
     graph = ShardedDependenceGraph(num_shards=1)
     ready = []
-    router = ShardRouter(graph, on_ready=ready.append)
+    router = ShardRouter(graph, on_ready=ready.append, delegation=False)
     root = WorkDescriptor(func=None, label="root")
     wds = [WorkDescriptor(func=None, deps=((("r",), INOUT),), parent=root)
            for _ in range(5)]
@@ -345,8 +352,12 @@ def test_steal_deque_stress_no_loss_no_duplication():
 
 
 # ------------------------------------------------- online shard tuning
-def _quiesced_rt(num_shards=4):
-    return TaskRuntime(num_workers=2, mode="sharded", num_shards=num_shards)
+def _quiesced_rt(num_shards=4, delegation=True):
+    # the fabricated-stats tuner tests pin delegation=False: they drive
+    # the blocking lock-wait metric branch (the delegation/handoffs
+    # branch is exercised in test_delegation.py)
+    return TaskRuntime(num_workers=2, mode="sharded", num_shards=num_shards,
+                       delegation=delegation)
 
 
 def test_sharded_policy_resize_at_quiescence():
@@ -381,7 +392,7 @@ def test_sharded_policy_resize_at_quiescence():
 def test_shard_tuner_hill_climb_converges():
     """Feed the controller fabricated stats: improving while doubling,
     then worsening — it must reverse once, then settle (bracketed)."""
-    rt = _quiesced_rt(4)
+    rt = _quiesced_rt(4, delegation=False)
     tuner = DynamicTuner(rt, TunerConfig(interval_s=0.0,
                                          shard_min_messages=10))
     wait = [0.0]
@@ -410,7 +421,7 @@ def test_shard_tuner_hill_climb_converges():
 def test_shard_tuner_does_not_oscillate_on_unimodal_metric():
     """Regression: a clean metric with an interior optimum must settle AT
     the optimum instead of bouncing S/2 -> S -> 2S forever."""
-    rt = _quiesced_rt(8)
+    rt = _quiesced_rt(8, delegation=False)
     tuner = DynamicTuner(rt, TunerConfig(interval_s=0.0,
                                          shard_min_messages=10))
     cost = {2: 1.6, 4: 1.3, 8: 1.0, 16: 1.3, 32: 1.6}

@@ -294,7 +294,7 @@ def test_backend_dispatch_and_validation():
         TaskRuntime(backend="sidecars")
     with pytest.raises(TypeError):       # backend is keyword-only
         TaskRuntime(1, "sync", None, False, None, None, None,
-                    "round_robin", False, 0, "processes")
+                    "round_robin", False, 0, True, "processes")
     with pytest.raises(ValueError, match="scopes"):
         ProcessRuntime(num_clients=2)
     with pytest.raises(ValueError, match="mode"):

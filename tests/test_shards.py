@@ -90,10 +90,12 @@ def test_router_chain_orders_and_completes():
 
 def test_router_cross_shard_task_waits_for_all_portions():
     """A task whose deps live on several shards becomes ready only after
-    every shard portion is processed (the submit latch)."""
+    every shard portion is processed (the submit latch). Drives the
+    blocking mailboxes directly (delegation=False); the same latch under
+    delegation is covered in test_delegation.py."""
     graph = ShardedDependenceGraph(num_shards=8)
     ready = []
-    router = ShardRouter(graph, on_ready=ready.append)
+    router = ShardRouter(graph, on_ready=ready.append, delegation=False)
     root = WorkDescriptor(func=None, label="root")
     deps = tuple(((f"r{i}",), INOUT) for i in range(6))
     wd = WorkDescriptor(func=None, deps=deps, parent=root)
@@ -249,7 +251,10 @@ def test_drain_all_processes_submit_and_done_queues():
 
 
 def test_drain_all_sharded_routes_through_shards():
-    rt = TaskRuntime(num_workers=2, mode="sharded", num_shards=4)
+    # blocking-mailbox baseline: with delegation the producer combines
+    # eagerly and nothing would sit in a mailbox to observe
+    rt = TaskRuntime(num_workers=2, mode="sharded", num_shards=4,
+                     delegation=False)
     for i in range(12):
         rt.task(lambda: None, deps=[(("r", i % 4), INOUT)])
     assert rt.shard_router.pending() == 12
@@ -359,9 +364,13 @@ def test_sim_sharded_completes_all_apps():
 
 
 def test_sim_sharded_shard_count_sweep_reduces_contention():
+    # the blocking lock model (delegation=False): more shards -> less
+    # contention; under delegation shard lock waits are ~0 by design
+    # (see test_delegation.py)
     waits = []
     for nshards in (1, 16):
-        r = RuntimeSimulator(8, "sharded", num_shards=nshards).run(
+        r = RuntimeSimulator(8, "sharded", num_shards=nshards,
+                             delegation=False).run(
             sim_matmul_specs(8, dur_us=100))
         waits.append(r.lock_wait_us)
     assert waits[1] < waits[0], waits

@@ -16,8 +16,9 @@ from repro.core import (DynamicTuner, RuntimeSimulator, SimTaskSpec,
 from repro.core.sched.placement import ShardAffinePlacement
 from repro.core.taskgraph_apps import sim_matmul_specs
 from repro.core.trace import (AFFINITY_MISS, EV_ADMIT_DEFER, EV_CREATED,
-                              EV_DEPS, EV_END, EV_MSG_DRAIN, EV_MSG_ENQ,
-                              EV_QUIESCE, EV_READY, EV_START, EV_STEAL,
+                              EV_DELEGATE, EV_DEPS, EV_END, EV_MSG_DRAIN,
+                              EV_MSG_ENQ, EV_QUIESCE, EV_READY, EV_START,
+                              EV_STEAL,
                               INVERSION, NULL_TRACER, STARVATION,
                               TASK_LIFECYCLE, Finding, TraceEvent,
                               TraceRecorder, detect_affinity_misses,
@@ -485,16 +486,17 @@ def test_admission_defer_events_recorded():
 
 
 def test_sharded_mailbox_events_balance():
-    """Every enqueued submit/done is eventually drained: the (kind,
-    where, n) payloads sum to zero backlog at run end, per mailbox."""
+    """Every enqueued/delegated submit/done is eventually drained: the
+    (kind, where, n) payloads sum to zero backlog at run end, per
+    mailbox (blocking) or per shard request list (delegation)."""
     res = RuntimeSimulator(4, "sharded", trace=True).run(
         _chain_fanout_specs())
     backlog = {}
     for e in res.events:
-        if e.ev in (EV_MSG_ENQ, EV_MSG_DRAIN):
+        if e.ev in (EV_MSG_ENQ, EV_DELEGATE, EV_MSG_DRAIN):
             kind, where, n = e.data
             backlog[where] = backlog.get(where, 0) \
-                + (n if e.ev == EV_MSG_ENQ else -n)
+                + (-n if e.ev == EV_MSG_DRAIN else n)
     assert backlog and all(v == 0 for v in backlog.values())
     # deps_resolved is stamped per shard portion on multi-region tasks:
     # each head spans two regions, so 1 or 2 portions depending on
