@@ -319,6 +319,11 @@ class CriticalPathPlacement(ShardAffinePlacement):
         # never reallocated: a tenant freezing or retiring while others
         # have banded work in flight must not orphan their entries.
         self._scope_bands: Dict[Hashable, List[int]] = {}
+        # guards band-array (re)configuration: two tenants' first scoped
+        # publications run on their own worker threads, and an unguarded
+        # check-then-act could bind half the deques to one counts list
+        # and half to another, desyncing occupancy from band contents
+        self._universe_lock = threading.Lock()
         self.priority_pushes = 0
         self.global_band_steals = 0
 
@@ -328,17 +333,20 @@ class CriticalPathPlacement(ShardAffinePlacement):
 
     def _ensure_scope_universe(self) -> bool:
         """Configure the fixed ``max_bands`` band array shared by all
-        scoped tables. Returns False when a single-tenant table already
-        holds the deques at a different width — reconfiguring would
-        orphan its in-flight banded tasks, so the scoped publication is
-        declined and that tenant degrades to the normal lane."""
-        if self._band_counts is not None:
-            return len(self._band_counts) == self.max_bands
-        counts = [0] * self.max_bands
-        for d in self.deques:
-            d.set_num_bands(self.max_bands, counts)
-        self._band_counts = counts
-        return True
+        scoped tables (under ``_universe_lock``: concurrent first
+        publications must not interleave the per-deque rebinding loop).
+        Returns False when a single-tenant table already holds the
+        deques at a different width — reconfiguring would orphan its
+        in-flight banded tasks, so the scoped publication is declined
+        and that tenant degrades to the normal lane."""
+        with self._universe_lock:
+            if self._band_counts is not None:
+                return len(self._band_counts) == self.max_bands
+            counts = [0] * self.max_bands
+            for d in self.deques:
+                d.set_num_bands(self.max_bands, counts)
+            self._band_counts = counts
+            return True
 
     def set_replay_priorities(self, levels: Sequence[float],
                               scope: Optional[Hashable] = None) -> None:
@@ -354,12 +362,30 @@ class CriticalPathPlacement(ShardAffinePlacement):
             self._scope_bands[scope] = [b * scale // nbands
                                         for b in bands]
             return
+        with self._universe_lock:
+            if not self._scope_bands:
+                # exclusive single-tenant publication: size the band
+                # array to exactly what this table needs (reallocation
+                # is safe — publication is root-quiescent, so the only
+                # banded in-flight tasks were this tenant's, now drained)
+                bands, nbands = quantize_bands(levels, self.max_bands)
+                counts = [0] * nbands
+                for d in self.deques:
+                    d.set_num_bands(nbands, counts)
+                self._band_counts = counts
+                self._bands_of = bands
+                return
+        # Scoped tables are live (or a band array already exists):
+        # reallocating would empty every band deque and orphan other
+        # tenants' banded in-flight tasks — the same hazard
+        # _ensure_scope_universe guards against in the opposite
+        # direction. Publish the root table into the fixed max_bands
+        # universe instead, exactly like a scoped publication.
+        if not self._ensure_scope_universe():
+            return
         bands, nbands = quantize_bands(levels, self.max_bands)
-        counts = [0] * nbands
-        for d in self.deques:
-            d.set_num_bands(nbands, counts)
-        self._band_counts = counts
-        self._bands_of = bands
+        scale = self.max_bands
+        self._bands_of = [b * scale // nbands for b in bands]
 
     def clear_replay_priorities(self,
                                 scope: Optional[Hashable] = None) -> None:
@@ -369,10 +395,11 @@ class CriticalPathPlacement(ShardAffinePlacement):
             self._scope_bands.pop(scope, None)
             return
         self._bands_of = None
-        if not self._scope_bands:
-            self._band_counts = None
-            for d in self.deques:
-                d.set_num_bands(0)
+        with self._universe_lock:
+            if not self._scope_bands and self._band_counts is not None:
+                self._band_counts = None
+                for d in self.deques:
+                    d.set_num_bands(0)
 
     def _band_for(self, wd: WorkDescriptor, sid: int) -> int:
         """The band of a ready replayed task: its tenant's table when

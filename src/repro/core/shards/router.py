@@ -125,8 +125,10 @@ class ShardRouter:
         #: the blocking mailbox baseline.
         self.delegation = delegation
         #: max portions one scope's bucket contributes per rotation pass
-        #: of a combine session (DDASTParams.drain_quantum upstream).
-        self.drain_quantum = max(1, drain_quantum)
+        #: of a combine session (DDASTParams.drain_quantum upstream);
+        #: 0 disables the quantum — pure FIFO drain order, matching the
+        #: ddast queue sweep's reading of the same knob.
+        self.drain_quantum = max(0, drain_quantum)
         self.mailboxes: List[ShardMailbox] = [
             ShardMailbox(i) for i in range(graph.num_shards)]
 
@@ -282,14 +284,37 @@ class ShardRouter:
         self.mailboxes[shard_index].messages_processed += 1
 
     # -- delegation/combining (consumer side) --------------------------
-    def _msg_scope(self, msg: "_Message"):
-        """Fairness bucket key of one published message. Batches are
-        built per producer slot, so a batch is almost always single-
-        scope; the rare mixed batch is bucketed by its first entry —
-        an approximation that only skews the rotation, never ordering."""
-        if type(msg) in (SubmitBatchMessage, DoneBatchMessage):
-            return msg.wds[0].scope
-        return msg.wd.scope
+    @staticmethod
+    def _split_scopes(msg: "_Message"):
+        """Split one published message into ``(scope, message)`` pieces,
+        each single-scope, preserving intra-message order. Single-task
+        messages and single-scope batches (the common case: per-slot
+        batch buffers usually fill within one tenant's burst) pass
+        through untouched. A mixed-scope batch becomes one sub-batch per
+        same-scope *run*, so every portion lands in its own scope's
+        fairness bucket: bucketing a whole mixed batch under one scope
+        would let the rotation apply its other-scope tail ahead of that
+        scope's earlier, still-bucketed messages — reordering same-scope
+        same-(parent, region) Submits and breaking the §3.1 invariant."""
+        t = type(msg)
+        if t in (SubmitBatchMessage, DoneBatchMessage):
+            wds = msg.wds
+            first = wds[0].scope
+            if all(wd.scope == first for wd in wds):
+                return ((first, msg),)
+            out = []
+            run = [wds[0]]
+            cur = first
+            for wd in wds[1:]:
+                if wd.scope == cur:
+                    run.append(wd)
+                else:
+                    out.append((cur, t(run)))
+                    run = [wd]
+                    cur = wd.scope
+            out.append((cur, t(run)))
+            return out
+        return ((msg.wd.scope, msg),)
 
     def _try_combine(self, shard_index: int) -> int:
         """Compete for the combiner role on one shard. The caller's
@@ -319,45 +344,60 @@ class ShardRouter:
 
     def _combine_locked(self, shard_index: int, shard) -> int:
         """One combine session (``shard.lock`` held): stage every
-        published request into per-scope buckets, then apply them in
-        round-robin quanta of ``drain_quantum`` portions per scope per
-        pass — one tenant's flood cannot monopolize this shard's
-        dependence analysis. Within a scope, publication (FIFO) order
-        is preserved, which is what carries the §3.1 per-producer
-        ordering invariant through the combiner."""
+        published request into per-scope buckets (mixed-scope batches
+        split into single-scope runs first, see ``_split_scopes``), then
+        apply them in round-robin quanta of ``drain_quantum`` portions
+        per scope per pass — one tenant's flood cannot monopolize this
+        shard's dependence analysis. Within a scope, publication (FIFO)
+        order is preserved, which is what carries the §3.1 per-producer
+        ordering invariant through the combiner. ``drain_quantum == 0``
+        disables the rotation entirely: requests are applied in pure
+        publication-FIFO order."""
         reqs = shard.requests
         if not reqs:
             return 0
         self.charge.combine()
-        buckets: dict = {}
-        order: list = []
-        while True:
-            try:
-                msg = reqs.popleft()
-            except IndexError:      # producers only append; safe bound
-                break
-            sc = self._msg_scope(msg)
-            b = buckets.get(sc)
-            if b is None:
-                b = buckets[sc] = deque()
-                order.append(sc)
-            b.append(msg)
         applied = 0
         quantum = self.drain_quantum
         share = shard.scope_portions
-        while order:
-            for sc in list(order):
-                b = buckets[sc]
-                used = 0
-                while b and used < quantum:
-                    n = self._apply(shard_index, shard, b.popleft())
-                    used += n
-                if used:
-                    applied += used
-                    share[sc] = share.get(sc, 0) + used
-                if not b:
-                    del buckets[sc]
-                    order.remove(sc)
+        if quantum == 0:
+            # quantum disabled: pure FIFO drain, no staging pass
+            while True:
+                try:
+                    msg = reqs.popleft()
+                except IndexError:  # producers only append; safe bound
+                    break
+                for sc, piece in self._split_scopes(msg):
+                    n = self._apply(shard_index, shard, piece)
+                    applied += n
+                    share[sc] = share.get(sc, 0) + n
+        else:
+            buckets: dict = {}
+            order: list = []
+            while True:
+                try:
+                    msg = reqs.popleft()
+                except IndexError:  # producers only append; safe bound
+                    break
+                for sc, piece in self._split_scopes(msg):
+                    b = buckets.get(sc)
+                    if b is None:
+                        b = buckets[sc] = deque()
+                        order.append(sc)
+                    b.append(piece)
+            while order:
+                for sc in list(order):
+                    b = buckets[sc]
+                    used = 0
+                    while b and used < quantum:
+                        n = self._apply(shard_index, shard, b.popleft())
+                        used += n
+                    if used:
+                        applied += used
+                        share[sc] = share.get(sc, 0) + used
+                    if not b:
+                        del buckets[sc]
+                        order.remove(sc)
         if applied:
             shard.delegated += applied
             shard.combined += 1

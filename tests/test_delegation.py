@@ -187,6 +187,78 @@ def test_threaded_chain_order_preserved_per_region():
     assert all(w.state == TaskState.COMPLETED for w in chain)
 
 
+# ------------------------------------- combiner fairness-bucket staging
+def test_mixed_scope_batch_split_preserves_per_scope_fifo():
+    """A mixed-scope batch must be split into per-scope pieces at
+    staging time: bucketing the whole batch under its first entry's
+    scope lets the rotation apply the batch's other-scope tail ahead of
+    that scope's earlier messages still queued in their own
+    (quantum-exhausted) bucket — reordering same-(parent, region)
+    Submits and resolving a later sibling's dependences first."""
+    from repro.core.messages import SubmitBatchMessage
+    graph, router, ready = _router(num_shards=1, drain_quantum=1)
+    root_a = WorkDescriptor(func=None, label="rootA")
+    root_b = WorkDescriptor(func=None, label="rootB")
+    a1, a2, a3 = [WorkDescriptor(func=None, deps=((("r",), INOUT),),
+                                 parent=root_a, scope=1, label=f"a{i}")
+                  for i in (1, 2, 3)]
+    b1 = WorkDescriptor(func=None, deps=((("b",), INOUT),),
+                        parent=root_b, scope=2, label="b1")
+    shard = graph.shards[0]
+    assert shard.lock.try_acquire()      # strand everything in requests
+    try:
+        router.route_submit(a1)
+        router.route_submit(a2)
+        # a mixed batch whose FIRST entry is scope 2 but whose tail is
+        # scope 1's NEXT chain link — the exact hazard shape
+        assert not router.prepare_submit(b1)
+        assert not router.prepare_submit(a3)
+        router._publish(0, SubmitBatchMessage([b1, a3]), "submit_batch", 2)
+    finally:
+        shard.lock.release()
+    assert router._try_combine(0) == 4
+    # only the chain head (and the independent b1) are ready
+    assert set(ready) == {a1, b1}
+    # retire the chain head-first: each Done must release exactly the
+    # NEXT link — under first-entry bucketing a3 would precede a2
+    router.route_done(a1)
+    _drain(router)
+    assert a2 in ready and a3 not in ready, "batch tail jumped the chain"
+    router.route_done(a2)
+    _drain(router)
+    assert a3 in ready
+    for wd in (a3, b1):
+        router.route_done(wd)
+    _drain(router)
+    assert graph.in_graph == 0
+    assert all(w.state == TaskState.COMPLETED for w in (a1, a2, a3, b1))
+
+
+def test_drain_quantum_zero_is_pure_fifo():
+    """DDASTParams documents drain_quantum == 0 as 'disables the
+    quantum (pure FIFO drain order)'; the router must honor that
+    instead of clamping it to the strictest rotation (quantum=1)."""
+    graph, router, ready = _router(num_shards=1, drain_quantum=0)
+    assert router.drain_quantum == 0     # not clamped to 1
+    root = WorkDescriptor(func=None, label="root")
+    # scopes [1, 1, 2, 2]: a quantum=1 rotation would interleave
+    # (w0, w2, w1, w3); pure FIFO keeps publication order
+    wds = [WorkDescriptor(func=None, deps=(((("r", i),), INOUT),),
+                          parent=root, scope=1 + i // 2, label=f"w{i}")
+           for i in range(4)]
+    shard = graph.shards[0]
+    assert shard.lock.try_acquire()
+    try:
+        for wd in wds:
+            router.route_submit(wd)
+    finally:
+        shard.lock.release()
+    assert router._try_combine(0) == 4
+    assert ready == wds, "quantum=0 did not drain in publication order"
+    # per-scope shares are still accounted for the rollups
+    assert graph.shards[0].scope_portions == {1: 2, 2: 2}
+
+
 # ------------------------------------------ hypothesis property versions
 if HAVE_HYPOTHESIS:
 
@@ -517,6 +589,60 @@ def test_scoped_publication_declines_mismatched_legacy_universe():
     pl.push_replay(wd, 0)
     assert pl.priority_pushes == 0                # normal lane
     assert pl.pop(0) is wd
+
+
+def test_root_publication_with_live_scoped_tables_keeps_universe():
+    """A root-context (scope=None) publication while scoped tables are
+    live must NOT reallocate the shared band array — that would empty
+    every band deque and orphan other tenants' banded in-flight tasks.
+    It publishes into the fixed max_bands universe instead."""
+    pl = CriticalPathPlacement(2, max_bands=8)
+    pl.set_replay_priorities([5.0, 1.0], scope=1)
+    inflight = _wd(scope=1)
+    pl.push_replay(inflight, 0)          # banded, in flight
+    assert pl.priority_pushes == 1 and sum(pl._band_counts) == 1
+    pl.set_replay_priorities([3.0, 2.0, 1.0])       # root-context table
+    # fixed universe untouched: same width, occupancy still counts the
+    # in-flight scoped task
+    assert len(pl._band_counts) == pl.max_bands
+    assert sum(pl._band_counts) == 1
+    assert pl.pop(0) is inflight, "scoped in-flight task orphaned"
+    # the root table works, pre-scaled into the shared universe
+    r = _wd()
+    pl.push_replay(r, 0)
+    assert pl.priority_pushes == 2
+    assert pl.pop(0) is r
+    # root clear with scoped tables live keeps the array too
+    pl.clear_replay_priorities()
+    assert pl._bands_of is None and pl._band_counts is not None
+    # last tenant leaving tears the universe down
+    pl.clear_replay_priorities(scope=1)
+    pl.clear_replay_priorities()
+    assert pl._band_counts is None
+
+
+def test_concurrent_first_scoped_publications_share_one_universe():
+    """Two tenants' FIRST scoped publications racing from their own
+    threads must leave every deque bound to the SAME counts list (the
+    unguarded check-then-act could interleave the per-deque rebinding
+    loop and desync occupancy from band contents)."""
+    for _ in range(20):                  # racy: give it some attempts
+        pl = CriticalPathPlacement(4, max_bands=8)
+        barrier = threading.Barrier(2)
+
+        def publish(scope):
+            barrier.wait()
+            pl.set_replay_priorities([4.0, 2.0, 1.0], scope=scope)
+
+        ts = [threading.Thread(target=publish, args=(s,)) for s in (1, 2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=10.0)
+        assert set(pl._scope_bands) == {1, 2}
+        assert len(pl._band_counts) == pl.max_bands
+        for d in pl.deques:
+            assert d._counts is pl._band_counts
 
 
 def test_replay_sid_survives_fair_admission():
