@@ -1,0 +1,258 @@
+"""Live-metrics-plane overhead + live-detector agreement gates.
+
+Three sections:
+
+  * **sim overhead** — the acceptance matmul (nb=16, 400 us bodies, 16
+    simulated cores) with ``metrics=False`` vs ``metrics=True``; every
+    instrument stamp and sampler tick is priced in virtual time
+    (``SimCosts.metric_event`` / ``metric_sample``), so the makespan
+    delta is the honest, deterministic cost of the metrics plane.
+  * **threads overhead** — the same claim on the real threads driver:
+    interleaved base/metrics repeats (median of each) on a
+    sleep-bodied task sweep. Wall-clock on a shared host is noisy, so
+    the gate is enforced only with enough cores to parallelize
+    (reported, not enforced, elsewhere — the bench_procs precedent).
+  * **live detector agreement** — the incremental detector the sampler
+    runs mid-phase (``core.trace.IncrementalDetector``) swept
+    chunk-by-chunk over a fabricated starvation timeline must find the
+    same verdict set as one post-hoc ``detect_all`` pass: live
+    feedback may arrive earlier, never different.
+
+Standalone:
+
+    PYTHONPATH=src python benchmarks/bench_metrics.py           # full
+    PYTHONPATH=src python benchmarks/bench_metrics.py --smoke   # CI
+    ... [--out BENCH_metrics.json]
+
+or as a suite inside ``python -m benchmarks.run --only metrics``.
+
+Exit status is the CI gate: non-zero when either enforced overhead
+exceeds ``GATE['overhead_pct_max']`` % of makespan or the live sweep
+disagrees with the post-hoc detectors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import RuntimeSimulator, TaskRuntime  # noqa: E402
+from repro.core.taskgraph_apps import sim_matmul_specs  # noqa: E402
+from repro.core.trace import (EV_END, EV_READY, EV_START,  # noqa: E402
+                              IncrementalDetector, TraceEvent,
+                              detect_all)
+
+# the acceptance workload: nb=16 matmul (400 us bodies) on 16 cores
+GATE = {"nb": 16, "dur_us": 400.0, "cores": 16, "mode": "ddast",
+        "overhead_pct_max": 2.0,
+        # real-clock threads gate needs real parallelism to be stable
+        "threads_min_cores": 4}
+
+FULL = {"threads_tasks": 600, "threads_repeats": 13}
+SMOKE = {"threads_tasks": 300, "threads_repeats": 9}
+
+
+# ------------------------------------------------------- sim overhead
+def sim_overhead() -> dict:
+    """Same graph, metrics off vs on; virtual-time priced, so the
+    delta is deterministic and host-independent."""
+    specs = sim_matmul_specs(GATE["nb"], dur_us=GATE["dur_us"])
+    base = RuntimeSimulator(GATE["cores"], GATE["mode"]).run(specs)
+    lively = RuntimeSimulator(GATE["cores"], GATE["mode"],
+                              metrics=True).run(specs)
+    pct = (lively.makespan_us / base.makespan_us - 1.0) * 100.0
+    samp = (lively.metrics or {}).get("sampler", {})
+    return {
+        "nb": GATE["nb"], "cores": GATE["cores"], "mode": GATE["mode"],
+        "base_makespan_us": round(base.makespan_us, 1),
+        "metrics_makespan_us": round(lively.makespan_us, 1),
+        "samples": samp.get("samples", 0),
+        "series": len(samp.get("series", {})),
+        "overhead_pct": round(pct, 3),
+    }
+
+
+# --------------------------------------------------- threads overhead
+def _threads_run(metrics: bool, tasks: int, workers: int) -> float:
+    t0 = time.perf_counter()
+    with TaskRuntime(num_workers=workers, mode="ddast",
+                     metrics=metrics) as rt:
+        for i in range(tasks):
+            rt.task(time.sleep, 4e-4, label=f"t{i}")
+        rt.taskwait()
+    return time.perf_counter() - t0
+
+
+def threads_overhead(cfg: dict) -> dict:
+    """Interleaved base/metrics repeats: interleaving makes both
+    populations see the same host drift. The gate uses the min of each
+    population — sleep-bodied makespans carry additive scheduler
+    noise (timer quantization swings single pairs by several %), and
+    min is the standard robust estimator for the noise-free floor;
+    the median is reported alongside."""
+    workers = min(GATE["cores"], os.cpu_count() or 1)
+    tasks = cfg["threads_tasks"]
+    _threads_run(False, tasks // 4, workers)          # warm-up
+    base, lively = [], []
+    for _ in range(cfg["threads_repeats"]):
+        base.append(_threads_run(False, tasks, workers))
+        lively.append(_threads_run(True, tasks, workers))
+    pct = (min(lively) / min(base) - 1.0) * 100.0
+    med_pct = (statistics.median(lively) / statistics.median(base)
+               - 1.0) * 100.0
+    # noise guard: when the BASE population alone spreads wider than
+    # the gate threshold, the host cannot resolve a 2% delta — report
+    # the number, skip enforcement (the bench_procs precedent)
+    noise_pct = (max(base) / min(base) - 1.0) * 100.0
+    return {
+        "workers": workers, "tasks": tasks,
+        "repeats": cfg["threads_repeats"],
+        "base_min_s": round(min(base), 4),
+        "metrics_min_s": round(min(lively), 4),
+        "overhead_pct": round(pct, 3),
+        "median_overhead_pct": round(med_pct, 3),
+        "host_noise_pct": round(noise_pct, 3),
+        "enforced": (os.cpu_count() or 1) >= GATE["threads_min_cores"]
+        and noise_pct <= GATE["overhead_pct_max"],
+    }
+
+
+# ------------------------------------------- live detector agreement
+def _mk(t, ev, wd_id=-1, slot=-1, label="", scope=None, data=None):
+    return TraceEvent(t, ev, wd_id, slot, label, scope, data)
+
+
+def _starvation_timeline() -> list:
+    """The detector test suite's oracle: workers 0/1 warm up, slot 1's
+    deque piles 5 ready tasks while slot 0 idles the whole span."""
+    evs = [
+        _mk(0.0, EV_START, wd_id=900, slot=0, label="warm"),
+        _mk(0.1, EV_END, wd_id=900, slot=0, label="warm"),
+        _mk(0.0, EV_START, wd_id=901, slot=1, label="warm"),
+        _mk(0.1, EV_END, wd_id=901, slot=1, label="warm"),
+    ]
+    for i in range(5):
+        evs.append(_mk(1.0 + i * 0.01, EV_READY, wd_id=i, slot=1,
+                       label=f"t{i}"))
+    evs.append(_mk(100.0, EV_END, wd_id=901, slot=1))   # span closer
+    return evs
+
+
+def detector_agreement() -> dict:
+    """Sweep the incremental detector over growing prefixes (what the
+    sampler does tick by tick) and compare its accumulated verdicts
+    against one post-hoc pass over the full timeline."""
+    evs = _starvation_timeline()
+    posthoc = detect_all(evs)
+    det = IncrementalDetector()
+    live: list = []
+    for cut in range(2, len(evs) + 1, 2):
+        live.extend(det.sweep(evs[:cut]))
+    if len(evs) % 2:
+        live.extend(det.sweep(evs))
+    key = lambda f: (f.kind, round(f.t0, 9), f.slot)  # noqa: E731
+    live_keys = {key(f) for f in live}
+    post_keys = {key(f) for f in posthoc}
+    return {
+        "posthoc_findings": sorted(f.kind for f in posthoc),
+        "live_findings": sorted(f.kind for f in live),
+        "live_duplicates": len(live) - len(live_keys),
+        "agrees": live_keys == post_keys and len(live) == len(live_keys)
+        and bool(post_keys),
+    }
+
+
+# ----------------------------------------------------------- assembly
+def acceptance(sim: dict, threads: dict, agree: dict) -> dict:
+    mx = GATE["overhead_pct_max"]
+    return {
+        "overhead_pct_max": mx,
+        "sim_overhead_pct": sim["overhead_pct"],
+        "sim_ok": sim["overhead_pct"] <= mx,
+        "threads_overhead_pct": threads["overhead_pct"],
+        "threads_gate_enforced": threads["enforced"],
+        "threads_ok": threads["overhead_pct"] <= mx,
+        "detector_agreement_ok": agree["agrees"],
+        "cores": os.cpu_count() or 1,
+    }
+
+
+def collect(smoke: bool) -> dict:
+    cfg = SMOKE if smoke else FULL
+    t0 = time.time()
+    sim = sim_overhead()
+    threads = threads_overhead(cfg)
+    agree = detector_agreement()
+    return {
+        "bench": "metrics",
+        "smoke": smoke,
+        "sim_overhead": sim,
+        "threads_overhead": threads,
+        "detector_agreement": agree,
+        "acceptance": acceptance(sim, threads, agree),
+        "bench_wall_s": round(time.time() - t0, 2),
+    }
+
+
+def run(csv_rows: list) -> None:
+    """benchmarks.run suite entry point."""
+    out = collect(smoke=True)
+    acc = out["acceptance"]
+    csv_rows.append(("metrics.sim.overhead_pct",
+                     acc["sim_overhead_pct"],
+                     f"gate<={acc['overhead_pct_max']}% on "
+                     f"{GATE['cores']}-core nb{GATE['nb']} matmul"))
+    csv_rows.append(("metrics.threads.overhead_pct",
+                     acc["threads_overhead_pct"],
+                     f"enforced={int(acc['threads_gate_enforced'])}"))
+    csv_rows.append(("metrics.detector_agreement",
+                     int(acc["detector_agreement_ok"]),
+                     "live sweep == post-hoc detect_all"))
+    csv_rows.append(("metrics.sim.samples",
+                     out["sim_overhead"]["samples"],
+                     f"series={out['sim_overhead']['series']}"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer threads repeats, same gates (CI)")
+    ap.add_argument("--out", default="BENCH_metrics.json",
+                    help="JSON output path")
+    args = ap.parse_args()
+    out = collect(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    acc = out["acceptance"]
+    print(f"wrote {args.out} ({out['bench_wall_s']}s)")
+    mx = acc["overhead_pct_max"]
+    failed = False
+    print(f"sim metrics overhead {acc['sim_overhead_pct']}% of makespan"
+          f" on {GATE['cores']}-core nb{GATE['nb']} matmul (max {mx}%)"
+          f" -> {'OK' if acc['sim_ok'] else 'REGRESSION'}")
+    failed |= not acc["sim_ok"]
+    if acc["threads_gate_enforced"]:
+        print(f"threads metrics overhead {acc['threads_overhead_pct']}%"
+              f" (max {mx}%) -> "
+              f"{'OK' if acc['threads_ok'] else 'REGRESSION'}")
+        failed |= not acc["threads_ok"]
+    else:
+        noise = out["threads_overhead"]["host_noise_pct"]
+        print(f"threads overhead gate: SKIPPED ({acc['cores']} core(s),"
+              f" host noise {noise}% — measured "
+              f"{acc['threads_overhead_pct']}%; enforced on quiet "
+              f"multi-core hosts)")
+    print("live-vs-posthoc detector agreement -> "
+          + ("OK" if acc["detector_agreement_ok"] else "REGRESSION"))
+    failed |= not acc["detector_agreement_ok"]
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

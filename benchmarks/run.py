@@ -1,20 +1,25 @@
 """Benchmark harness — one module per paper table/figure + the roofline
-table from the dry-run artifacts. Prints ``name,value,derived`` CSV.
+table from the dry-run artifacts. Prints ``name,value,derived`` CSV;
+``--summary`` additionally writes every row (all suites consolidated)
+as one JSON artifact for CI upload and cross-run diffing.
 
   PYTHONPATH=src python -m benchmarks.run [--only contention,...]
+      [--summary BENCH_summary.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 sys.path.insert(0, "src")
 
 from benchmarks import (bench_chaos, bench_contention,  # noqa: E402
-                        bench_procs, bench_replay, bench_roofline,
-                        bench_scalability, bench_sched, bench_scopes,
-                        bench_shards, bench_traces, bench_tuning)
+                        bench_metrics, bench_procs, bench_replay,
+                        bench_roofline, bench_scalability, bench_sched,
+                        bench_scopes, bench_shards, bench_traces,
+                        bench_tuning)
 
 SUITES = {
     "contention": bench_contention.run,     # §1 motivation + calibration
@@ -28,6 +33,7 @@ SUITES = {
     "scopes": bench_scopes.run,             # multi-tenant scopes
     "procs": bench_procs.run,               # multi-process GIL escape
     "chaos": bench_chaos.run,               # fault-tolerance recovery
+    "metrics": bench_metrics.run,           # live metrics plane
 }
 
 
@@ -35,9 +41,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="also write all rows as one JSON artifact")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
     rows: list = []
+    summary: list = []
     print("name,value,derived")
     for name in names:
         t0 = time.time()
@@ -46,6 +55,11 @@ def main() -> None:
         while rows:
             n, v, d = rows.pop(0)
             print(f"{n},{v},{d}", flush=True)
+            summary.append({"name": n, "value": v, "derived": d,
+                            "suite": name})
+    if args.summary:
+        with open(args.summary, "w") as f:
+            json.dump({"suites": names, "rows": summary}, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -19,10 +19,13 @@ load directly:
 CLI::
 
     python -m repro.analysis.traceview run.trace [-o out.json] [--detect]
+        [--counters metrics.json]
 
 ``--detect`` additionally runs the detrimental-pattern detectors and
 prints their findings to stderr (exit status stays 0 — detection is
-reporting, not a gate).
+reporting, not a gate). ``--counters`` merges the sampled series of a
+saved metrics snapshot (``repro.core.metrics.save_metrics``) as
+Perfetto counter tracks under the task slices.
 """
 from __future__ import annotations
 
@@ -139,10 +142,22 @@ def to_chrome_trace(events: Sequence[TraceEvent],
 
 
 def export(trace_path: str, out_path: Optional[str] = None,
-           detect: bool = False) -> str:
-    """Convert a saved trace file; returns the output path."""
+           detect: bool = False,
+           counters: Optional[str] = None) -> str:
+    """Convert a saved trace file; returns the output path.
+    ``counters=`` merges the sampled series of a saved metrics
+    snapshot (``core.metrics.save_metrics``) as Perfetto counter
+    ("C") tracks on their own pid, under the task slices."""
     events, meta = load_trace(trace_path)
     doc = to_chrome_trace(events, meta.get("time_unit") or "s")
+    if counters:
+        from repro.core.metrics import (counter_track_events,
+                                        load_metrics)
+        snap = load_metrics(counters)
+        series = (snap.get("sampler") or {}).get("series") or {}
+        doc["traceEvents"] += counter_track_events(
+            series, snap.get("time_unit") or meta.get("time_unit")
+            or "s")
     out_path = out_path or trace_path + ".json"
     with open(out_path, "w") as f:
         json.dump(doc, f)
@@ -163,8 +178,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--detect", action="store_true",
                     help="also run the detrimental-pattern detectors "
                          "and print findings to stderr")
+    ap.add_argument("--counters", default=None, metavar="METRICS_JSON",
+                    help="merge a saved metrics snapshot's sampled "
+                         "series as counter tracks")
     args = ap.parse_args(argv)
-    out = export(args.trace, args.out, detect=args.detect)
+    out = export(args.trace, args.out, detect=args.detect,
+                 counters=args.counters)
     print(out)
     return 0
 

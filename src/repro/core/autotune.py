@@ -96,8 +96,18 @@ class DynamicTuner:
         self._trace_seen = 0             # total_appended at last sweep
         if cfg.trace_feedback and getattr(runtime.tracer, "enabled",
                                           False):
-            runtime.dispatcher.register_quiescent(
-                "trace-feedback", self.trace_callback, priority=1)
+            sampler = getattr(runtime, "sampler", None)
+            if sampler is not None and \
+                    getattr(sampler, "detector", None) is not None:
+                # live metrics plane present: the sampler's incremental
+                # detector sweeps the trailing trace window every tick,
+                # so verdicts arrive MID-PHASE (already deduplicated)
+                # instead of only at quiescence — the quiescence hook
+                # would re-detect the same findings, so it stays off
+                sampler.on_findings = self.note_trace_verdicts
+            else:
+                runtime.dispatcher.register_quiescent(
+                    "trace-feedback", self.trace_callback, priority=1)
 
     # -- dispatcher callback --------------------------------------------
     def callback(self, worker_id: int) -> None:

@@ -110,6 +110,18 @@ class CostCharger:
         charged through the ``*_cs`` hooks; this prices only the session
         setup (``SimCosts.combine_us``)."""
 
+    def metric_event(self) -> None:
+        """One live-metrics instrument write (core.metrics): a per-slot
+        counter bump / histogram bucket increment. Free on real threads
+        — the write IS the cost; priced in the simulator so the
+        metrics-overhead gate measures something real."""
+
+    def metric_sample(self) -> None:
+        """One sampler pass (core.metrics.MetricsSampler): the idle
+        thread that took the tick walks every registered probe and
+        appends to the series rings. Amortized — at most one per
+        sampling interval, never on the task hot path."""
+
 
 class VirtualLock:
     """Serializes critical sections in virtual time (FIFO-handover
@@ -258,6 +270,15 @@ class SimCharger(CostCharger):
     # VirtualLock, no pollution flag.
     def trace_event(self) -> None:
         self.now += self.costs.trace_event
+
+    # Live-metrics writes follow the tracing model exactly: per-slot
+    # GIL-atomic stores, so local-time cost only — no VirtualLock, no
+    # pollution flag. Sampling is the rate-limited read-side pass.
+    def metric_event(self) -> None:
+        self.now += self.costs.metric_event
+
+    def metric_sample(self) -> None:
+        self.now += self.costs.metric_sample
 
     # Cross-process ring traffic (modeling backend="processes"): the
     # rings are SPSC, so there is no lock to serialize on — pure

@@ -56,13 +56,15 @@ from ..dispatcher import FunctionalityDispatcher
 from ..engine import make_policy
 from ..engine.replay import RECORDING, REPLAYING
 from ..errors import RingCorruption, TaskFailed, WorkerLost
+from ..metrics import (NULL_METRICS, MetricsSampler, ShmCounterPlane,
+                       WorkerCounterView)
 from ..messages import (DONE_ERROR, DONE_NO_RESULT, DONE_OK,
                         DONE_PLANE_ERROR, decode_done_batch,
                         decode_submit_batch, encode_done_batch)
 from ..trace import (EV_CREATED, EV_END, EV_READY, EV_RESPAWN, EV_RETRY,
                      EV_START, EV_TIMEOUT_KILL, EV_TRACE_LOST,
-                     EV_WORKER_LOST, NULL_TRACER, TraceRecorder,
-                     replay_iterations_of)
+                     EV_WORKER_LOST, NULL_TRACER, IncrementalDetector,
+                     TraceRecorder, replay_iterations_of)
 from ..wd import TaskState, WorkDescriptor
 from . import serial
 from .chaos import FaultPlan
@@ -268,7 +270,7 @@ class _PlaneView:
 
 def _run_plane(desc: dict, planes: Dict[str, _PlaneView], lock,
                done_ring: ShmRing, clock, slot: int,
-               stalls, stall_counts) -> None:
+               stalls, stall_counts, counters=None) -> None:
     view = planes.get(desc["arrays"])
     if view is None:
         view = planes[desc["arrays"]] = _PlaneView(desc)
@@ -295,6 +297,8 @@ def _run_plane(desc: dict, planes: Dict[str, _PlaneView], lock,
         func, args, label = view.task(sid)
         if stalls:
             _maybe_stall(stalls, stall_counts, label)
+        if counters is not None:
+            counters.task_start()
         t0 = clock()
         try:
             func(*args)
@@ -303,6 +307,8 @@ def _run_plane(desc: dict, planes: Dict[str, _PlaneView], lock,
                 sid, t0, clock(), DONE_PLANE_ERROR,
                 traceback.format_exc().encode("utf-8")))
         t1 = clock()
+        if counters is not None:
+            counters.task_end(t1 - t0)
         dbls[view.times_i + 2 * sid] = t0
         dbls[view.times_i + 2 * sid + 1] = t1
         with lock:
@@ -336,7 +342,8 @@ def _maybe_stall(stalls, counts: Dict[int, int], label: str) -> None:
 def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
                  exec_fbq, done_fbq, plane_lock, epoch: float,
                  parent_pid: int, stalls=(),
-                 ignore_sigterm: bool = False) -> None:
+                 ignore_sigterm: bool = False,
+                 counters_name: str = "") -> None:
     if ignore_sigterm:                   # chaos: force the kill path
         signal.signal(signal.SIGTERM, signal.SIG_IGN)
     exec_ring = ShmRing.attach(exec_name, fallback=exec_fbq)
@@ -344,6 +351,11 @@ def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
     # the Done ring's consumer is the parent's reaper thread: keep
     # pushing while the parent process lives
     done_ring.consumer_alive = lambda: os.getppid() == parent_pid
+    # live-metrics counter plane (metrics=True): this worker stamps its
+    # own row of the parent's shm matrix — single-writer f64 stores, so
+    # the parent scrapes task/busy counters with ZERO extra IPC frames
+    counters = WorkerCounterView(counters_name, widx) \
+        if counters_name else None
     planes: Dict[str, _PlaneView] = {}
     stall_counts: Dict[int, int] = {}
 
@@ -377,6 +389,8 @@ def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
                 for wd_id, payload, label in entries:
                     if stalls:
                         _maybe_stall(stalls, stall_counts, label)
+                    if counters is not None:
+                        counters.task_start()
                     t0 = clock()
                     status, blob = DONE_OK, b""
                     try:
@@ -391,6 +405,8 @@ def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
                         status = DONE_ERROR
                         blob = traceback.format_exc().encode("utf-8")
                     t1 = clock()
+                    if counters is not None:
+                        counters.task_end(t1 - t0)
                     dones.append((wd_id, t0, t1, status, blob))
                 done_ring.push(bytes([K_DONE]) + encode_done_batch(dones))
             elif kind == K_CTRL:
@@ -399,10 +415,13 @@ def _worker_main(widx: int, slot: int, exec_name: str, done_name: str,
                     return
                 if op == OP_ITER:
                     _run_plane(body, planes, plane_lock, done_ring,
-                               clock, slot, stalls, stall_counts)
+                               clock, slot, stalls, stall_counts,
+                               counters)
     finally:
         for view in planes.values():
             view.close()
+        if counters is not None:
+            counters.close()
         exec_ring.close()
         done_ring.close()
 
@@ -581,7 +600,9 @@ class ProcessRuntime:
                  trace_capacity: int = 1 << 14,
                  fault_plan: Optional[FaultPlan] = None,
                  max_respawns: int = 16,
-                 shutdown_grace: float = 5.0) -> None:
+                 shutdown_grace: float = 5.0,
+                 metrics: bool = False,
+                 metrics_interval_s: float = 0.002) -> None:
         if backend != "processes":
             raise ValueError("ProcessRuntime is the backend='processes' "
                              "driver")
@@ -686,6 +707,43 @@ class ProcessRuntime:
         self._image_graphs: Dict[int, Any] = {}    # keep graphs alive
         self._plane_lock = None
         self._ctx = None
+        # -- live metrics plane ----------------------------------------
+        # The parent holds no per-task instruments (workers execute the
+        # bodies); the shm counter plane IS the process backend's
+        # instrument layer. The sampler rides the reaper loop + the
+        # dispatcher's quiescence hook — never a task hot path.
+        self.metrics_enabled = metrics
+        self.instruments = NULL_METRICS
+        self._counter_plane: Optional[ShmCounterPlane] = None
+        self._plane_final: Optional[dict] = None
+        self.sampler: Optional[MetricsSampler] = None
+        if metrics:
+            det = IncrementalDetector() if trace else None
+            sampler = MetricsSampler(
+                clock=lambda: time.perf_counter() - self._trace_t0,
+                interval=metrics_interval_s,
+                tracer=self.tracer if trace else None,
+                detector=det)
+            sampler.add_probe(
+                "inflight", lambda: len(self._dispatch.inflight))
+            sampler.add_probe("pending_msgs", self.policy.pending)
+            sampler.add_probe(
+                "ipc_submit_msgs",
+                lambda: sum(self._dispatch.sub_msgs))
+            sampler.add_probe("ipc_done_msgs", lambda: self.done_msgs)
+            # plane probes return None until start() creates the plane
+            sampler.add_probe(
+                "busy_workers",
+                lambda: (self._counter_plane.busy_count()
+                         if self._counter_plane is not None else None))
+            sampler.add_probe(
+                "plane",
+                lambda: (self._counter_plane.totals()
+                         if self._counter_plane is not None else None))
+            self.dispatcher.register_quiescent(
+                "metrics-sampler", sampler.quiescent_callback,
+                priority=2)
+            self.sampler = sampler
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -711,6 +769,9 @@ class ProcessRuntime:
         # plane recovery replaces it (the dead worker may have held it)
         self._plane_lock = self._ctx.Lock()
         self._parent_pid = os.getpid()
+        if self.metrics_enabled:
+            self._counter_plane = ShmCounterPlane(self.num_workers)
+            self._shm_created.add(self._counter_plane.name)
         for i in range(self.num_workers):
             p, exec_ring, done_ring = self._spawn_worker(i)
             self._exec_rings.append(exec_ring)
@@ -742,7 +803,9 @@ class ProcessRuntime:
                   exec_fbq, done_fbq, self._plane_lock, self._trace_t0,
                   self._parent_pid,
                   plan.worker_stalls() if plan is not None else (),
-                  plan.ignore_sigterm if plan is not None else False),
+                  plan.ignore_sigterm if plan is not None else False,
+                  self._counter_plane.name
+                  if self._counter_plane is not None else ""),
             name=f"procworker-{widx}", daemon=True)
         p.start()
         # a full exec ring + live worker means a slow consumer (long
@@ -831,6 +894,12 @@ class ProcessRuntime:
             ring.unlink()
         for img in self._images.values():
             img.close_unlink()
+        if self._counter_plane is not None:
+            # final scrape before the segment dies: _aggregate_stats
+            # runs after teardown, so metrics() serves this snapshot
+            self._plane_final = self._counter_plane.snapshot()
+            self._counter_plane.close_unlink()
+            self._counter_plane = None
         for q in self._fbqs:
             try:
                 q.close()
@@ -882,6 +951,8 @@ class ProcessRuntime:
             self.stats.replayed_tasks = rep["replayed_tasks"]
             self.stats.replay_invalidations = rep["invalidations"]
             self.stats.replay_cache_hits = rep["cache_hits"]
+        if self.metrics_enabled:
+            self.stats.metrics = self.metrics()
 
     def shm_names(self) -> List[str]:
         """Every shared-memory segment this runtime owns (rings + replay
@@ -889,7 +960,32 @@ class ProcessRuntime:
         names = [r.name for r in self._exec_rings + self._done_rings]
         for img in self._images.values():
             names += img.shm_names()
+        if self._counter_plane is not None:
+            names.append(self._counter_plane.name)
         return names
+
+    def metrics(self) -> Dict[str, Any]:
+        """Live metrics snapshot: the shm counter plane scraped in
+        place (zero IPC frames), parent-side gauges, and the sampler's
+        series rings. Callable while a run is in flight; after teardown
+        it serves the final pre-unlink scrape."""
+        plane = (self._counter_plane.snapshot()
+                 if self._counter_plane is not None
+                 else self._plane_final)
+        out: Dict[str, Any] = {
+            "time_unit": "s",
+            "backend": "processes",
+            "workers": plane or {},
+            "gauges": {
+                "inflight": len(self._dispatch.inflight),
+                "pending_msgs": self.policy.pending(),
+                "ipc_submit_msgs": sum(self._dispatch.sub_msgs),
+                "ipc_done_msgs": self.done_msgs,
+            },
+        }
+        if self.sampler is not None:
+            out["sampler"] = self.sampler.snapshot()
+        return out
 
     # ------------------------------------------------------------------
     # task API
@@ -1290,6 +1386,10 @@ class ProcessRuntime:
             if pol.uses_idle_managers:
                 n += pol.callback(0)
             self._check_workers()
+            # the reaper never reaches the dispatcher's notify_idle
+            # path, so it ticks the sampler directly between polls
+            if self.sampler is not None:
+                self.sampler.tick()
             if not n:
                 time.sleep(2e-5)
 

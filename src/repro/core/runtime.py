@@ -64,12 +64,13 @@ from .ddast import DDASTParams
 from .dispatcher import FunctionalityDispatcher
 from .engine import make_placement, make_policy, mode_uses_shards
 from .errors import ScopeExpired, TaskFailed
+from .metrics import NULL_METRICS, MetricsHub, MetricsSampler
 from .queues import InstrumentedLock
 from .scopes import (FairAdmission, JobScope, ScopedPolicy, scope_rollup,
                      scoped_deps)
 from .trace import (EV_CREATED, EV_END, EV_RETRY, EV_SCOPE_EXPIRED,
-                    EV_START, NULL_TRACER, TraceEvent, TraceRecorder,
-                    replay_iterations_of)
+                    EV_START, IncrementalDetector, NULL_TRACER,
+                    TraceEvent, TraceRecorder, replay_iterations_of)
 from .wd import DepMode, TaskState, WorkDescriptor
 
 _MODES = ("sync", "dast", "ddast", "sharded")
@@ -151,6 +152,10 @@ class RuntimeStats:
     zombie_workers: int = 0
     leaked_shm: List[str] = field(default_factory=list)
     scopes_expired: int = 0
+    # Final live-metrics snapshot (core.metrics; empty unless
+    # metrics=True): the same structure rt.metrics() serves mid-run —
+    # per-slot counters, latency histogram, sampled series, scope SLO.
+    metrics: Dict[str, object] = field(default_factory=dict)
 
 
 # Backward-compatible alias: the lock lives in queues.py so every layer
@@ -187,7 +192,9 @@ class TaskRuntime:
                  replay: bool = False,
                  num_clients: int = 0,
                  delegation: bool = True, *,
-                 backend: str = "threads") -> None:
+                 backend: str = "threads",
+                 metrics: bool = False,
+                 metrics_interval_s: float = 0.002) -> None:
         # keyword-only on purpose: __new__ dispatches on the *keyword*
         # backend, so a positional value would silently select the
         # threaded driver — make that a TypeError instead
@@ -248,6 +255,27 @@ class TaskRuntime:
         if self.policy.uses_idle_managers:
             self.dispatcher.register("policy", self.policy.callback,
                                      priority=10)
+        # live metrics plane (core.metrics): per-slot instruments on
+        # the task path, sampler as ONE MORE idle/quiescent callback —
+        # per DDAST discipline, idle threads take the samples
+        self.metrics_enabled = metrics
+        self.instruments = MetricsHub(
+            num_slots,
+            clock=lambda: time.perf_counter() - self._trace_t0,
+            time_unit="s") if metrics else NULL_METRICS
+        self.sampler: Optional[MetricsSampler] = None
+        if metrics:
+            self.sampler = MetricsSampler(
+                clock=lambda: time.perf_counter() - self._trace_t0,
+                interval=metrics_interval_s,
+                tracer=self.tracer if trace else None,
+                detector=IncrementalDetector() if trace else None)
+            self._register_probes()
+            self.dispatcher.register("metrics-sampler",
+                                     self.sampler.callback, priority=1)
+            self.dispatcher.register_quiescent(
+                "metrics-sampler", self.sampler.quiescent_callback,
+                priority=2)
 
         self._root = WorkDescriptor(func=None, label="main")
         self._root.state = TaskState.RUNNING
@@ -374,13 +402,15 @@ class TaskRuntime:
                      "iterations": sc.iterations,
                      "wall_s": sc.wall_s}
             entry.update(scope_rollup(self.placement, self.policy,
-                                      sc.scope_id))
+                                      sc.scope_id, scope=sc))
             if sc._expired_reason is not None:
                 entry["expired"] = sc._expired_reason
                 entry["budget_used_s"] = sc._budget_used
             self.stats.scopes[sc.name] = entry
         self.stats.task_retries += self._retry_count
         self.stats.tasks_poisoned += self._poisoned_count
+        if self.metrics_enabled:
+            self.stats.metrics = self.metrics()
         if err is not None:
             raise err
 
@@ -400,6 +430,83 @@ class TaskRuntime:
             self.stats.trace.append((time.perf_counter() - self._trace_t0,
                                      self.in_graph_count(),
                                      self.ready_count()))
+
+    # ------------------------------------------------------------------
+    # live metrics plane (core.metrics)
+    def _register_probes(self) -> None:
+        """Wire the sampler's derived series to read-only runtime
+        probes. Every probe is lock-free (plain len()/int reads), so a
+        sampling pass never contends with the task path."""
+        s = self.sampler
+        pl = self.placement
+        hub = self.instruments
+        W = self.num_workers
+
+        def ready_depth():
+            return {str(i): len(d) for i, d in enumerate(pl.deques)}
+
+        s.add_probe("ready", pl.ready_count)
+        s.add_probe("ready_depth", ready_depth)
+        s.add_probe("pending_msgs", self.policy.pending)
+        s.add_probe("in_graph", self.policy.in_graph)
+        s.add_probe("busy_frac", lambda: hub.busy_fraction(W))
+        if isinstance(pl, FairAdmission):
+            s.add_probe("admission_backlog", pl.admission_backlog)
+            s.add_probe("admission_waits", pl.admission_waits_total)
+            s.add_probe("scope_inflight",
+                        lambda: {str(k): v
+                                 for k, v in pl.scope_inflight().items()})
+        router = getattr(self.policy, "router", None) \
+            or getattr(getattr(self.policy, "inner", None), "router", None)
+        if router is not None:
+            s.add_probe("delegated_portions",
+                        lambda: router.delegated_portions)
+            s.add_probe("combined_drains", lambda: router.combined_drains)
+
+    def metrics(self) -> Dict[str, object]:
+        """Structured live snapshot: instrument counters + latency
+        histogram, point-in-time gauges, per-scope inflight/admission/
+        SLO entries, and the sampler's time-series rings. Callable at
+        any time — including while a run is in flight — and frozen into
+        ``stats.metrics`` at shutdown."""
+        snap: Dict[str, object] = dict(self.instruments.snapshot()) \
+            if self.metrics_enabled else {"time_unit": "s"}
+        pl = self.placement
+        gauges: Dict[str, object] = {
+            "ready": pl.ready_count(),
+            "pending_msgs": self.policy.pending(),
+            "in_graph": self.policy.in_graph(),
+        }
+        if self.metrics_enabled:
+            gauges["busy_frac"] = \
+                self.instruments.busy_fraction(self.num_workers)
+        if isinstance(pl, FairAdmission):
+            gauges["admission_backlog"] = pl.admission_backlog()
+            gauges["admission_waits"] = pl.admission_waits_total()
+        snap["gauges"] = gauges
+        if self._scopes:
+            inflight = pl.scope_inflight() \
+                if isinstance(pl, FairAdmission) else {}
+            entries: Dict[str, object] = {}
+            for sc in self._scopes:
+                e: Dict[str, object] = {
+                    "inflight": inflight.get(sc.scope_id, 0),
+                    "tasks_alive": sc.root.num_children_alive,
+                }
+                adm = getattr(pl, "scope_admission", None)
+                if callable(adm):
+                    try:
+                        e["admission"] = adm(sc.scope_id)
+                    except KeyError:    # pragma: no cover - defensive
+                        pass
+                slo = sc.slo_snapshot()
+                if slo is not None:
+                    e["slo"] = slo
+                entries[sc.name] = e
+            snap["scopes"] = entries
+        if self.sampler is not None:
+            snap["sampler"] = self.sampler.snapshot()
+        return snap
 
     # ------------------------------------------------------------------
     # public task API
@@ -635,6 +742,9 @@ class TaskRuntime:
         _tls.current, _tls.worker_id = wd, worker_id
         wd.mark_running()
         tr = self.tracer
+        m = self.instruments
+        if m.enabled:
+            m.task_start(worker_id)
         if tr.enabled:
             tr.task_event(EV_START, wd, worker_id)
         t0 = time.perf_counter()
@@ -676,7 +786,9 @@ class TaskRuntime:
             wd.exec_dur = time.perf_counter() - t0
             wd.mark_finished()
             _tls.current, _tls.worker_id = prev_task, prev_wid
-        self._charge_scope(wd)
+        if m.enabled:
+            m.task_end(worker_id, wd.exec_dur)
+        self._charge_scope(wd, worker_id)
         if tr.enabled:
             # end BEFORE complete(): successors' ready events must sort
             # after their predecessor's end
@@ -687,10 +799,10 @@ class TaskRuntime:
         self.policy.complete(wd, worker_id)
         self._sample_trace()
 
-    def _charge_scope(self, wd: WorkDescriptor) -> None:
+    def _charge_scope(self, wd: WorkDescriptor, slot: int = -1) -> None:
         """Charge a finished body against its scope's execution-time
-        budget and fire the expiry transition the first time the scope
-        is seen expired."""
+        budget, record its SLO outcome (deadline scopes), and fire the
+        expiry transition the first time the scope is seen expired."""
         if wd.scope is None:
             return
         sc = self._scope_by_id.get(wd.scope)
@@ -698,6 +810,10 @@ class TaskRuntime:
             return
         if not wd.cancelled:
             sc._budget_used += wd.exec_dur
+        if sc.deadline is not None:
+            sc.note_completion(slot,
+                               time.perf_counter() - sc.opened_s,
+                               cancelled=wd.cancelled)
         if sc.is_expired():
             self._note_expiry(sc)
 

@@ -301,3 +301,16 @@ class FairAdmission(PlacementPolicy):
         for r in self._ring_list:
             n += len(r.ring)
         return n
+
+    # -- live-metrics probes (read-only, lock-free, approximate under
+    # -- concurrency by the same argument as the bookkeeping counters) --
+    def admission_backlog(self) -> int:
+        """Tasks waiting in scope rings, not yet granted a window slot."""
+        return sum(len(r.ring) for r in self._ring_list)
+
+    def admission_waits_total(self) -> int:
+        return sum(r.admission_waits for r in self._ring_list)
+
+    def scope_inflight(self) -> Dict[int, int]:
+        """Per-scope window occupancy (admitted, not yet popped)."""
+        return {r.scope_id: r.inflight.value for r in self._ring_list}

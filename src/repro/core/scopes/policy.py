@@ -38,11 +38,13 @@ from ..shards.steal_deque import AtomicCounter
 from ..wd import WorkDescriptor
 
 
-def scope_rollup(placement, policy, scope_id: int) -> Dict[str, object]:
+def scope_rollup(placement, policy, scope_id: int,
+                 scope=None) -> Dict[str, object]:
     """One scope's per-tenant stats entry, shared by both drivers (the
     threaded RuntimeStats.scopes and the simulator SimResult.scopes):
     admission counters from the FairAdmission ring plus the scope's
-    replay-slot counters."""
+    replay-slot counters — and, when the :class:`JobScope` itself is
+    passed and carries a deadline, its SLO attainment snapshot."""
     entry: Dict[str, object] = dict(placement.scope_admission(scope_id))
     steals = getattr(placement, "scope_steals", {}).get(scope_id)
     entry["steals"] = steals.value if steals is not None else 0
@@ -54,6 +56,10 @@ def scope_rollup(placement, policy, scope_id: int) -> Dict[str, object]:
     # quanta / sharded combiner buckets); 0 for policies without one
     share = getattr(policy, "scope_drain_share", None)
     entry["drained_portions"] = share(scope_id) if callable(share) else 0
+    if scope is not None:
+        slo = scope.slo_snapshot()
+        if slo is not None:
+            entry["slo"] = slo
     return entry
 
 

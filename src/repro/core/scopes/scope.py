@@ -15,6 +15,7 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
+from ..metrics import LogHistogram
 from ..wd import TaskState, WorkDescriptor
 
 
@@ -98,6 +99,57 @@ class JobScope:
         # the owning client thread's submit slot, when one was
         # allocated for it (recycled at close — see runtime)
         self._client_slot: Optional[int] = None
+        # -- SLO accounting (deadline scopes only) ----------------------
+        # Per-slot met/missed counters + slack histograms, written by
+        # whichever worker finishes the task (single writer per slot —
+        # GIL-atomic, exact, zero locks), merged at slo_snapshot() read
+        # time. Built eagerly at open so there is no first-write race;
+        # slots allocated later (on-demand client slots) clamp to the
+        # trailing overflow slot.
+        self._slo_met: Optional[list] = None
+        self._slo_missed: Optional[list] = None
+        self._slo_slack: Optional[list] = None
+        if deadline is not None:
+            n = (getattr(runtime, "num_workers", 0) + 1
+                 + getattr(runtime, "num_clients", 0) + 1)  # +1 overflow
+            self._slo_met = [0] * n
+            self._slo_missed = [0] * n
+            self._slo_slack = [LogHistogram(1e-6) for _ in range(n)]
+
+    # -- SLO attainment -------------------------------------------------
+    def note_completion(self, slot: int, elapsed_s: float,
+                        cancelled: bool = False) -> None:
+        """Record one task outcome against the scope deadline. Called
+        by the finishing worker with ``elapsed_s`` = seconds since the
+        scope opened; ``cancelled`` marks tasks drained unrun after
+        expiry (always a miss, no slack sample — they never executed)."""
+        if self.deadline is None:
+            return
+        n = len(self._slo_met)
+        s = slot if 0 <= slot < n - 1 else n - 1
+        slack = self.deadline - elapsed_s
+        if cancelled or slack < 0:
+            self._slo_missed[s] += 1
+        else:
+            self._slo_met[s] += 1
+        if not cancelled:
+            self._slo_slack[s].record(max(slack, 0.0))
+
+    def slo_snapshot(self) -> Optional[dict]:
+        """Aggregated SLO view, or ``None`` for deadline-less scopes:
+        met/missed totals, attainment fraction, and the merged deadline-
+        slack histogram (seconds of headroom at completion; late
+        finishes land in the zero bucket)."""
+        if self.deadline is None:
+            return None
+        met = sum(self._slo_met)
+        missed = sum(self._slo_missed)
+        total = met + missed
+        return {"deadline_s": self.deadline,
+                "met": met, "missed": missed,
+                "attainment": (met / total) if total else None,
+                "slack": LogHistogram.merge_all(
+                    list(self._slo_slack)).snapshot()}
 
     def is_expired(self) -> bool:
         """True once the scope's wall deadline or execution budget ran

@@ -54,6 +54,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from .ddast import DDASTParams
 from .engine import (SimCharger, make_placement, make_policy,
                      mode_needs_manager_thread, mode_uses_shards)
+from .metrics import NULL_METRICS, MetricsHub, MetricsSampler
 from .scopes import (FairAdmission, ScopedPolicy, scope_rollup,
                      scoped_deps)
 from .trace import (EV_CREATED, EV_END, EV_START, NULL_TRACER,
@@ -127,6 +128,13 @@ class SimCosts:
     # --calibrate`` (delegate row = publish+trylock on a held lock).
     delegate_us: float = 0.18    # request-list append + failed trylock
     combine_us: float = 0.30     # per combine session (staging/rotation)
+    # Live metrics plane (core.metrics, metrics=True only): one per-slot
+    # instrument write (counter bump / histogram bucket increment) per
+    # task start and per task end, and one sampler pass (probe walk +
+    # series appends) per sampling interval. Priced so the
+    # metrics-overhead gate in bench_metrics.py measures a real cost.
+    metric_event: float = 0.02   # per-slot counter/histogram write
+    metric_sample: float = 0.8   # one probe-walk sampling pass
 
 
 @dataclass
@@ -172,6 +180,10 @@ class SimResult:
     # quantities appear here — lock/message counters are runtime-wide
     # (compare iterations=1 vs iterations=n runs to bound replay cost).
     scopes: Dict[str, dict] = field(default_factory=dict)
+    # Live-metrics snapshot (core.metrics; empty unless metrics=True):
+    # per-slot counters, virtual-µs latency histogram, sampled series —
+    # the same structure RuntimeStats.metrics carries on real threads.
+    metrics: Dict[str, object] = field(default_factory=dict)
 
     @property
     def speedup(self) -> float:
@@ -223,7 +235,9 @@ class RuntimeSimulator:
                  batch_size: Optional[int] = None,
                  placement: Any = "round_robin",
                  replay: bool = False,
-                 delegation: bool = True) -> None:
+                 delegation: bool = True,
+                 metrics: bool = False,
+                 metrics_interval_us: float = 200.0) -> None:
         # mode validation lives in the policy registry (raises on an
         # unknown mode) — the driver itself stays free of mode branching
         if mode_needs_manager_thread(mode) and num_cores < 2:
@@ -245,6 +259,8 @@ class RuntimeSimulator:
         self.placement_kind = placement
         self.replay = replay
         self.delegation = delegation
+        self.metrics_enabled = metrics
+        self.metrics_interval_us = metrics_interval_us
 
     # -- public ---------------------------------------------------------
     def run(self, specs: List[SimTaskSpec],
@@ -261,7 +277,9 @@ class RuntimeSimulator:
         policy = self._make_policy(placement, charge, replay=self.replay,
                                    tracer=tracer)
         prog = _SimProgram(None, "main", list(specs), iterations)
-        return self._drive([prog], charge, placement, policy, tracer)
+        hub, sampler = self._make_metrics(charge, placement, policy)
+        return self._drive([prog], charge, placement, policy, tracer,
+                           hub=hub, sampler=sampler)
 
     def run_scopes(self, scope_specs: Sequence[List[SimTaskSpec]],
                    weights: Optional[Sequence[float]] = None,
@@ -312,7 +330,9 @@ class RuntimeSimulator:
             programs.append(_SimProgram(sid, names[i],
                                         list(scope_specs[i]), iterations,
                                         weight=weights[i]))
-        return self._drive(programs, charge, placement, policy, tracer)
+        hub, sampler = self._make_metrics(charge, placement, policy)
+        return self._drive(programs, charge, placement, policy, tracer,
+                           hub=hub, sampler=sampler)
 
     def _make_charge(self) -> SimCharger:
         """Wait-free shard-lock accounting only applies where shard
@@ -330,6 +350,38 @@ class RuntimeSimulator:
             return NULL_TRACER
         return TraceRecorder(self.P, clock=lambda: charge.now,
                              charge=charge, time_unit="us")
+
+    def _make_metrics(self, charge: SimCharger, placement, policy):
+        """Virtual-time metrics plane: the hub prices every instrument
+        write through ``SimCharger.metric_event()`` and the sampler
+        prices each pass through ``metric_sample()`` — same honesty
+        contract as :meth:`_make_tracer`, so the overhead gate in
+        bench_metrics.py measures a real cost."""
+        if not self.metrics_enabled:
+            return NULL_METRICS, None
+        hub = MetricsHub(self.P, clock=lambda: charge.now,
+                         charge=charge, time_unit="us")
+        sampler = MetricsSampler(clock=lambda: charge.now,
+                                 interval=self.metrics_interval_us,
+                                 charge=charge)
+        sampler.add_probe("ready", placement.ready_count)
+        sampler.add_probe(
+            "ready_depth",
+            lambda: {str(i): len(d)
+                     for i, d in enumerate(placement.deques)})
+        sampler.add_probe("pending_msgs", policy.pending)
+        sampler.add_probe("in_graph", policy.in_graph)
+        sampler.add_probe("busy_frac", lambda: hub.busy_fraction(self.P))
+        if isinstance(placement, FairAdmission):
+            sampler.add_probe("admission_backlog",
+                              placement.admission_backlog)
+            sampler.add_probe("admission_waits",
+                              placement.admission_waits_total)
+            sampler.add_probe(
+                "scope_inflight",
+                lambda: {str(k): v
+                         for k, v in placement.scope_inflight().items()})
+        return hub, sampler
 
     def _make_placement(self):
         return make_placement(
@@ -354,7 +406,8 @@ class RuntimeSimulator:
 
     # -- the event loop (shared by run and run_scopes) ------------------
     def _drive(self, programs: List["_SimProgram"], charge: SimCharger,
-               placement, policy, tracer=NULL_TRACER) -> SimResult:
+               placement, policy, tracer=NULL_TRACER,
+               hub=NULL_METRICS, sampler=None) -> SimResult:
         P, costs = self.P, self.costs
         mgr_core = P - 1 if policy.needs_manager_thread else -1
 
@@ -434,6 +487,10 @@ class RuntimeSimulator:
                                     policy, prog.scope_id)})
             prog.marks.append((t, charge.lock_acquisitions(),
                                policy.stats()["messages_processed"]))
+            if sampler is not None:
+                # quiescence edge: always sample (the same boundary the
+                # threaded sampler's quiescent_callback rides)
+                sampler.tick(force=True)
             prog.epoch += 1
             if prog.epoch < prog.iterations:
                 progs[core].append([list(prog.specs), 0, None])
@@ -459,6 +516,8 @@ class RuntimeSimulator:
                                  if core in charge.polluted else 1.0)
             charge.polluted.discard(core)
             wd.mark_running()
+            if hub.enabled:
+                hub.task_start(core)
             if tracer.enabled:
                 tracer.task_event(EV_START, wd, core)
             exec_order.append(wd.label)
@@ -523,6 +582,8 @@ class RuntimeSimulator:
                     if parent is not None:  # nested parent completes
                         policy.notify_quiescent(False)
                         parent.mark_finished()
+                        if hub.enabled:
+                            hub.task_end(core, parent.duration)
                         if tracer.enabled:
                             tracer.task_event(EV_END, parent, core)
                         placement.note_executed(parent, core)
@@ -536,9 +597,12 @@ class RuntimeSimulator:
                 # blocked in taskwait: fall through and work
             if run_worker(core):
                 return
-            # idle: offer cycles to the policy (Listing 2) or sleep
+            # idle: offer cycles to the policy (Listing 2), take a
+            # metrics sample (the DDAST idle-thread discipline), or sleep
             n = policy.idle_callback(core) \
                 if policy.uses_idle_managers else 0
+            if sampler is not None and sampler.tick():
+                n += 1
             if n or charge.now > t:
                 sample(charge.now)
                 wake_all(charge.now)
@@ -556,6 +620,8 @@ class RuntimeSimulator:
             if kind == "fin":
                 charge.begin(core, t)
                 wd.mark_finished()
+                if hub.enabled:
+                    hub.task_end(core, wd.duration)
                 if tracer.enabled:
                     tracer.task_event(EV_END, wd, core)
                 placement.note_executed(wd, core)
@@ -601,6 +667,16 @@ class RuntimeSimulator:
                 entry.update(scope_rollup(placement, policy,
                                           prog.scope_id))
                 scopes[prog.name] = entry
+        metrics_snap: Dict[str, object] = {}
+        if hub.enabled:
+            metrics_snap = dict(hub.snapshot())
+            metrics_snap["gauges"] = {
+                "ready": placement.ready_count(),
+                "pending_msgs": policy.pending(),
+                "in_graph": policy.in_graph(),
+            }
+            if sampler is not None:
+                metrics_snap["sampler"] = sampler.snapshot()
         return SimResult(
             makespan_us=max(makespan[0], charge.max_free_at()),
             serial_us=serial_us,
@@ -624,4 +700,5 @@ class RuntimeSimulator:
             iter_lock_acq=iter_la,
             iter_messages=iter_msg,
             scopes=scopes,
+            metrics=metrics_snap,
         )

@@ -7,9 +7,9 @@ inversion, affinity misses) that feed the ``DynamicTuner`` via its
 quiescence hook and the ``repro.analysis.traceview`` exporter.
 """
 from .detect import (AFFINITY_MISS, INVERSION, STARVATION, Finding,
-                     detect_affinity_misses, detect_all,
-                     detect_priority_inversion, detect_starvation,
-                     replay_windows)
+                     IncrementalDetector, detect_affinity_misses,
+                     detect_all, detect_priority_inversion,
+                     detect_starvation, replay_windows)
 from .recorder import (EV_ADMIT_DEFER, EV_COMBINE, EV_CREATED,
                        EV_DELEGATE, EV_DEPS, EV_END, EV_MSG_DRAIN,
                        EV_MSG_ENQ, EV_QUIESCE, EV_READY, EV_RESPAWN,
@@ -27,7 +27,7 @@ __all__ = [
     "EV_STEAL", "EV_ADMIT_DEFER", "EV_QUIESCE",
     "EV_WORKER_LOST", "EV_RESPAWN", "EV_RETRY", "EV_TIMEOUT_KILL",
     "EV_SCOPE_EXPIRED", "EV_TRACE_LOST", "FAULT_EVENTS",
-    "Finding", "detect_all", "detect_starvation",
+    "Finding", "IncrementalDetector", "detect_all", "detect_starvation",
     "detect_priority_inversion", "detect_affinity_misses",
     "replay_windows", "STARVATION", "INVERSION", "AFFINITY_MISS",
 ]

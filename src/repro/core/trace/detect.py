@@ -315,3 +315,39 @@ def detect_all(events: Sequence[TraceEvent], **kw) -> List[Finding]:
     out += detect_priority_inversion(events, **sub("inversion_"))
     out += detect_affinity_misses(events, **sub("affinity_"))
     return out
+
+
+# ---------------------------------------------------------------------
+class IncrementalDetector:
+    """Stateful wrapper driving the batch detectors over a *live*
+    window mid-run (the metrics sampler calls :meth:`sweep` each tick)
+    instead of once over the final timeline.
+
+    Each sweep runs ``detect_all`` on the trailing ``window`` events
+    and reports only findings not yet seen — dedup keys on
+    ``(kind, t0, slot)``, which is stable because every detector stamps
+    ``t0`` from event times, not wall clock.  When the full timeline
+    fits inside the window, the union of sweep results equals a single
+    post-hoc ``detect_all`` pass (the agreement property
+    ``bench_metrics`` gates in CI); a longer run degrades gracefully to
+    phase-local findings, which is exactly what the live consumer
+    (``DynamicTuner``) wants.
+    """
+
+    def __init__(self, window: int = 4096, **kw) -> None:
+        self.window = window
+        self.kw = kw
+        self._seen: set = set()
+        self.findings: List[Finding] = []
+
+    def sweep(self, events: Sequence[TraceEvent]) -> List[Finding]:
+        """Detect over the trailing window; return only NEW findings."""
+        evs = events[-self.window:] if len(events) > self.window else events
+        fresh: List[Finding] = []
+        for f in detect_all(evs, **self.kw):
+            key = (f.kind, round(f.t0, 9), f.slot)
+            if key not in self._seen:
+                self._seen.add(key)
+                fresh.append(f)
+                self.findings.append(f)
+        return fresh

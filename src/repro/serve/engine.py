@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ddast import DDASTParams
+from ..core.metrics import LogHistogram, prometheus_text
 from ..core.queues import WorkerQueues
 from ..core.sched import DagNode, bottom_levels, build_arrays
 from ..models.registry import ModelAPI
@@ -48,6 +49,9 @@ class Request:
     # stamped by the owning engine at submit time (per-engine counter —
     # a module-global here would leak numbering across engines/tests)
     req_id: Optional[int] = None
+    # stamped at submit: which client queue carried this request (the
+    # per-tenant latency histogram's key; -1 = never submitted)
+    client_id: int = -1
     output: List[int] = field(default_factory=list)
     done_event: threading.Event = field(default_factory=threading.Event)
     admitted_step: int = -1
@@ -72,6 +76,8 @@ class ServeEngine:
                  runtime: Any = None,
                  client_weights: Optional[Sequence[float]] = None,
                  client_max_inflight: Optional[Sequence[Optional[int]]]
+                 = None,
+                 client_deadlines: Optional[Sequence[Optional[float]]]
                  = None):
         self.model = model
         self.params = params
@@ -92,12 +98,22 @@ class ServeEngine:
             caps = (list(client_max_inflight)
                     if client_max_inflight is not None
                     else [None] * num_clients)
-            if len(ws) != num_clients or len(caps) != num_clients:
-                raise ValueError("client_weights/client_max_inflight "
-                                 "must have num_clients entries")
+            dls = (list(client_deadlines)
+                   if client_deadlines is not None
+                   else [None] * num_clients)
+            if len(ws) != num_clients or len(caps) != num_clients \
+                    or len(dls) != num_clients:
+                raise ValueError("client_weights/client_max_inflight/"
+                                 "client_deadlines must have "
+                                 "num_clients entries")
             for c in range(num_clients):
+                # deadline= makes the client scope an SLO tenant: the
+                # scope records per-task met/missed + slack (exported
+                # by metrics_snapshot), and hard-expires past the wall
+                # deadline — tenant SLOs are wall-time promises here
                 self._scopes.append(runtime.open_scope(
-                    f"client{c}", weight=ws[c], max_inflight=caps[c]))
+                    f"client{c}", weight=ws[c], max_inflight=caps[c],
+                    deadline=dls[c]))
         self.slots = [_Slot() for _ in range(self.B)]
         self.cache = model.init_cache(self.B, max_len)
         self._tokens = np.zeros((self.B,), np.int32)
@@ -107,6 +123,11 @@ class ServeEngine:
         self.steps = 0
         self.completed: List[Request] = []
         self.stats = {"admitted": 0, "drained_msgs": 0, "callback_passes": 0}
+        # per-client admitted->finished latency in engine steps (the
+        # serving-layer unit: one step = one batched decode); recorded
+        # only on the engine-step thread, so plain histograms suffice
+        self._client_latency = [LogHistogram(1.0)
+                                for _ in range(num_clients)]
 
     # ------------------------------------------------------- client API
     def submit(self, req: Request, client_id: int = 0) -> Request:
@@ -114,6 +135,7 @@ class ServeEngine:
         into the client's own queue (the Submit Task Message analogue)."""
         if req.req_id is None:
             req.req_id = next(self._req_ids)
+        req.client_id = client_id
         self.client_queues[client_id].submit.push(req)
         return req
 
@@ -281,6 +303,9 @@ class ServeEngine:
                 if len(req.output) >= req.max_new_tokens or \
                         tok == self.eos_id or slot.pos + 1 >= self.max_len:
                     req.finished_step = self.steps
+                    if 0 <= req.client_id < len(self._client_latency):
+                        self._client_latency[req.client_id].record(
+                            req.finished_step - req.admitted_step)
                     req.done_event.set()
                     self.completed.append(req)
                     slot.req = None
@@ -296,6 +321,69 @@ class ServeEngine:
         for sc in self._scopes:
             n += sc.root.num_children_alive
         return n
+
+    # ----------------------------------------------------- observability
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON-friendly serving metrics: engine gauges plus one entry
+        per client — request-latency histogram (in engine steps) and,
+        for runtime-backed engines, the scope layer's admission
+        counters and SLO attainment (``client_deadlines=``)."""
+        clients: Dict[str, Any] = {}
+        for cid in range(len(self.client_queues)):
+            entry: Dict[str, Any] = {}
+            hist = self._client_latency[cid]
+            if hist.count:
+                entry["latency_steps"] = hist.snapshot()
+            if self._scopes:
+                sc = self._scopes[cid]
+                entry["admission"] = \
+                    self.runtime.placement.scope_admission(sc.scope_id)
+                slo = sc.slo_snapshot()
+                if slo is not None:
+                    entry["slo"] = slo
+            clients[f"client{cid}"] = entry
+        return {
+            "time_unit": "s",
+            "gauges": {"steps": self.steps,
+                       "admitted": self.stats["admitted"],
+                       "backlog": self._backlog(),
+                       "free_slots": self._free_slots()},
+            "clients": clients,
+        }
+
+    def metrics_text(self) -> str:
+        return prometheus_text(self.metrics_snapshot())
+
+    def serve_metrics(self, port: int = 0):
+        """Start a Prometheus scrape endpoint (text format 0.0.4) on
+        localhost in a daemon thread; ``port=0`` picks a free port.
+        Returns ``(server, port)`` — call ``server.shutdown()`` when
+        done. Every GET /metrics renders a fresh snapshot, so scrapes
+        observe the run in flight."""
+        import http.server
+        engine = self
+
+        class _Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):          # noqa: N802 (stdlib API name)
+                if self.path.split("?")[0] not in ("/metrics", "/"):
+                    self.send_error(404)
+                    return
+                body = engine.metrics_text().encode("utf-8")
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args):
+                pass                   # scrapes must not spam stderr
+
+        srv = http.server.ThreadingHTTPServer(("127.0.0.1", port),
+                                              _Handler)
+        threading.Thread(target=srv.serve_forever,
+                         name="metrics-scrape", daemon=True).start()
+        return srv, srv.server_address[1]
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         idle = 0
